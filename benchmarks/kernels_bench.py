@@ -1,0 +1,96 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-clock here measures the REFERENCE implementations (the jnp oracles,
+which XLA compiles natively) — a correctness-bench, plus arithmetic
+intensity derived per shape so the TPU roofline slot of each kernel is
+visible without hardware.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters
+
+
+def flash_rows():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for (b, h, kk, s, d) in [(1, 8, 2, 1024, 128), (1, 8, 8, 2048, 64)]:
+        q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+        k = jax.random.normal(key, (b, s, kk, d), jnp.float32)
+        v = jax.random.normal(key, (b, s, kk, d), jnp.float32)
+        fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+        dt = _time(fn, q, k, v)
+        flops = 4.0 * b * h * s * s * d  # qk + pv
+        bytes_ = (q.size + k.size + v.size + q.size) * 4
+        rows.append({
+            "name": f"flash_ref_b{b}h{h}s{s}d{d}",
+            "us_per_call": dt * 1e6,
+            "derived": f"AI={flops/bytes_:.0f}flop/B "
+                       f"tpu_pred={max(flops/PEAK_FLOPS, bytes_/HBM_BW)*1e6:.1f}us",
+        })
+    return rows
+
+
+def bucket_rows():
+    rows = []
+    key = jax.random.PRNGKey(1)
+    for (n, p, d) in [(65536, 160, 512), (16384, 16, 1024)]:
+        vals = jax.random.normal(key, (n, d), jnp.float32)
+        ids = jax.random.randint(key, (n,), 0, p)
+        fn = jax.jit(lambda v, i: ref.bucket_reduce_ref(v, i, p))
+        dt = _time(fn, vals, ids)
+        flops = 2.0 * n * p * d
+        rows.append({
+            "name": f"bucket_reduce_ref_n{n}p{p}d{d}",
+            "us_per_call": dt * 1e6,
+            "derived": f"tpu_pred={flops/PEAK_FLOPS*1e6:.1f}us",
+        })
+    return rows
+
+
+def gmm_rows():
+    rows = []
+    key = jax.random.PRNGKey(2)
+    for (e, t, d, f) in [(8, 1024, 512, 2048), (160, 128, 512, 1536)]:
+        x = jax.random.normal(key, (e, t, d), jnp.float32)
+        w = jax.random.normal(key, (e, d, f), jnp.float32)
+        fn = jax.jit(ref.grouped_matmul_ref)
+        dt = _time(fn, x, w)
+        flops = 2.0 * e * t * d * f
+        rows.append({
+            "name": f"gmm_ref_e{e}t{t}d{d}f{f}",
+            "us_per_call": dt * 1e6,
+            "derived": f"tpu_pred={flops/PEAK_FLOPS*1e6:.1f}us",
+        })
+    return rows
+
+
+def main():
+    rows = flash_rows() + bucket_rows() + gmm_rows()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

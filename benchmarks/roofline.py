@@ -1,0 +1,163 @@
+"""Roofline analysis per (arch x shape) from the compiled dry-run artifacts.
+
+Terms (per chip, per step; TPU v5e targets):
+  compute    = HLO_FLOPs / 197e12          (bf16 peak / chip)
+  memory     = HLO_bytes / 819e9           (HBM bandwidth / chip)
+  collective = collective_bytes / 50e9     (ICI link bandwidth)
+
+FLOPs/bytes/collective-bytes come from the loop-aware HLO cost model
+(repro.launch.hlo_cost) over the compiled module of the SINGLE-POD mesh —
+already per-device post-GSPMD quantities, so no further division by chips.
+
+MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (prefill) / 2*N_active*B
+(decode), with N_active excluding embedding tables and counting routed
+experts at top_k/n_experts utilization. The ratio MODEL_FLOPS/HLO_FLOPs
+shows how much compiled compute is "useful" (remat recompute, GSPMD
+padding and dispatch overhead push it below 1; for train, remat of one
+full forward makes ~0.75 the practical ceiling).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.layers import embedding_schema, unembed_schema
+from repro.common import param as pm
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+OUT = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def non_embedding_params(cfg: ModelConfig) -> int:
+    total = lm.n_params(cfg)
+    emb = pm.param_count(embedding_schema(cfg))
+    if not cfg.tie_embeddings:
+        emb += pm.param_count(unembed_schema(cfg))
+    return total - emb
+
+
+def active_params(cfg: ModelConfig) -> int:
+    n = non_embedding_params(cfg)
+    if not cfg.n_experts:
+        return n
+    # routed experts execute at top_k / n_experts utilization
+    n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+    routed = cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff * n_moe_layers
+    active_routed = cfg.top_k * 3 * cfg.d_model * cfg.moe_d_ff * n_moe_layers
+    return n - routed + active_routed
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Global 'useful' FLOPs per step (6ND convention)."""
+    shape = SHAPES[shape_name]
+    n = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    hlo = rec.get("hlo_analysis") or {}
+    flops = hlo.get("flops", 0.0)
+    hbm = hlo.get("hbm_bytes", 0.0)
+    coll = hlo.get("collective_total", 0.0)
+    cfg = get_config(rec["arch"])
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cfg, rec["shape"]) / CHIPS
+    ratio = (mf / flops) if flops else 0.0
+    # roofline fraction: useful-compute time over the bound term
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    fixes = {
+        "compute": "reduce remat recompute / pad waste (raise useful-FLOP ratio)",
+        "memory": "fuse/shrink materialized activations; shard saved residuals",
+        "collective": "reshard to cut all-gather/all-to-all volume; overlap with compute",
+    }
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": flops,
+        "useful_ratio": ratio,
+        "roofline_fraction": frac,
+        "hbm_gib": rec["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30,
+        "note": fixes[dominant],
+    }
+
+
+def load_rows(mesh: str = "pod16x16") -> list[dict]:
+    rows = []
+    base = ART / mesh
+    for arch in ARCHS:
+        for shape in SHAPES:
+            p = base / f"{arch}__{shape}.json"
+            if not p.exists():
+                continue
+            rec = json.loads(p.read_text())
+            if rec.get("status") == "skipped":
+                rows.append({"arch": arch, "shape": shape, "dominant": "n/a",
+                             "skipped": rec.get("reason", "")})
+                continue
+            row = analyze_cell(rec)
+            if row:
+                rows.append(row)
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | MODEL/HLO flops | roofline frac | note |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | n/a "
+                       f"(skipped) | — | — | {r['skipped'][:40]} |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} | {r['note']} |\n")
+    return "".join(out)
+
+
+def main():
+    rows = load_rows()
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "roofline.json").write_text(json.dumps(rows, indent=2))
+    md = to_markdown(rows)
+    (OUT / "roofline.md").write_text(md)
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_fraction")
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']},{r['shape']},,,,skipped,,")
+        else:
+            print(f"{r['arch']},{r['shape']},{r['compute_s']:.5f},"
+                  f"{r['memory_s']:.5f},{r['collective_s']:.5f},"
+                  f"{r['dominant']},{r['useful_ratio']:.3f},"
+                  f"{r['roofline_fraction']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness entrypoint: one section per paper table/figure plus
+the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Emits ``name,us_per_call,derived`` CSV lines per section:
+  * table1_*       -- paper Table I (Q0-Q6 latency + cost, 3 conditions)
+  * shuffle_*      -- SQS vs S3 shuffle (paper SectionV/VI comparison)
+  * kernel rows    -- Pallas-kernel reference benches + TPU predictions
+  * roofline_*     -- per-(arch x shape) dominant term from the dry-run
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import kernels_bench, shuffle_backends, table1_queries
+    print("name,us_per_call,derived")
+
+    results, agreement = table1_queries.run()
+    for r in results:
+        print(f"table1_{r['query']}_{r['backend']},"
+              f"{r['latency_s'] * 1e6:.0f},cost_usd={r['cost_usd']:.6f}")
+    print(f"table1_agreement,0,{agreement}")
+
+    rows, agree = shuffle_backends.run()
+    for r in rows:
+        print(f"shuffle_{r['backend']},{r['wall_s'] * 1e6:.0f},"
+              f"modeled_service_s={r['modeled_service_s']}"
+              f";cost={r['shuffle_cost_usd']}")
+    print(f"shuffle_agreement,0,{agree}")
+
+    kernels_bench.main()  # prints its own rows
+
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_rows()
+        for r in rows:
+            if "skipped" in r:
+                continue
+            dom_us = max(r["compute_s"], r["memory_s"],
+                         r["collective_s"]) * 1e6
+            print(f"roofline_{r['arch']}_{r['shape']},{dom_us:.0f},"
+                  f"dominant={r['dominant']}"
+                  f";frac={r['roofline_fraction']:.3f}")
+    except Exception as e:  # artifacts absent until the dry-run has run
+        print(f"roofline_unavailable,0,{type(e).__name__}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

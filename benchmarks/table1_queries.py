@@ -1,0 +1,152 @@
+"""Paper Table I reproduction: Q0-Q6 over the (synthetic) NYC-taxi data,
+three conditions — Flint (serverless, SQS shuffle), PySpark-on-cluster
+(record pipe overhead), Spark-on-cluster — reporting latency and estimated
+USD per query from the 2018 price model.
+
+Schema (repro.data.synthetic.taxi_csv):
+  0 pickup_dt, 1 dropoff_dt, 2 dropoff_lon, 3 dropoff_lat, 4 trip_miles,
+  5 payment_type, 6 tip, 7 total, 8 precip_mm, 9 taxi_color
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core import FlintConfig, FlintContext
+from repro.data.synthetic import CITIGROUP, GOLDMAN, taxi_csv
+
+N_ROWS = int(os.environ.get("TAXI_ROWS", "40000"))
+N_PARTS = 8
+TRIALS = int(os.environ.get("TAXI_TRIALS", "1"))
+
+
+def _inside(box):
+    def f(row):
+        try:
+            lon, lat = float(row[2]), float(row[3])
+        except ValueError:
+            return False
+        return box[0] <= lon <= box[2] and box[1] <= lat <= box[3]
+    return f
+
+
+def _hour(ts: str) -> int:
+    return int(ts[11:13])
+
+
+def _month(ts: str) -> int:
+    return int(ts[5:7])
+
+
+def q0(ctx):  # line count: raw read throughput
+    return ctx.textFile("taxi.csv", N_PARTS).count()
+
+
+def q1(ctx):  # Goldman drop-offs by hour
+    return (ctx.textFile("taxi.csv", N_PARTS)
+            .map(lambda x: x.split(","))
+            .filter(_inside(GOLDMAN))
+            .map(lambda x: (_hour(x[1]), 1))
+            .reduceByKey(lambda a, b: a + b, 8)
+            .collect())
+
+
+def q2(ctx):  # Citigroup drop-offs by hour
+    return (ctx.textFile("taxi.csv", N_PARTS)
+            .map(lambda x: x.split(","))
+            .filter(_inside(CITIGROUP))
+            .map(lambda x: (_hour(x[1]), 1))
+            .reduceByKey(lambda a, b: a + b, 8)
+            .collect())
+
+
+def q3(ctx):  # generous tippers at Goldman
+    g = _inside(GOLDMAN)
+    return (ctx.textFile("taxi.csv", N_PARTS)
+            .map(lambda x: x.split(","))
+            .filter(lambda x: g(x) and float(x[6]) > 10.0)
+            .map(lambda x: (x[0], float(x[6])))
+            .collect())
+
+
+def q4(ctx):  # credit-card share by month
+    rows = (ctx.textFile("taxi.csv", N_PARTS)
+            .map(lambda x: x.split(","))
+            .map(lambda x: ((_month(x[0]), x[5] == "credit"), 1))
+            .reduceByKey(lambda a, b: a + b, 12)
+            .collect())
+    share = {}
+    for (m, credit), n in rows:
+        tot = share.setdefault(m, [0, 0])
+        tot[0] += n
+        if credit:
+            tot[1] += n
+    return sorted((m, v[1] / v[0]) for m, v in share.items())
+
+
+def q5(ctx):  # yellow vs green by month
+    return sorted(ctx.textFile("taxi.csv", N_PARTS)
+                  .map(lambda x: x.split(","))
+                  .map(lambda x: ((_month(x[0]), x[9]), 1))
+                  .reduceByKey(lambda a, b: a + b, 12)
+                  .collect())
+
+
+def q6(ctx):  # rides per precipitation bucket
+    return sorted(ctx.textFile("taxi.csv", N_PARTS)
+                  .map(lambda x: x.split(","))
+                  .map(lambda x: (int(float(x[8])), 1))
+                  .reduceByKey(lambda a, b: a + b, 16)
+                  .collect())
+
+
+QUERIES = [q0, q1, q2, q3, q4, q5, q6]
+
+
+def run(rows=None, trials=TRIALS):
+    data = taxi_csv(rows or N_ROWS, seed=11)
+    results = []
+    answers = {}
+    for backend in ("flint", "pyspark", "cluster"):
+        for qi, q in enumerate(QUERIES):
+            best = None
+            for _ in range(trials):
+                ctx = FlintContext(backend, FlintConfig(concurrency=16))
+                ctx.upload("taxi.csv", data)
+                t0 = time.monotonic()
+                ans = q(ctx)
+                dt = time.monotonic() - t0
+                rep = ctx.cost_report()
+                cost = rep["total_usd"]
+                if backend in ("cluster", "pyspark"):
+                    cost = rep.get("cluster_usd", cost)
+                if best is None or dt < best[0]:
+                    best = (dt, cost)
+            key = (qi, repr_answer(ans))
+            answers.setdefault(qi, set()).add(key[1])
+            results.append({"query": f"Q{qi}", "backend": backend,
+                            "latency_s": round(best[0], 4),
+                            "cost_usd": best[1]})
+    # all three backends must agree on every query's answer
+    agreement = all(len(v) == 1 for v in answers.values())
+    return results, agreement
+
+
+def repr_answer(ans):
+    if isinstance(ans, list):
+        return repr(sorted(ans))
+    return repr(ans)
+
+
+def main():
+    results, agreement = run()
+    print("query,backend,latency_s,cost_usd")
+    for r in results:
+        print(f"{r['query']},{r['backend']},{r['latency_s']},{r['cost_usd']:.6f}")
+    print(f"# answers agree across backends: {agreement}")
+    return results, agreement
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the paper's user experience — PySpark-style analytics with
+zero idle cost, on the serverless Flint engine.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import operator
+
+from repro.core import FlintConfig, FlintContext
+from repro.data.synthetic import GOLDMAN, taxi_csv
+
+
+def main():
+    # "S3 bucket" with ~10k taxi trips
+    ctx = FlintContext("flint", FlintConfig(concurrency=16), verbose=True)
+    ctx.upload("taxi.csv", taxi_csv(10_000, seed=42))
+
+    # the paper's Q1: taxi drop-offs at Goldman Sachs HQ, by hour —
+    # exactly the PySpark the user would write, UDFs and all
+    def inside(row, box=GOLDMAN):
+        try:
+            lon, lat = float(row[2]), float(row[3])
+        except ValueError:
+            return False
+        return box[0] <= lon <= box[2] and box[1] <= lat <= box[3]
+
+    def get_hour(ts):
+        return int(ts[11:13])
+
+    arr = (ctx.textFile("taxi.csv", 8)
+           .map(lambda x: x.split(","))
+           .filter(inside)
+           .map(lambda x: (get_hour(x[1]), 1))
+           .reduceByKey(operator.add, 8)
+           .collect())
+
+    print("\ndrop-offs at Goldman Sachs by hour:")
+    for hour, n in sorted(arr):
+        print(f"  {hour:02d}:00  {'#' * n} {n}")
+
+    print("\npay-as-you-go bill for this query:")
+    for k, v in ctx.cost_report().items():
+        print(f"  {k:20s} {v}")
+
+
+if __name__ == "__main__":
+    main()

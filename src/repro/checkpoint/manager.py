@@ -1,0 +1,152 @@
+"""Sharded, atomically-committed, mesh-elastic checkpointing.
+
+This is the training-plane realization of Flint's executor chaining (C3):
+all state an executor needs to continue lives OUTSIDE the executor. A
+checkpoint is a directory of flat-key .npy blobs plus a manifest committed
+by atomic rename — a torn write can never be mistaken for a checkpoint.
+
+Restore is mesh-shape-agnostic (elastic): arrays are loaded on host and
+device_put against whatever sharding the *new* mesh prescribes, so the
+same checkpoint resumes on 1 device or 512.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(directory: str | os.PathLike, step: int, tree,
+                    *, keep: int = 3) -> str:
+    """Write `tree` under directory/step_<n>; atomic via tmp+rename."""
+    base = pathlib.Path(directory)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:08d}"
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=base))
+    flat = _flatten(tree)
+    manifest = {"step": step, "keys": {}}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"arr_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["keys"][key] = {"file": fname, "shape": list(arr.shape),
+                                 "dtype": str(arr.dtype)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic commit
+    _gc(base, keep)
+    return str(final)
+
+
+def _gc(base: pathlib.Path, keep: int):
+    steps = sorted(p for p in base.glob("step_*") if p.is_dir())
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+    for p in base.glob(".tmp_ckpt_*"):
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(directory: str | os.PathLike) -> int | None:
+    base = pathlib.Path(directory)
+    if not base.exists():
+        return None
+    steps = sorted(base.glob("step_*"))
+    for cand in reversed(steps):
+        if (cand / "manifest.json").exists():
+            return int(cand.name.split("_")[1])
+    return None
+
+
+def restore_checkpoint(directory: str | os.PathLike, step: int, like,
+                       shardings=None):
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). `shardings`: optional matching tree of shardings for
+    elastic placement onto the current mesh."""
+    base = pathlib.Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((base / "manifest.json").read_text())
+    flat_like = _flatten(like)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    missing = set(flat_like) - set(manifest["keys"])
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+
+    restored = {}
+    for key, leaf in flat_like.items():
+        meta = manifest["keys"][key]
+        arr = np.load(base / meta["file"])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {leaf.shape}")
+        sh = flat_shard.get(key)
+        restored[key] = (jax.device_put(arr, sh) if sh is not None
+                         else jax.numpy.asarray(arr, dtype=leaf.dtype))
+    # rebuild the tree in `like`'s structure
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    keys_in_order = [
+        _SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                  for p in path)
+        for path, _ in leaves_with_path[0]]
+    return jax.tree_util.tree_unflatten(
+        leaves_with_path[1], [restored[k] for k in keys_in_order])
+
+
+class CheckpointManager:
+    """Async wrapper: snapshot to host in the caller, write in a thread —
+    the training loop never blocks on the filesystem."""
+
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.directory = str(directory)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.saved_steps: list[int] = []
+
+    def save(self, step: int, tree, blocking: bool = False):
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        self.wait()
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, keep=self.keep)
+            self.saved_steps.append(step)
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def latest(self) -> int | None:
+        self.wait()
+        return latest_step(self.directory)
+
+    def restore(self, like, step: int | None = None, shardings=None):
+        self.wait()
+        step = step if step is not None else self.latest()
+        if step is None:
+            return None
+        return restore_checkpoint(self.directory, step, like, shardings)

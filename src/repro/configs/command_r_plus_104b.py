@@ -1,0 +1,21 @@
+"""command-r-plus-104b [dense] — GQA kv=8, no bias; largest dense config
+(FSDP on the 'data' axis is essential to fit optimizer state).
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000
+[hf:CohereForAI/c4ai-command-r-plus]. Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab_size=256000,
+    rope_theta=75_000_000.0,
+)

@@ -1,0 +1,28 @@
+"""seamless-m4t-large-v2 [audio] — encoder-decoder; the audio frontend is a
+STUB per assignment (input_specs supplies precomputed frame embeddings that
+feed the encoder directly).
+
+24L d_model=1024 16H (kv=16) d_ff=8192 vocab=256206 [arXiv:2308.11596].
+Decode shapes lower the DECODER step (self-attn KV cache of seq_len +
+fixed cross-attn KV over the encoder memory). Full attention -> long_500k
+skipped.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,
+    encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    frontend="audio",
+)
+
+# encoder memory length used by decode-shape cells (frames after the stub
+# frontend's downsampling); train/prefill shapes drive enc len = seq_len.
+DECODE_ENC_LEN = 4096

@@ -1,0 +1,119 @@
+"""Flint core — serverless analytics engine (the paper's contribution).
+
+Public API mirrors the PySpark surface the paper targets:
+
+    from repro.core import FlintContext
+    ctx = FlintContext()                      # serverless backend
+    ctx.upload("taxi.csv", data_bytes)        # stand-in for S3
+    arr = (ctx.textFile("taxi.csv", 32)
+              .map(lambda x: x.split(','))
+              .filter(lambda x: inside(x, goldman))
+              .map(lambda x: (get_hour(x[2]), 1))
+              .reduceByKey(lambda a, b: a + b, 30)
+              .collect())
+    print(ctx.cost_report())                  # pure pay-as-you-go USD
+
+Backends: "flint" (Lambda+SQS simulation, pay-per-use), "cluster"
+(provisioned Spark, per-second billing), "pyspark" (cluster + the
+JVM<->Python record pipe overhead).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.costs import CostLedger, cluster_cost
+from repro.core.dag import build_plan
+from repro.core.executors import FlintConfig
+from repro.core.queues import ObjectStoreSim
+from repro.core.rdd import RDD, ParallelCollection, Source
+from repro.core.cluster import ClusterScheduler
+from repro.core.scheduler import FlintScheduler, StageFailure
+
+
+class FlintContext:
+    def __init__(self, backend: str = "flint",
+                 config: FlintConfig | None = None, *,
+                 fault_plan: dict | None = None,
+                 elastic_retries: int = 2,
+                 store: ObjectStoreSim | None = None,
+                 verbose: bool = False):
+        self.config = config or FlintConfig()
+        self.backend_name = backend
+        self.ledger = CostLedger()
+        self.store = store or ObjectStoreSim(self.ledger)
+        self.fault_plan = fault_plan or {}
+        self.elastic_retries = elastic_retries
+        self.verbose = verbose
+        self.partition_multiplier = 1
+        self.last_scheduler = None
+        self._collection_counter = 0
+
+    # -------------------------------------------------------------- data
+    def upload(self, key: str, data: bytes):
+        self.store.put(key, data)
+
+    def textFile(self, key: str, numPartitions: int = 8) -> RDD:
+        return Source(self, key, numPartitions)
+
+    def parallelize(self, data: list, numPartitions: int = 8) -> RDD:
+        key = f"_collections/{self._collection_counter}"
+        self._collection_counter += 1
+        n = len(data)
+        step = max(1, -(-n // numPartitions))
+        parts = [data[i * step:(i + 1) * step] for i in range(numPartitions)]
+        while len(parts) < numPartitions:
+            parts.append([])
+        for i, p in enumerate(parts):
+            self.store.put_obj(f"{key}/{i}", p)
+        return ParallelCollection(self, key, numPartitions)
+
+    # --------------------------------------------------------- execution
+    def _make_scheduler(self):
+        if self.backend_name == "flint":
+            return FlintScheduler(self.config, self.ledger, self.store,
+                                  fault_plan=self.fault_plan,
+                                  verbose=self.verbose)
+        if self.backend_name == "cluster":
+            return ClusterScheduler(self.config, self.ledger, self.store)
+        if self.backend_name == "pyspark":
+            return ClusterScheduler(self.config, self.ledger, self.store,
+                                    pipe_overhead=True)
+        raise ValueError(f"unknown backend {self.backend_name!r}")
+
+    def run_action(self, rdd: RDD, action: str,
+                   save_prefix: str | None = None) -> Any:
+        mult = self.partition_multiplier
+        for attempt in range(self.elastic_retries + 1):
+            plan = build_plan(rdd, action, save_prefix,
+                              partition_multiplier=mult)
+            sched = self._make_scheduler()
+            self.last_scheduler = sched
+            try:
+                return sched.run(plan)
+            except StageFailure as e:
+                if (e.error_type == "MemoryCapExceeded"
+                        and attempt < self.elastic_retries):
+                    # the paper's elasticity move: more partitions, re-run
+                    mult *= 2
+                    self.partition_multiplier = mult
+                    if self.verbose:
+                        print(f"[flint] memory cap hit -> partitions x{mult}")
+                    continue
+                raise
+            finally:
+                sched.shutdown()
+        raise AssertionError("unreachable")
+
+    # ------------------------------------------------------------- costs
+    def cost_report(self) -> dict:
+        rep = self.ledger.report()
+        if self.backend_name in ("cluster", "pyspark") and self.last_scheduler:
+            wall = getattr(self.last_scheduler, "wall_seconds", 0.0)
+            rep["cluster_usd"] = round(cluster_cost(wall), 6)
+            rep["total_usd"] = rep["cluster_usd"]
+        return rep
+
+
+__all__ = ["FlintContext", "FlintConfig", "FlintScheduler", "ClusterScheduler",
+           "CostLedger", "StageFailure", "build_plan"]

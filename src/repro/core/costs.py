@@ -1,0 +1,125 @@
+"""Pay-as-you-go cost model (paper §II, Table I).
+
+2018 AWS price sheet constants (us-east-1), the ones Flint's evaluation
+used: Lambda GB-seconds + per-request, SQS per-request (each 64 KiB chunk
+of a batch send/receive bills as one request), S3 GET/PUT, and the
+m4.2xlarge hourly rate for the cluster baseline (11 instances = driver +
+10 workers, 80 vCores).
+
+Everything that moves in the simulated services reports here, so the
+benchmark can print Table I's cost columns from actual usage — zero idle
+cost by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+
+LAMBDA_GB_SECOND = 0.00001667
+LAMBDA_PER_REQUEST = 0.20 / 1e6
+LAMBDA_MAX_MEMORY_MB = 3008
+LAMBDA_TIME_LIMIT_S = 300.0
+LAMBDA_PAYLOAD_LIMIT = 6 * 2**20  # 6 MB request payload cap
+
+SQS_PER_REQUEST = 0.40 / 1e6
+SQS_BILLING_CHUNK = 64 * 2**10  # every 64 KiB of a request bills separately
+SQS_MESSAGE_LIMIT = 256 * 2**10
+SQS_BATCH_MESSAGES = 10
+
+S3_PER_GET = 0.0004 / 1e3
+S3_PER_PUT = 0.005 / 1e3
+
+M4_2XLARGE_HOURLY = 0.40
+CLUSTER_INSTANCES = 11  # 1 driver + 10 workers (paper's Databricks cluster)
+
+
+def cluster_cost(wall_seconds: float, instances: int = CLUSTER_INSTANCES) -> float:
+    """Per-second billing of a provisioned cluster — accrues while idle,
+    which is exactly what the paper's pay-as-you-go goal removes."""
+    return wall_seconds * instances * M4_2XLARGE_HOURLY / 3600.0
+
+
+def sqs_request_units(payload_bytes: int) -> int:
+    return max(1, math.ceil(payload_bytes / SQS_BILLING_CHUNK))
+
+
+@dataclasses.dataclass
+class CostLedger:
+    """Thread-safe usage accumulator shared by the simulated services."""
+
+    lambda_gb_seconds: float = 0.0
+    lambda_requests: int = 0
+    sqs_requests: int = 0
+    s3_gets: int = 0
+    s3_puts: int = 0
+    bytes_to_sqs: int = 0
+    bytes_from_sqs: int = 0
+    bytes_from_s3: int = 0
+    bytes_to_s3: int = 0
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def add_lambda(self, duration_s: float, memory_mb: int):
+        with self._lock:
+            self.lambda_requests += 1
+            # AWS billed per 100ms slices in 2018
+            slices = math.ceil(duration_s / 0.1)
+            self.lambda_gb_seconds += slices * 0.1 * (memory_mb / 1024.0)
+
+    def add_sqs(self, payload_bytes: int, receive: bool = False):
+        with self._lock:
+            self.sqs_requests += sqs_request_units(payload_bytes)
+            if receive:
+                self.bytes_from_sqs += payload_bytes
+            else:
+                self.bytes_to_sqs += payload_bytes
+
+    def add_sqs_control(self):
+        """Queue create/delete/empty-receive — one billable request."""
+        with self._lock:
+            self.sqs_requests += 1
+
+    def add_s3(self, nbytes: int, put: bool = False):
+        with self._lock:
+            if put:
+                self.s3_puts += 1
+                self.bytes_to_s3 += nbytes
+            else:
+                self.s3_gets += 1
+                self.bytes_from_s3 += nbytes
+
+    # ------------------------------------------------------------- report
+    @property
+    def lambda_usd(self) -> float:
+        return (self.lambda_gb_seconds * LAMBDA_GB_SECOND
+                + self.lambda_requests * LAMBDA_PER_REQUEST)
+
+    @property
+    def sqs_usd(self) -> float:
+        return self.sqs_requests * SQS_PER_REQUEST
+
+    @property
+    def s3_usd(self) -> float:
+        return self.s3_gets * S3_PER_GET + self.s3_puts * S3_PER_PUT
+
+    @property
+    def total_usd(self) -> float:
+        return self.lambda_usd + self.sqs_usd + self.s3_usd
+
+    def report(self) -> dict:
+        return {
+            "lambda_usd": round(self.lambda_usd, 6),
+            "sqs_usd": round(self.sqs_usd, 6),
+            "s3_usd": round(self.s3_usd, 6),
+            "total_usd": round(self.total_usd, 6),
+            "lambda_gb_seconds": round(self.lambda_gb_seconds, 3),
+            "lambda_requests": self.lambda_requests,
+            "sqs_requests": self.sqs_requests,
+            "s3_gets": self.s3_gets,
+            "s3_puts": self.s3_puts,
+            "bytes_to_sqs": self.bytes_to_sqs,
+            "bytes_from_sqs": self.bytes_from_sqs,
+        }

@@ -1,0 +1,158 @@
+"""DAG scheduler: cut the RDD lineage into stages at wide dependencies.
+
+Faithful to the paper's division of labor: this layer produces the physical
+plan (stages of tasks + shuffle specs); the pluggable backend
+(core.scheduler.FlintScheduler or core.cluster.ClusterScheduler) only ever
+sees stages and tasks.
+
+A TaskDef is fully self-describing: an input spec (source byte-range,
+driver collection partition, or shuffle read) plus the chain of narrow ops
+to apply. Functions are shipped with core.serde (mini-cloudpickle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+from repro.core import rdd as R
+
+_next_shuffle = itertools.count()
+
+
+@dataclasses.dataclass
+class SourceInput:
+    key: str
+    start: int
+    end: int
+    size: int
+
+
+@dataclasses.dataclass
+class CollectionInput:
+    key: str
+    index: int
+
+
+@dataclasses.dataclass
+class ShuffleRead:
+    """One or two (join) shuffle inputs feeding a task."""
+    parts: list  # list of (shuffle_id, mode) — mode: agg|group|join|repart
+    partition: int
+    combine_fn: Any = None  # serialized via serde at task-build time
+
+
+@dataclasses.dataclass
+class ShuffleWrite:
+    shuffle_id: int
+    nparts: int
+    mode: str  # agg | group | join | repart
+    combine_fn: Any = None  # map-side combine (reduceByKey)
+    key_side: str = ""  # join: 'left' | 'right'
+
+
+@dataclasses.dataclass
+class TaskDef:
+    stage_id: int
+    index: int
+    input: Any  # SourceInput | CollectionInput | ShuffleRead
+    ops: list  # [(kind, fn), ...]
+    write: ShuffleWrite | None  # None => result/save stage
+
+
+@dataclasses.dataclass
+class StagePlan:
+    id: int
+    tasks: list
+    write: ShuffleWrite | None
+    action: str | None = None  # set on the final stage
+    save_prefix: str | None = None
+
+
+class _Chain:
+    """A stage under construction: per-task (input, ops)."""
+
+    def __init__(self, task_inputs, deps):
+        self.task_inputs = task_inputs  # list of input specs
+        self.ops_per_task = [[] for _ in task_inputs]
+        self.deps = deps  # upstream StagePlans
+
+    def add_op(self, kind, fn):
+        for ops in self.ops_per_task:
+            ops.append((kind, fn))
+
+
+def _visit(node, stages: list, mult: int) -> _Chain:
+    """Returns the open chain for `node`; appends completed upstream stages
+    to `stages` in topological order. ``mult`` scales wide-op partition
+    counts — the paper's elasticity answer to the executor memory cap."""
+    if isinstance(node, R.Source):
+        size = node.ctx.store.size(node.key)
+        step = max(1, -(-size // node.nparts))
+        inputs = [SourceInput(node.key, i * step, min(size, (i + 1) * step), size)
+                  for i in range(node.nparts)]
+        return _Chain(inputs, [])
+    if isinstance(node, R.ParallelCollection):
+        return _Chain([CollectionInput(node.key, i) for i in range(node.nparts)], [])
+    if isinstance(node, R.Narrow):
+        chain = _visit(node.parent, stages, mult)
+        chain.add_op(node.kind, node.fn)
+        return chain
+    if isinstance(node, R.Union):
+        ca = _visit(node.a, stages, mult)
+        cb = _visit(node.b, stages, mult)
+        merged = _Chain(ca.task_inputs + cb.task_inputs, ca.deps + cb.deps)
+        merged.ops_per_task = ca.ops_per_task + cb.ops_per_task
+        return merged
+    if isinstance(node, R.ShuffleAgg):
+        mode = "agg" if node.map_side_combine else "group"
+        nparts = node.nparts * mult
+        sid = _close_stage(node.parent, stages, mult,
+                           ShuffleWrite(next(_next_shuffle), nparts, mode,
+                                        combine_fn=node.fn))
+        inputs = [ShuffleRead([(sid, mode)], p, combine_fn=node.fn)
+                  for p in range(nparts)]
+        return _Chain(inputs, [stages[-1]])
+    if isinstance(node, R.Repartition):
+        nparts = node.nparts * mult
+        sid = _close_stage(node.parent, stages, mult,
+                           ShuffleWrite(next(_next_shuffle), nparts, "repart"))
+        inputs = [ShuffleRead([(sid, "repart")], p) for p in range(nparts)]
+        return _Chain(inputs, [stages[-1]])
+    if isinstance(node, R.Join):
+        nparts = node.nparts * mult
+        sid_l = _close_stage(node.left, stages, mult,
+                             ShuffleWrite(next(_next_shuffle), nparts,
+                                          "join", key_side="left"))
+        sid_r = _close_stage(node.right, stages, mult,
+                             ShuffleWrite(next(_next_shuffle), nparts,
+                                          "join", key_side="right"))
+        inputs = [ShuffleRead([(sid_l, "join"), (sid_r, "join")], p)
+                  for p in range(nparts)]
+        return _Chain(inputs, [])
+    raise TypeError(f"unknown RDD node {type(node).__name__}")
+
+
+def _close_stage(node, stages: list, mult: int, write: ShuffleWrite) -> int:
+    chain = _visit(node, stages, mult)
+    sid = write.shuffle_id
+    stage_id = len(stages)
+    tasks = [TaskDef(stage_id, i, inp, ops, write)
+             for i, (inp, ops) in enumerate(
+                 zip(chain.task_inputs, chain.ops_per_task))]
+    stages.append(StagePlan(stage_id, tasks, write))
+    return sid
+
+
+def build_plan(node, action: str, save_prefix: str | None = None,
+               partition_multiplier: int = 1) -> list[StagePlan]:
+    stages: list[StagePlan] = []
+    chain = _visit(node, stages, partition_multiplier)
+    stage_id = len(stages)
+    tasks = [TaskDef(stage_id, i, inp, ops, None)
+             for i, (inp, ops) in enumerate(
+                 zip(chain.task_inputs, chain.ops_per_task))]
+    stages.append(StagePlan(stage_id, tasks, None, action=action,
+                            save_prefix=save_prefix))
+    return stages

@@ -1,0 +1,501 @@
+"""The Flint executor — a process inside a (simulated) Lambda invocation —
+plus the Lambda runtime simulation itself.
+
+Semantics preserved from the paper (§III-A/B):
+  * one task per invocation; executors are stateless between invocations;
+  * input iterator reads an S3 byte range (stage 0) or drains SQS queues
+    (intermediate stages), deduplicating at-least-once deliveries by
+    (producer task, sequence id);
+  * outputs are hash-partitioned, buffered in memory, and FLUSHED to the
+    per-partition queues when the buffer grows past its cap (the 3008 MB
+    limit made concrete as a record-count proxy);
+  * executor CHAINING: when the invocation lease is nearly exhausted the
+    executor stops ingesting, flushes, and returns a continuation cursor
+    that the scheduler re-invokes on a warm container (map-side combine
+    partials are safe to flush early because combiners are associative);
+  * responses above the payload cap spill to the object store (6 MB cap,
+    both directions).
+
+Failure injection + the record-count lease hook make chaining, retry and
+straggler behavior deterministic in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import threading
+import time
+from typing import Any
+
+from repro.core import serde
+from repro.core.costs import (LAMBDA_PAYLOAD_LIMIT, CostLedger)
+from repro.core.dag import CollectionInput, ShuffleRead, SourceInput, TaskDef
+from repro.core.queues import (Message, ObjectStoreSim, SQSSim, pack_records,
+                               unpack_records)
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+class MemoryCapExceeded(RuntimeError):
+    """Aggregation state outgrew the executor memory cap — the paper's
+    answer is elasticity: raise the partition count and re-run."""
+
+
+@dataclasses.dataclass
+class FlintConfig:
+    memory_mb: int = 3008
+    time_limit_s: float = 300.0
+    # intermediate-data transport: "sqs" (the paper's choice) or "s3"
+    # (Qubole's choice, paper SSV/SVI flag the comparison as open work)
+    shuffle_backend: str = "sqs"
+    lease_safety: float = 0.8  # stop ingesting at this fraction of the lease
+    concurrency: int = 80
+    cold_start_s: float = 0.4
+    warm_start_s: float = 0.01
+    start_latency_scale: float = 0.0  # 0 => don't actually sleep in tests
+    flush_records: int = 20_000  # shuffle buffer cap (memory proxy)
+    agg_memory_records: int = 2_000_000  # consumer-side aggregation cap
+    max_records_per_invoke: int = 0  # test hook: deterministic chaining
+    max_task_retries: int = 3
+    speculation_factor: float = 4.0  # straggler duplicate threshold
+    speculation_min_done: int = 4
+    drain_timeout_s: float = 30.0
+    duplicate_prob: float = 0.0  # SQS at-least-once duplication rate
+    chunk_fetch_bytes: int = 4 * 2**20
+
+
+def queue_name(shuffle_id: int, partition: int) -> str:
+    return f"shuffle{shuffle_id}-p{partition}"
+
+
+# --------------------------------------------------------------- payloads
+
+
+def serialize_task(task: TaskDef, attempt: int, extra: dict | None = None
+                   ) -> dict:
+    ops = [(kind, serde.dumps_fn(fn)) for kind, fn in task.ops]
+    inp = task.input
+    if isinstance(inp, ShuffleRead) and inp.combine_fn is not None:
+        inp = dataclasses.replace(inp, combine_fn=serde.dumps_fn(inp.combine_fn))
+    write = task.write
+    if write is not None and write.combine_fn is not None:
+        write = dataclasses.replace(write,
+                                    combine_fn=serde.dumps_fn(write.combine_fn))
+    return {"stage": task.stage_id, "index": task.index, "input": inp,
+            "ops": ops, "write": write, "attempt": attempt,
+            **(extra or {})}
+
+
+# ------------------------------------------------------------ the Lambda
+
+
+class LambdaSim:
+    """Invocation environment: containers (cold/warm), leases, payload caps,
+    per-invocation billing."""
+
+    def __init__(self, cfg: FlintConfig, ledger: CostLedger,
+                 store: ObjectStoreSim, sqs: SQSSim):
+        self.cfg = cfg
+        self.ledger = ledger
+        self.store = store
+        self.sqs = sqs
+        self._warm = 0
+        self._lock = threading.Lock()
+        self.invocations = 0
+        self.cold_starts = 0
+
+    def _acquire_container(self) -> bool:
+        """Returns True on a cold start."""
+        with self._lock:
+            self.invocations += 1
+            if self._warm > 0:
+                self._warm -= 1
+                return False
+            self.cold_starts += 1
+            return True
+
+    def _release_container(self):
+        with self._lock:
+            self._warm += 1
+
+    def invoke(self, payload: dict) -> dict:
+        blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+        if len(blob) > LAMBDA_PAYLOAD_LIMIT:
+            # paper §III-B: split/spill oversized payloads through S3
+            key = f"_payload/{payload['stage']}/{payload['index']}/{time.monotonic_ns()}"
+            self.store.put(key, blob)
+            payload = {"spilled": key}
+        cold = self._acquire_container()
+        start = (self.cfg.cold_start_s if cold else self.cfg.warm_start_s)
+        if self.cfg.start_latency_scale > 0:
+            time.sleep(start * self.cfg.start_latency_scale)
+        t0 = time.monotonic()
+        try:
+            if "spilled" in payload:
+                payload = pickle.loads(self.store.get(payload["spilled"]))
+            resp = executor_main(payload, self)
+        except (InjectedFailure, MemoryCapExceeded) as e:
+            resp = {"status": "error", "error_type": type(e).__name__,
+                    "error": str(e)}
+        finally:
+            duration = time.monotonic() - t0 + start
+            self.ledger.add_lambda(duration, self.cfg.memory_mb)
+            self._release_container()
+        resp.setdefault("duration_s", time.monotonic() - t0)
+        blob = pickle.dumps(resp, protocol=pickle.HIGHEST_PROTOCOL)
+        if len(blob) > LAMBDA_PAYLOAD_LIMIT:
+            key = f"_result/{time.monotonic_ns()}"
+            self.store.put(key, blob)
+            resp = {"status": resp.get("status", "ok"), "spilled": key,
+                    "duration_s": resp["duration_s"]}
+        return resp
+
+
+# ------------------------------------------------------ executor internals
+
+
+class _Lease:
+    def __init__(self, cfg: FlintConfig):
+        self.deadline = time.monotonic() + cfg.time_limit_s * cfg.lease_safety
+        self.max_records = cfg.max_records_per_invoke or None
+        self.records = 0
+
+    def consumed(self, n: int = 1) -> bool:
+        """Count ingested records; True when the lease is exhausted."""
+        self.records += n
+        if self.max_records is not None and self.records >= self.max_records:
+            return True
+        if (self.records & 0xFF) == 0 and time.monotonic() > self.deadline:
+            return True
+        return False
+
+
+class _SourceReader:
+    """Line records over a byte range with Hadoop LineRecordReader
+    semantics: a non-first split always skips its first (possibly partial)
+    line, and every split reads lines whose start offset is <= end — so the
+    line starting exactly at a boundary belongs to the EARLIER split.
+    ``consumed_until`` is the absolute offset of the first unconsumed line
+    (the chaining cursor)."""
+
+    def __init__(self, inp: SourceInput, store: ObjectStoreSim,
+                 cfg: FlintConfig, resume_offset: int | None):
+        self.inp = inp
+        self.store = store
+        self.cfg = cfg
+        self.offset = resume_offset  # absolute byte offset to resume at
+        self.consumed_until = resume_offset if resume_offset is not None \
+            else inp.start
+
+    def _find_line_start(self, pos: int) -> int:
+        """First line start at or after pos (skipping a partial line)."""
+        scan = pos
+        while scan < self.inp.size:
+            probe = self.store.get(self.inp.key, scan,
+                                   min(self.inp.size,
+                                       scan + self.cfg.chunk_fetch_bytes))
+            nl = probe.find(b"\n")
+            if nl >= 0:
+                return scan + nl + 1
+            scan += len(probe)
+        return self.inp.size
+
+    def __iter__(self):
+        inp, store, chunk = self.inp, self.store, self.cfg.chunk_fetch_bytes
+        if self.offset is not None:
+            line_start = self.offset
+        elif inp.start == 0:
+            line_start = 0
+        else:
+            line_start = self._find_line_start(inp.start)
+        self.consumed_until = line_start
+        pos = line_start  # next byte to fetch
+        carry = b""
+        while line_start <= inp.end:
+            if pos >= inp.size:
+                if carry and line_start <= inp.end:
+                    # final line without trailing newline
+                    self.consumed_until = inp.size
+                    yield carry.decode("utf-8", "replace")
+                return
+            data = store.get(inp.key, pos, min(inp.size, pos + chunk))
+            pos += len(data)
+            data = carry + data
+            lines = data.split(b"\n")
+            carry = lines.pop()
+            for ln in lines:
+                if line_start > inp.end:
+                    return
+                line_start += len(ln) + 1
+                self.consumed_until = line_start
+                yield ln.decode("utf-8", "replace")
+
+
+def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict) -> dict:
+    """Drain queue(s) for this partition with seq-id dedup. Returns
+    {(sid, mode): {src: records...}} merged data structures per input."""
+    out = {}
+    stats = {"messages": 0, "duplicates": 0, "records": 0}
+    combine = (serde.loads_fn(read.combine_fn)
+               if isinstance(read.combine_fn, bytes) else read.combine_fn)
+
+    def fold(agg, records, mode):
+        if mode == "agg":
+            for k, v in records:
+                agg[k] = combine(agg[k], v) if k in agg else v
+        elif mode in ("group", "join"):
+            for k, v in records:
+                agg.setdefault(k, []).append(v)
+        else:  # repart
+            agg.extend(records)
+        if (mode in ("agg", "group", "join")
+                and len(agg) > env.cfg.agg_memory_records):
+            raise MemoryCapExceeded(
+                f"aggregation state {len(agg)} records > cap "
+                f"{env.cfg.agg_memory_records}")
+
+    for sid, mode in read.parts:
+        need = dict(expected.get(str(sid), {}))  # src -> message count
+        seen: set = set()
+        agg: Any = {} if mode in ("agg", "group", "join") else []
+        deadline = time.monotonic() + env.cfg.drain_timeout_s
+
+        if env.cfg.shuffle_backend == "s3":
+            prefix = f"_shuffle/{sid}/p{read.partition}/"
+            while sum(need.values()) > len(seen):
+                for key in env.store.list(prefix):
+                    src, _, seqs = key[len(prefix):].rpartition("-")
+                    kid = (src, int(seqs))
+                    if kid in seen:
+                        continue
+                    seen.add(kid)
+                    stats["messages"] += 1
+                    records = env.store.get_obj(key)
+                    stats["records"] += len(records)
+                    fold(agg, records, mode)
+                if sum(need.values()) > len(seen):
+                    if time.monotonic() > deadline:
+                        raise TimeoutError(f"s3 shuffle {prefix} incomplete")
+                    time.sleep(0.001)
+            out[(sid, mode)] = agg
+            continue
+
+        name = queue_name(sid, read.partition)
+        while sum(need.values()) > len(seen):
+            msgs = env.sqs.receive_batch(name)
+            if not msgs:
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"queue {name} incomplete: {len(seen)}"
+                        f"/{sum(need.values())} messages")
+                time.sleep(0.001)
+                continue
+            for m in msgs:
+                kid = (m.src, m.seq)
+                if kid in seen:
+                    stats["duplicates"] += 1
+                    continue
+                seen.add(kid)
+                stats["messages"] += 1
+                records = unpack_records(m.body)
+                stats["records"] += len(records)
+                fold(agg, records, mode)
+        out[(sid, mode)] = agg
+    return out, stats
+
+
+def _shuffle_input_iter(read: ShuffleRead, env: LambdaSim, expected: dict):
+    data, stats = _drain_shuffle(read, env, expected)
+    if len(read.parts) == 2:  # join
+        (sid_l, _), (sid_r, _) = read.parts
+        left, right = data[read.parts[0]], data[read.parts[1]]
+        def it():
+            for k, lvals in left.items():
+                rvals = right.get(k)
+                if not rvals:
+                    continue
+                for lv in lvals:
+                    for rv in rvals:
+                        yield (k, (lv, rv))
+        return it(), stats
+    (sid, mode) = read.parts[0]
+    agg = data[(sid, mode)]
+    if mode == "agg":
+        return iter(agg.items()), stats
+    if mode == "group":
+        return iter(agg.items()), stats
+    return iter(agg), stats
+
+
+def _flatmap_iter(it, fn):  # immediate fn binding (no late closure capture)
+    for x in it:
+        yield from fn(x)
+
+
+def _apply_ops(it, ops):
+    for kind, blob in ops:
+        fn = serde.loads_fn(blob) if isinstance(blob, bytes) else blob
+        if kind == "map":
+            it = map(fn, it)
+        elif kind == "filter":
+            it = filter(fn, it)
+        elif kind == "flatmap":
+            it = _flatmap_iter(it, fn)
+        elif kind == "mappartitions":
+            it = fn(it)
+        else:
+            raise ValueError(f"unknown op {kind}")
+    return it
+
+
+class _ShuffleWriter:
+    """Hash-partitioned buffered writer with overflow flush (§III-A)."""
+
+    def __init__(self, write, env: LambdaSim, task_src: str,
+                 seq_start: dict | None):
+        self.write = write
+        self.env = env
+        self.src = task_src
+        self.combine = (serde.loads_fn(write.combine_fn)
+                        if isinstance(write.combine_fn, bytes)
+                        else write.combine_fn)
+        self.buffers: dict[int, Any] = {}
+        self.buffered = 0
+        self.seq = {int(k): v for k, v in (seq_start or {}).items()}
+        self.message_counts: dict[int, int] = {}
+
+    def _partition_of(self, key) -> int:
+        return hash(key) % self.write.nparts
+
+    def add(self, record):
+        w = self.write
+        if w.mode == "repart":
+            p = self.seq.get(-1, 0) % w.nparts  # round-robin
+            self.seq[-1] = self.seq.get(-1, 0) + 1
+            self.buffers.setdefault(p, []).append(record)
+        else:
+            k, v = record
+            p = self._partition_of(k)
+            if w.mode == "agg" and self.combine is not None:
+                buf = self.buffers.setdefault(p, {})
+                before = len(buf)
+                buf[k] = self.combine(buf[k], v) if k in buf else v
+                self.buffered += len(buf) - before
+                if self.buffered >= self.env.cfg.flush_records:
+                    self.flush()
+                return
+            self.buffers.setdefault(p, []).append(record)
+        self.buffered += 1
+        if self.buffered >= self.env.cfg.flush_records:
+            self.flush()
+
+    def flush(self):
+        s3_mode = self.env.cfg.shuffle_backend == "s3"
+        for p, buf in self.buffers.items():
+            records = list(buf.items()) if isinstance(buf, dict) else buf
+            if not records:
+                continue
+            if s3_mode:
+                # Qubole-style object-store shuffle: one object per flush;
+                # idempotent keys make retries/speculation free to dedup
+                seq = self.seq.get(p, 0)
+                self.seq[p] = seq + 1
+                self.message_counts[p] = self.message_counts.get(p, 0) + 1
+                key = (f"_shuffle/{self.write.shuffle_id}/p{p}/"
+                       f"{self.src}-{seq}")
+                self.env.store.put_obj(key, records)
+                continue
+            name = queue_name(self.write.shuffle_id, p)
+            bodies = pack_records(records)
+            batch: list[Message] = []
+            for body in bodies:
+                seq = self.seq.get(p, 0)
+                self.seq[p] = seq + 1
+                self.message_counts[p] = self.message_counts.get(p, 0) + 1
+                batch.append(Message(body, seq, self.src))
+                if len(batch) == 10:
+                    self.env.sqs.send_batch(name, batch)
+                    batch = []
+            if batch:
+                self.env.sqs.send_batch(name, batch)
+        self.buffers = {}
+        self.buffered = 0
+
+
+def executor_main(payload: dict, env: LambdaSim) -> dict:
+    """The Lambda function body: deserialize task, build input iterator,
+    run the pipeline, sink outputs, chain if the lease runs out."""
+    fail_after = payload.get("fail_after_records")
+    inject = payload.get("inject_failure")
+    if inject:
+        raise InjectedFailure(f"injected failure for task "
+                              f"{payload['stage']}/{payload['index']}")
+    slow = payload.get("straggle_s", 0.0)
+    if slow:
+        time.sleep(slow)
+
+    lease = _Lease(env.cfg)
+    src_id = f"s{payload['stage']}t{payload['index']}"
+    stats: dict[str, Any] = {"records_in": 0}
+    inp = payload["input"]
+    chainable = isinstance(inp, SourceInput)
+
+    if isinstance(inp, SourceInput):
+        reader = _SourceReader(inp, env.store, env.cfg,
+                               payload.get("resume_offset"))
+        base_iter = iter(reader)
+    elif isinstance(inp, CollectionInput):
+        base_iter = iter(env.store.get_obj(f"{inp.key}/{inp.index}"))
+        reader = None
+    else:
+        base_iter, drain_stats = _shuffle_input_iter(
+            inp, env, payload.get("expected", {}))
+        stats.update(drain_stats)
+        reader = None
+
+    exhausted = {"flag": False}
+
+    def metered():
+        n = 0
+        for rec in base_iter:
+            n += 1
+            if fail_after and n > fail_after:
+                raise InjectedFailure("injected mid-task failure")
+            yield rec
+            if lease.consumed() and chainable:
+                exhausted["flag"] = True
+                return
+        stats["records_in"] = n
+
+    out_iter = _apply_ops(metered(), payload["ops"])
+
+    write = payload["write"]
+    if write is not None:
+        writer = _ShuffleWriter(write, env, src_id, payload.get("seq_start"))
+        for rec in out_iter:
+            writer.add(rec)
+        writer.flush()
+        resp = {"status": "ok", "message_counts": writer.message_counts,
+                "stats": stats}
+        if exhausted["flag"]:
+            resp["continuation"] = {
+                "resume_offset": reader.consumed_until,
+                "seq_start": writer.seq,
+            }
+        return resp
+
+    result = list(out_iter)
+    resp = {"status": "ok", "stats": stats}
+    if payload.get("save_prefix"):
+        key = f"{payload['save_prefix']}/part-{payload['index']:05d}"
+        env.store.put(key, "\n".join(str(r) for r in result).encode())
+        resp["saved_key"] = key
+    else:
+        resp["result"] = result
+    if exhausted["flag"]:
+        resp["continuation"] = {"resume_offset": reader.consumed_until,
+                                "partial": True}
+    return resp

@@ -1,0 +1,159 @@
+"""Simulated state-as-a-service backends: SQS (queue shuffle) and S3
+(object store) — semantics matched to the paper's execution environment.
+
+SQSSim reproduces what matters for Flint's correctness story:
+  * batched sends (<=10 messages, <=256 KiB each), billing per 64 KiB chunk;
+  * AT-LEAST-ONCE delivery: a seeded duplicator re-delivers a configurable
+    fraction of messages (paper §VI flags this; core.dedup handles it);
+  * no ordering guarantees (receive shuffles within the visible set).
+
+ObjectStoreSim is the S3 stand-in: ranged GETs over byte blobs for input
+splits, PUT/GET for the Qubole-style object-store shuffle (paper §V) and
+for the >6 MB payload spill (paper §III-B).
+"""
+
+from __future__ import annotations
+
+import pickle
+import random
+import threading
+from collections import defaultdict, deque
+from typing import Any, Iterable
+
+from repro.core.costs import (SQS_BATCH_MESSAGES, SQS_MESSAGE_LIMIT,
+                              CostLedger)
+
+
+class Message:
+    __slots__ = ("body", "seq", "src")
+
+    def __init__(self, body: bytes, seq: int, src: str):
+        self.body = body
+        self.seq = seq
+        self.src = src
+
+
+class SQSSim:
+    """In-process SQS with at-least-once semantics and per-request billing."""
+
+    def __init__(self, ledger: CostLedger, *, duplicate_prob: float = 0.0,
+                 seed: int = 0):
+        self.ledger = ledger
+        self.duplicate_prob = duplicate_prob
+        self._rng = random.Random(seed)
+        self._queues: dict[str, deque[Message]] = defaultdict(deque)
+        self._lock = threading.Lock()
+
+    def create_queue(self, name: str):
+        with self._lock:
+            self._queues.setdefault(name, deque())
+        self.ledger.add_sqs_control()
+
+    def delete_queue(self, name: str):
+        with self._lock:
+            self._queues.pop(name, None)
+        self.ledger.add_sqs_control()
+
+    def send_batch(self, name: str, messages: list[Message]):
+        if len(messages) > SQS_BATCH_MESSAGES:
+            raise ValueError("SQS batch send limited to 10 messages")
+        payload = 0
+        for m in messages:
+            if len(m.body) > SQS_MESSAGE_LIMIT:
+                raise ValueError("SQS message exceeds 256 KiB")
+            payload += len(m.body)
+        self.ledger.add_sqs(payload)
+        with self._lock:
+            q = self._queues[name]
+            for m in messages:
+                q.append(m)
+                # at-least-once: occasionally deliver a duplicate
+                if self._rng.random() < self.duplicate_prob:
+                    q.append(Message(m.body, m.seq, m.src))
+
+    def receive_batch(self, name: str, max_messages: int = SQS_BATCH_MESSAGES
+                      ) -> list[Message]:
+        with self._lock:
+            q = self._queues.get(name)
+            out = []
+            if q:
+                # no ordering guarantee: rotate by a random offset
+                k = min(max_messages, len(q))
+                if len(q) > k and self._rng.random() < 0.5:
+                    q.rotate(-self._rng.randrange(len(q) - k + 1))
+                for _ in range(k):
+                    out.append(q.popleft())
+        payload = sum(len(m.body) for m in out)
+        self.ledger.add_sqs(max(payload, 1), receive=True)
+        return out
+
+    def approx_len(self, name: str) -> int:
+        with self._lock:
+            return len(self._queues.get(name, ()))
+
+
+class ObjectStoreSim:
+    """S3 stand-in: named byte blobs with ranged reads and listing."""
+
+    def __init__(self, ledger: CostLedger):
+        self.ledger = ledger
+        self._objects: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def put(self, key: str, data: bytes):
+        with self._lock:
+            self._objects[key] = bytes(data)
+        self.ledger.add_s3(len(data), put=True)
+
+    def get(self, key: str, start: int = 0, end: int | None = None) -> bytes:
+        with self._lock:
+            data = self._objects[key]
+        out = data[start:end]
+        self.ledger.add_s3(len(out))
+        return out
+
+    def size(self, key: str) -> int:
+        with self._lock:
+            return len(self._objects[key])
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._objects
+
+    def list(self, prefix: str) -> list[str]:
+        with self._lock:
+            return sorted(k for k in self._objects if k.startswith(prefix))
+
+    def delete(self, key: str):
+        with self._lock:
+            self._objects.pop(key, None)
+
+    # convenience for pickled python values (payload spill, shuffle blobs)
+    def put_obj(self, key: str, value: Any):
+        self.put(key, pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL))
+
+    def get_obj(self, key: str) -> Any:
+        return pickle.loads(self.get(key))
+
+
+def pack_records(records: Iterable[Any], limit: int = SQS_MESSAGE_LIMIT
+                 ) -> list[bytes]:
+    """Greedily pack records into pickled message bodies under the 256 KiB
+    SQS cap. Returns a list of message bodies."""
+    bodies: list[bytes] = []
+    buf: list[Any] = []
+    size = 64  # pickle overhead headroom
+    for r in records:
+        est = len(pickle.dumps(r, protocol=pickle.HIGHEST_PROTOCOL))
+        if buf and size + est > limit:
+            bodies.append(pickle.dumps(buf, protocol=pickle.HIGHEST_PROTOCOL))
+            buf, size = [], 64
+        buf.append(r)
+        size += est
+    if buf:
+        bodies.append(pickle.dumps(buf, protocol=pickle.HIGHEST_PROTOCOL))
+    return bodies
+
+
+def unpack_records(body: bytes) -> list[Any]:
+    return pickle.loads(body)

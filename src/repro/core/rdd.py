@@ -1,0 +1,154 @@
+"""RDD lineage — the user-facing dataflow API (PySpark-compatible subset).
+
+An RDD is a lazy lineage node; nothing executes until an action. The DAG
+scheduler (core.dag) cuts the lineage into stages at wide dependencies,
+exactly as the paper describes reusing Spark's physical planning.
+
+Supported transformations: map, filter, flatMap, mapPartitions (narrow);
+reduceByKey, groupByKey, join, repartition (wide); union. Actions:
+collect, count, take, reduce, saveAsTextFile.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable
+
+_next_id = itertools.count()
+
+
+class RDD:
+    def __init__(self, ctx, nparts: int):
+        self.ctx = ctx
+        self.id = next(_next_id)
+        self.nparts = nparts
+
+    # ------------------------------------------------------ transformations
+    def map(self, fn: Callable) -> "RDD":
+        return Narrow(self, "map", fn)
+
+    def filter(self, fn: Callable) -> "RDD":
+        return Narrow(self, "filter", fn)
+
+    def flatMap(self, fn: Callable) -> "RDD":
+        return Narrow(self, "flatmap", fn)
+
+    def mapPartitions(self, fn: Callable) -> "RDD":
+        return Narrow(self, "mappartitions", fn)
+
+    def reduceByKey(self, fn: Callable, numPartitions: int | None = None) -> "RDD":
+        return ShuffleAgg(self, fn, numPartitions or self.nparts,
+                          map_side_combine=True)
+
+    def groupByKey(self, numPartitions: int | None = None) -> "RDD":
+        return ShuffleAgg(self, None, numPartitions or self.nparts,
+                          map_side_combine=False)
+
+    def join(self, other: "RDD", numPartitions: int | None = None) -> "RDD":
+        return Join(self, other, numPartitions or max(self.nparts, other.nparts))
+
+    def repartition(self, numPartitions: int) -> "RDD":
+        return Repartition(self, numPartitions)
+
+    def union(self, other: "RDD") -> "RDD":
+        return Union(self, other)
+
+    # ------------------------------------------------------------- actions
+    def collect(self) -> list:
+        return self.ctx.run_action(self, "collect")
+
+    def count(self) -> int:
+        return self.ctx.run_action(self.mapPartitions(_count_iter), "sum")
+
+    def reduce(self, fn: Callable):
+        partials = self.ctx.run_action(self.mapPartitions(_reduce_with(fn)),
+                                       "collect")
+        vals = [p for p in partials if p is not _EMPTY]
+        out = vals[0]
+        for v in vals[1:]:
+            out = fn(out, v)
+        return out
+
+    def take(self, n: int) -> list:
+        return self.collect()[:n]  # prototype semantics: no partial eval
+
+    def saveAsTextFile(self, key_prefix: str):
+        return self.ctx.run_action(self, "save", save_prefix=key_prefix)
+
+
+class _Empty:
+    def __repr__(self):
+        return "<empty>"
+
+
+_EMPTY = _Empty()
+
+
+def _count_iter(it):
+    n = 0
+    for _ in it:
+        n += 1
+    yield n
+
+
+def _reduce_with(fn):
+    def part_reduce(it):
+        acc = _EMPTY
+        for x in it:
+            acc = x if acc is _EMPTY else fn(acc, x)
+        yield acc
+    return part_reduce
+
+
+class Source(RDD):
+    """Byte-range-partitioned text object in the object store."""
+
+    def __init__(self, ctx, key: str, nparts: int):
+        super().__init__(ctx, nparts)
+        self.key = key
+
+
+class ParallelCollection(RDD):
+    """Driver-side data distributed into partitions (ctx.parallelize)."""
+
+    def __init__(self, ctx, key: str, nparts: int):
+        super().__init__(ctx, nparts)
+        self.key = key  # pre-uploaded pickled partitions under this prefix
+
+
+class Narrow(RDD):
+    def __init__(self, parent: RDD, kind: str, fn: Callable):
+        super().__init__(parent.ctx, parent.nparts)
+        self.parent = parent
+        self.kind = kind
+        self.fn = fn
+
+
+class ShuffleAgg(RDD):
+    """reduceByKey / groupByKey."""
+
+    def __init__(self, parent: RDD, fn, nparts: int, *, map_side_combine: bool):
+        super().__init__(parent.ctx, nparts)
+        self.parent = parent
+        self.fn = fn
+        self.map_side_combine = map_side_combine
+
+
+class Repartition(RDD):
+    def __init__(self, parent: RDD, nparts: int):
+        super().__init__(parent.ctx, nparts)
+        self.parent = parent
+
+
+class Join(RDD):
+    def __init__(self, left: RDD, right: RDD, nparts: int):
+        super().__init__(left.ctx, nparts)
+        self.left = left
+        self.right = right
+
+
+class Union(RDD):
+    def __init__(self, a: RDD, b: RDD):
+        super().__init__(a.ctx, a.nparts + b.nparts)
+        self.a = a
+        self.b = b

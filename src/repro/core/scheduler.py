@@ -1,0 +1,199 @@
+"""FlintScheduler — the serverless SchedulerBackend (paper §III).
+
+Lives on the client, drives one stage at a time:
+  * creates the stage's output queues, serializes tasks, launches executors
+    asynchronously up to the concurrency cap;
+  * processes responses: CONTINUATIONS are re-invoked on warm containers
+    (executor chaining), failures retried with the same task identity
+    (idempotent via seq-id dedup), STRAGGLERS get a speculative duplicate
+    (first completion wins — duplicates are dropped by the same dedup);
+  * once all tasks of a stage complete, aggregates per-queue message counts
+    and launches the next stage with those expectations; deletes queues
+    once consumed.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import pickle
+import threading
+import time
+from typing import Any
+
+from repro.core.costs import CostLedger
+from repro.core.dag import ShuffleRead, StagePlan, TaskDef
+from repro.core.executors import (FlintConfig, LambdaSim, queue_name,
+                                  serialize_task)
+from repro.core.queues import ObjectStoreSim, SQSSim
+
+
+class StageFailure(RuntimeError):
+    def __init__(self, msg, error_type=""):
+        super().__init__(msg)
+        self.error_type = error_type
+
+
+class FlintScheduler:
+    def __init__(self, cfg: FlintConfig, ledger: CostLedger | None = None,
+                 store: ObjectStoreSim | None = None, *,
+                 fault_plan: dict | None = None, verbose: bool = False):
+        self.cfg = cfg
+        self.ledger = ledger or CostLedger()
+        self.store = store or ObjectStoreSim(self.ledger)
+        self.sqs = SQSSim(self.ledger, duplicate_prob=cfg.duplicate_prob)
+        self.lam = LambdaSim(cfg, self.ledger, self.store, self.sqs)
+        self.pool = cf.ThreadPoolExecutor(max_workers=cfg.concurrency)
+        # fault_plan: {(stage, index): {"fail_attempts": n} | {"straggle_s": s}
+        #             | {"fail_after_records": n}}
+        self.fault_plan = fault_plan or {}
+        self.verbose = verbose
+        self.stage_stats: list[dict] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def run(self, stages: list[StagePlan]):
+        # expected message counts: shuffle_id -> partition -> src -> count
+        expectations: dict[int, dict[int, dict[str, int]]] = {}
+        result = None
+        for stage in stages:
+            if stage.write is not None:
+                for p in range(stage.write.nparts):
+                    self.sqs.create_queue(queue_name(stage.write.shuffle_id, p))
+            result = self._run_stage(stage, expectations)
+            # queues consumed by this stage are dead — scheduler cleanup
+            for task in stage.tasks[:1]:
+                if isinstance(task.input, ShuffleRead):
+                    for sid, _ in task.input.parts:
+                        for p in range(len(stage.tasks)):
+                            self.sqs.delete_queue(queue_name(sid, p))
+        return result
+
+    # ------------------------------------------------------------------
+    def _payload_for(self, task: TaskDef, stage: StagePlan, attempt: int,
+                     expectations, extra: dict | None = None) -> dict:
+        extra = dict(extra or {})
+        fault = self.fault_plan.get((task.stage_id, task.index), {})
+        if fault.get("fail_attempts", 0) > attempt:
+            extra["inject_failure"] = True
+        if fault.get("straggle_s") and attempt == 0 \
+                and not extra.get("_speculative"):
+            extra["straggle_s"] = fault["straggle_s"]
+        if fault.get("fail_after_records") and attempt == 0:
+            extra["fail_after_records"] = fault["fail_after_records"]
+        extra.pop("_speculative", None)
+        if isinstance(task.input, ShuffleRead):
+            exp = {}
+            for sid, _ in task.input.parts:
+                exp[str(sid)] = expectations.get(sid, {}).get(task.input.partition, {})
+            extra["expected"] = exp
+        if stage.action == "save" or stage.save_prefix:
+            extra["save_prefix"] = stage.save_prefix
+        return serialize_task(task, attempt, extra)
+
+    def _run_stage(self, stage: StagePlan, expectations) -> Any:
+        t0 = time.monotonic()
+        n = len(stage.tasks)
+        results: dict[int, Any] = {}
+        partials: dict[int, list] = {}
+        counts: dict[int, dict[str, int]] = {}
+        attempts: dict[int, int] = {i: 0 for i in range(n)}
+        durations: list[float] = []
+        speculated: set[int] = set()
+        inflight: dict[cf.Future, tuple[int, bool, float]] = {}
+        dup_dropped = 0
+        chained = 0
+
+        def launch(task: TaskDef, extra=None, speculative=False):
+            payload = self._payload_for(
+                task, stage, attempts[task.index], expectations,
+                dict(extra or {}, _speculative=speculative))
+            fut = self.pool.submit(self.lam.invoke, payload)
+            inflight[fut] = (task.index, speculative, time.monotonic())
+
+        for task in stage.tasks:
+            launch(task)
+
+        while inflight:
+            done, _ = cf.wait(list(inflight), timeout=0.05,
+                              return_when=cf.FIRST_COMPLETED)
+            now = time.monotonic()
+            # straggler speculation
+            if (len(durations) >= self.cfg.speculation_min_done
+                    and len(inflight) < self.cfg.concurrency):
+                med = sorted(durations)[len(durations) // 2]
+                for fut, (idx, spec, started) in list(inflight.items()):
+                    if (not spec and idx not in speculated
+                            and idx not in results
+                            and now - started > self.cfg.speculation_factor
+                            * max(med, 0.05)):
+                        speculated.add(idx)
+                        launch(stage.tasks[idx], speculative=True)
+            for fut in done:
+                idx, speculative, started = inflight.pop(fut)
+                resp = fut.result()
+                if "spilled" in resp:
+                    resp = pickle.loads(self.store.get(resp["spilled"]))
+                if idx in results:
+                    dup_dropped += 1  # speculative duplicate lost the race
+                    continue
+                if resp.get("status") != "ok":
+                    if resp.get("error_type") == "MemoryCapExceeded":
+                        raise StageFailure(resp.get("error", ""),
+                                           error_type="MemoryCapExceeded")
+                    attempts[idx] += 1
+                    if attempts[idx] > self.cfg.max_task_retries:
+                        raise StageFailure(
+                            f"task {stage.id}/{idx} failed after "
+                            f"{attempts[idx]} attempts: {resp.get('error')}",
+                            error_type=resp.get("error_type", ""))
+                    launch(stage.tasks[idx])
+                    continue
+                if "continuation" in resp:
+                    # executor chaining: merge partial output, re-invoke warm
+                    chained += 1
+                    self._merge_partial(resp, idx, partials, counts)
+                    launch(stage.tasks[idx], extra=resp["continuation"])
+                    continue
+                durations.append(resp.get("duration_s", 0.0))
+                self._merge_partial(resp, idx, partials, counts)
+                results[idx] = True
+
+        # stage complete: fold message counts into expectations
+        if stage.write is not None:
+            exp = expectations.setdefault(stage.write.shuffle_id, {})
+            for idx, per_part in counts.items():
+                src = f"s{stage.id}t{idx}"
+                for p, c in per_part.items():
+                    exp.setdefault(int(p), {})[src] = c
+
+        self.stage_stats.append({
+            "stage": stage.id, "tasks": n,
+            "wall_s": round(time.monotonic() - t0, 4),
+            "attempts": sum(attempts.values()) + n,
+            "chained": chained,
+            "speculated": len(speculated),
+            "spec_dropped": dup_dropped,
+        })
+        if self.verbose:
+            print(f"[flint] stage {stage.id}: {self.stage_stats[-1]}")
+
+        if stage.action in ("collect", "sum"):
+            out = []
+            for i in range(n):
+                out.extend(partials.get(i, []))
+            return sum(out) if stage.action == "sum" else out
+        if stage.action == "save":
+            return [f"{stage.save_prefix}/part-{i:05d}" for i in range(n)]
+        return None
+
+    @staticmethod
+    def _merge_partial(resp, idx, partials, counts):
+        if "result" in resp:
+            partials.setdefault(idx, []).extend(resp["result"])
+        if "message_counts" in resp:
+            cur = counts.setdefault(idx, {})
+            for p, c in resp["message_counts"].items():
+                cur[p] = cur.get(p, 0) + c
+
+    def shutdown(self):
+        self.pool.shutdown(wait=False)

@@ -1,0 +1,93 @@
+"""Mini-cloudpickle: serialize task code (lambdas, closures, module refs)
+for shipping to executors (paper §III: "the serialized code to execute").
+
+Standard pickle refuses lambdas and local functions; Flint tasks are built
+from exactly those. We serialize the code object with ``marshal`` plus the
+pieces needed to rebuild the function: defaults, closure cells, and the
+referenced globals (recursively for function-valued globals; by name for
+modules). Scope is intentionally bounded: anything else must already be
+picklable.
+"""
+
+from __future__ import annotations
+
+import importlib
+import marshal
+import pickle
+import types
+from typing import Any
+
+_FN_TAG = "__flint_fn__"
+_MOD_TAG = "__flint_mod__"
+
+
+def _pack_cell(value):
+    return _pack(value)
+
+
+def _pack(value: Any):
+    if isinstance(value, types.ModuleType):
+        return {_MOD_TAG: value.__name__}
+    if isinstance(value, types.FunctionType):
+        return _pack_function(value)
+    return value
+
+
+def _pack_function(fn: types.FunctionType) -> dict:
+    code = fn.__code__
+    globs = {}
+    for name in code.co_names:
+        if name in fn.__globals__:
+            g = fn.__globals__[name]
+            if isinstance(g, (types.FunctionType, types.ModuleType)):
+                globs[name] = _pack(g)
+            else:
+                try:
+                    pickle.dumps(g)
+                    globs[name] = g
+                except Exception:
+                    pass  # unpicklable global never touched at runtime, or KeyError later
+    closure = None
+    if fn.__closure__:
+        closure = [_pack_cell(c.cell_contents) for c in fn.__closure__]
+    return {
+        _FN_TAG: True,
+        "code": marshal.dumps(code),
+        "name": fn.__name__,
+        "defaults": fn.__defaults__,
+        "closure": closure,
+        "globals": globs,
+    }
+
+
+def _unpack(value: Any):
+    if isinstance(value, dict) and value.get(_FN_TAG):
+        return _unpack_function(value)
+    if isinstance(value, dict) and _MOD_TAG in value:
+        return importlib.import_module(value[_MOD_TAG])
+    return value
+
+
+def _unpack_function(packed: dict) -> types.FunctionType:
+    code = marshal.loads(packed["code"])
+    globs = {"__builtins__": __builtins__}
+    for k, v in packed["globals"].items():
+        globs[k] = _unpack(v)
+    closure = None
+    if packed["closure"] is not None:
+        closure = tuple(types.CellType(_unpack(v)) for v in packed["closure"])
+    fn = types.FunctionType(code, globs, packed["name"], packed["defaults"],
+                            closure)
+    return fn
+
+
+def dumps_fn(fn) -> bytes:
+    """Serialize a callable (plain function, lambda, or closure)."""
+    if not isinstance(fn, types.FunctionType):
+        return pickle.dumps(fn)  # builtins / partials / callables
+    return pickle.dumps(_pack_function(fn))
+
+
+def loads_fn(data: bytes):
+    obj = pickle.loads(data)
+    return _unpack(obj)

@@ -1,0 +1,45 @@
+"""Flint-engine-backed input pipeline: the paper's queue shuffle as the
+data-plane substrate for training.
+
+``shuffle_shards`` hash-partitions a tokenized corpus into training shards
+through the serverless engine (stage 0 reads S3 ranges, the shuffle rides
+SQS, stage 1 writes shard objects) — the exact C2 mechanism, reused.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import FlintContext
+
+
+def shuffle_shards(ctx: FlintContext, corpus_key: str, n_shards: int,
+                   read_partitions: int = 8) -> list[str]:
+    """Hash-shuffle corpus lines into n_shards objects; returns keys."""
+    rdd = (ctx.textFile(corpus_key, read_partitions)
+           .map(lambda line: (hash(line) % (1 << 30), line))
+           .groupByKey(n_shards)
+           .flatMap(lambda kv: kv[1]))
+    return rdd.saveAsTextFile(f"{corpus_key}.shards")
+
+
+def shard_token_stream(ctx: FlintContext, shard_keys: list[str],
+                       tokenizer, seq: int, batch: int):
+    """Yield {'tokens': (batch, seq)} batches from shuffled shards —
+    deterministic given shard contents (resume = skip to batch index)."""
+    buf: list[int] = []
+    batch_rows: list[np.ndarray] = []
+    for key in shard_keys:
+        text = ctx.store.get(key).decode()
+        for line in text.splitlines():
+            buf.extend(tokenizer(line))
+            while len(buf) >= seq:
+                batch_rows.append(np.asarray(buf[:seq], np.int32))
+                buf = buf[seq:]
+                if len(batch_rows) == batch:
+                    yield {"tokens": np.stack(batch_rows)}
+                    batch_rows = []
+
+
+def byte_tokenizer(line: str) -> list[int]:
+    return list(line.encode("utf-8")[:1024]) + [10]

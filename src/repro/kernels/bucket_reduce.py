@@ -1,0 +1,69 @@
+"""bucket_reduce — Flint's queue shuffle as a TPU kernel.
+
+The paper's C2 pipeline is: hash each record to a partition queue, then
+aggregate per partition. On a systolic array that whole pattern collapses
+into a one-hot matmul: build the (block, P) dispatch one-hot in VREGs from
+an iota==ids compare, and let the MXU do `onehot.T @ values` — "the
+shuffle is a matmul" (DESIGN.md §2). This is also exactly the GShard MoE
+dispatch primitive, which is why the same kernel services reduceByKey-style
+aggregation and expert dispatch.
+
+Grid (N/bn,): the (P, D) accumulator persists in VMEM scratch across the
+sequential grid and is written out once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, vals_ref, o_ref, acc_ref, *, n_buckets: int, bn: int,
+            nblocks: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = ids_ref[...]  # (bn,) int32; -1 = padding
+    vals = vals_ref[...].astype(jnp.float32)  # (bn, d)
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (bn, n_buckets), 1)
+    onehot = (ids[:, None] == buckets).astype(jnp.float32)  # (bn, P)
+    # MXU: (P, bn) @ (bn, d) accumulated in f32 VMEM scratch
+    acc_ref[...] += jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())))
+
+    @pl.when(step == nblocks - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def bucket_reduce(values, bucket_ids, n_buckets: int, *, block: int = 512,
+                  interpret: bool = False):
+    """values: (N, D); bucket_ids: (N,) int32 in [0, n_buckets).
+    Returns per-bucket sums (n_buckets, D)."""
+    n, d = values.shape
+    bn = min(block, n)
+    pad = (-n) % bn
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        bucket_ids = jnp.pad(bucket_ids, (0, pad), constant_values=-1)
+    nblocks = (n + pad) // bn
+    return pl.pallas_call(
+        functools.partial(_kernel, n_buckets=n_buckets, bn=bn,
+                          nblocks=nblocks),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_buckets, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_buckets, d), values.dtype),
+        scratch_shapes=[pltpu.VMEM((n_buckets, d), jnp.float32)],
+        interpret=interpret,
+    )(bucket_ids, values)

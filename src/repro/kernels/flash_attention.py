@@ -1,0 +1,124 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Grid (B*H, Sq/bq, Skv/bk): the innermost kv-block axis runs sequentially on
+TPU, so the online-softmax state (m, l, acc) lives in VMEM scratch and
+persists across kv blocks; the output block is written once, on the last
+kv step. BlockSpecs keep one (bq, D) query tile, one (bk, D) kv tile and
+the (bq, D) f32 accumulator in VMEM — MXU-aligned tile sizes (multiples of
+128) are chosen by the wrapper in ops.py.
+
+GQA is handled with no KV expansion copy: the kv BlockSpec index_map sends
+query-head `h` to kv-head `h // group`, so each kv tile is fetched once
+per group from HBM.
+
+Causal/SWA masking is block-sparse: fully-masked kv blocks are skipped via
+pl.when (no MXU work), partially-masked blocks apply an iota mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            nk: int, q_offset: int):
+    i = pl.program_id(1)  # query block
+    j = pl.program_id(2)  # kv block (sequential innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # absolute positions of this tile
+    q_lo = i * bq + q_offset  # first query's absolute position
+    k_lo = j * bk
+    # block-level reachability (skip fully-masked tiles)
+    reachable = True
+    if causal:
+        reachable = q_lo + bq - 1 >= k_lo  # some query can see some key
+    if window:
+        reachable = jnp.logical_and(
+            reachable, k_lo + bk - 1 > q_lo - window) if causal else reachable
+
+    @pl.when(reachable if (causal or window) else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal or window:
+            qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            delta = qpos - kpos
+            ok = jnp.ones((bq, bk), jnp.bool_)
+            if causal:
+                ok &= delta >= 0
+            if window:
+                ok &= delta < window
+            s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot(p, v))
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         bq: int = 128, bk: int = 128,
+                         interpret: bool = False):
+    """q: (B, H, Sq, D); k/v: (B, K, Skv, D). Returns (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    kk, skv = k.shape[1], k.shape[2]
+    g = h // kk
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, "pad seq to block multiple"
+    nq, nk = sq // bq, skv // bk
+    scale = 1.0 / (d ** 0.5)
+    q_offset = skv - sq  # decode: queries sit at the end of the kv span
+
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * kk, skv, d)
+    vf = v.reshape(b * kk, skv, d)
+
+    def kv_index(bh, i, j):
+        return (bh // h) * kk + (bh % h) // g, j, 0
+
+    grid = (b * h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, nk=nk, q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),  # acc
+            pltpu.VMEM((bq,), jnp.float32),    # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),    # l (running denom)
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,55 @@
+"""Grouped (per-expert) matmul Pallas kernel for the MoE expert compute.
+
+x: (E, T, D) expert-major token buffers (the dispatch output), w: (E, D, F)
+stacked expert weights. Grid (E, T/bt, F/bf, D/bd) with the innermost
+contraction axis accumulating into a (bt, bf) f32 VMEM scratch tile —
+one output tile is live at a time, tiles are MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nd: int):
+    kstep = pl.program_id(3)
+
+    @pl.when(kstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]  # (bt, bd)
+    w = w_ref[0]  # (bd, bf)
+    acc_ref[...] += jax.lax.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+    @pl.when(kstep == nd - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(x, w, *, bt: int = 128, bf: int = 128, bd: int = 512,
+                   interpret: bool = False):
+    """x: (E, T, D) @ w: (E, D, F) -> (E, T, F)."""
+    e, t, d = x.shape
+    f = w.shape[2]
+    bt, bf, bd = min(bt, t), min(bf, f), min(bd, d)
+    assert t % bt == 0 and f % bf == 0 and d % bd == 0, \
+        "pad T/F/D to block multiples"
+    grid = (e, t // bt, f // bf, d // bd)
+    return pl.pallas_call(
+        functools.partial(_kernel, nd=d // bd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda ei, ti, fi, ki: (ei, ti, ki)),
+            pl.BlockSpec((1, bd, bf), lambda ei, ti, fi, ki: (ei, ki, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bf), lambda ei, ti, fi, ki: (ei, ti, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, t, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

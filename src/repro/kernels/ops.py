@@ -1,0 +1,95 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Backend policy: on TPU the Mosaic kernels run natively; on CPU (this
+container) `interpret=True` executes the kernel bodies in Python for
+correctness, and the pure-jnp refs remain the oracles. The model code
+calls these wrappers; tests sweep shapes/dtypes against repro.kernels.ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bucket_reduce import bucket_reduce as _bucket_reduce
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.moe_gmm import grouped_matmul as _gmm
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+@functools.lru_cache(maxsize=None)
+def _fa_with_vjp(causal: bool, window: int, interpret: bool):
+    """pallas_call is not reverse-differentiable; forward runs the kernel,
+    backward recomputes attention with the jnp reference (the train path
+    uses the chunked pure-JAX attention anyway — the kernel serves the
+    prefill/serving plane)."""
+
+    def fwd_impl(q, k, v):
+        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        sq, skv = qt.shape[2], kt.shape[2]
+        bq = 128 if sq % 128 == 0 else _largest_block(sq)
+        bk = 128 if skv % 128 == 0 else _largest_block(skv)
+        out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                   bq=bq, bk=bk, interpret=interpret)
+        return out.transpose(0, 2, 1, 3)
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return fwd_impl(q, k, v)
+
+    def fwd(q, k, v):
+        return fwd_impl(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=causal,
+                                                    window=window), q, k, v)
+        return vjp(g.astype(q.dtype))
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool | None = None):
+    """q: (B, S, H, D) k/v: (B, S, K, D) — model layout; kernel runs BHSD."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _fa_with_vjp(causal, int(window), interpret)(q, k, v)
+
+
+def _largest_block(n: int, cap: int = 128) -> int:
+    for b in range(min(cap, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def bucket_reduce(values, bucket_ids, n_buckets: int, *,
+                  interpret: bool | None = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _bucket_reduce(values, bucket_ids, n_buckets, interpret=interpret)
+
+
+def grouped_matmul(x, w, sizes=None, *, interpret: bool | None = None):
+    """x: (E, T, D) @ w: (E, D, F). `sizes` accepted for API compatibility
+    (rows past a group's size are zero in the dispatch buffers)."""
+    del sizes
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    e, t, d = x.shape
+    f = w.shape[2]
+    if t % 8 or d % 8 or f % 8:  # tiny/test shapes: use the oracle
+        return ref.grouped_matmul_ref(x, w)
+    bt = _largest_block(t)
+    bf = _largest_block(f)
+    bd = _largest_block(d, 512)
+    return _gmm(x, w, bt=bt, bf=bf, bd=bd, interpret=interpret)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract the
+interpret-mode sweeps assert against)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Sq, H, D); k/v: (B, Skv, K, D) with H % K == 0 (GQA).
+    Positions are implicit: q row i sits at absolute position
+    (Skv - Sq + i) so prefill (Sq == Skv) and decode both work."""
+    b, sq, h, d = q.shape
+    kk = k.shape[2]
+    g = h // kk
+    qg = q.reshape(b, sq, kk, g, d)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d)
+    qpos = jnp.arange(sq) + (k.shape[1] - sq)
+    kpos = jnp.arange(k.shape[1])
+    delta = qpos[:, None] - kpos[None, :]
+    ok = jnp.ones_like(delta, dtype=bool)
+    if causal:
+        ok &= delta >= 0
+    if window:
+        ok &= delta < window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(b, sq, h, d)
+
+
+def bucket_reduce_ref(values, bucket_ids, n_buckets: int):
+    """values: (N, D), bucket_ids: (N,) int32 in [0, n_buckets).
+    Returns (n_buckets, D) per-bucket sums — reduceByKey after the hash
+    partitioner, the paper's shuffle+aggregate collapsed into one op."""
+    onehot = jax.nn.one_hot(bucket_ids, n_buckets, dtype=jnp.float32)
+    return jnp.einsum("np,nd->pd", onehot,
+                      values.astype(jnp.float32)).astype(values.dtype)
+
+
+def grouped_matmul_ref(x, w):
+    """x: (E, T, D), w: (E, D, F) -> (E, T, F): per-expert matmul."""
+    return jnp.einsum("etd,edf->etf", x, w)

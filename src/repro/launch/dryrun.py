@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory/cost/collective analysis.
+
+MUST be the first import in the process (device count locks on jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Artifacts land in artifacts/dryrun/<mesh>/<arch>__<shape>.json — the
+roofline analysis (benchmarks/roofline.py) reads them.
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import dryrun_cell
+from repro.runtime.sharding import rules_for, use_rules
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=?\s*")
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return "full-attention arch: long_500k requires sub-quadratic decode"
+    del shape
+    return None
+
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "f8": 1, "s8": 1,
+                "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8\w*|pred|s64|s32|s16|s8|s4|u64"
+                       r"|u32|u16|u8|u4)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(text: str) -> float:
+    """Sum byte sizes of all tensor literals in an HLO type string."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        dt = "f8" if dt.startswith("f8") else dt
+        dims = m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO module.
+
+    Output (not operand) sizes: for all-gather the output is the gathered
+    tensor (bytes that actually crossed links, x(n-1)/n), for all-to-all
+    and collective-permute output==input, for all-reduce/reduce-scatter the
+    moved bytes are ~the operand size — we take whichever side the op
+    reports on its result type, a consistent ~1x proxy for link traffic.
+    """
+    per_kind: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(
+            r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\)|[\w\[\],{} ]+?))\s*"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all"
+            r"|collective-permute)(?:-start)?\(", s)
+        if not m:
+            continue
+        ty, kind = m.group(1), m.group(2)
+        per_kind[kind] = per_kind.get(kind, 0.0) + _tensor_bytes(ty)
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "count_by_kind": count,
+            "total_bytes": sum(per_kind.values())}
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             out_dir: pathlib.Path) -> dict:
+    cfg = get_config(arch)
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "mesh_shape": dict(mesh.shape), "status": "ok"}
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    try:
+        with jax.sharding.set_mesh(mesh), use_rules(rules_for(cfg)):
+            step, args, donate, jkw = dryrun_cell(arch, shape_name, mesh)
+            lowered = jax.jit(step, donate_argnums=donate, **jkw).lower(*args)
+            compiled = lowered.compile()
+            # collectives only exist POST-GSPMD: parse the compiled module
+            ctext = compiled.as_text()
+            rec["collectives"] = collective_bytes(ctext)
+            # loop-aware cost model (XLA's cost_analysis counts while
+            # bodies once; scan-over-layers needs trip-count multipliers)
+            rec["hlo_analysis"] = hlo_cost.analyze(ctext)
+            del ctext
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+        rec["memory_analysis"] = {
+            k: getattr(mem, k)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)}
+        rec["cost_analysis"] = {
+            k: float(v) for k, v in (cost or {}).items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "transcendentals") or k.startswith("bytes"))}
+        rec["lower_compile_seconds"] = round(time.time() - t0, 2)
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}__{shape_name}.json").write_text(
+        json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [(False, "pod16x16"), (True, "multipod2x16x16")]
+    else:
+        meshes = [(args.multi_pod,
+                   "multipod2x16x16" if args.multi_pod else "pod16x16")]
+
+    archs = ARCHS if (args.all or not args.arch) else [args.arch.replace("-", "_").replace(".", "_")]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    failures = 0
+    for multi_pod, mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        out_dir = ART / mesh_name
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh, mesh_name, out_dir)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    mb = rec["memory_analysis"].get("temp_size_in_bytes", 0)
+                    extra = (f" compile={rec['lower_compile_seconds']}s"
+                             f" temp={mb/2**30:.2f}GiB"
+                             f" coll={rec['collectives']['total_bytes']/2**30:.2f}GiB")
+                elif status == "error":
+                    failures += 1
+                    extra = " " + rec["error"][:160]
+                elif status == "skipped":
+                    extra = " " + rec["reason"]
+                print(f"[{mesh_name}] {arch:22s} {shape:12s} {status:7s}{extra}",
+                      flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,293 @@
+"""Loop-aware cost model over compiled (post-GSPMD) HLO text.
+
+XLA's HloCostAnalysis visits a while-loop body ONCE — for scan-over-layers
+models that undercounts FLOPs/bytes/collective traffic by the layer count.
+This module parses the compiled module, recovers loop trip counts from the
+loop-condition constants, propagates execution multipliers through
+while/call/fusion/conditional edges, and accumulates:
+
+  * flops              — dot ops: 2 * |out| * contraction size, x multiplier
+                         (dots inside fusion computations included)
+  * hbm_bytes          — HBM traffic proxy: per materializing op,
+                         sum(operand bytes) + output bytes; fusion internals
+                         are accounted once at the fusion call site (matching
+                         real fused-kernel traffic); dynamic-(update-)slice
+                         counts the slice, not the buffer
+  * collective_bytes   — per-op tensor bytes x multiplier, by kind
+
+Known approximations (documented in EXPERIMENTS.md §Roofline):
+  * trip count = max integer constant in the loop condition computation;
+  * conditional branches count as executed (upper bound);
+  * parameter/tuple plumbing, reshapes and bitcasts are free.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "s4": 0.5, "u4": 0.5, "f8e4m3fn": 1, "f8e5m2": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|pred|s64|s32|s16"
+                       r"|s8|s4|u64|u32|u16|u8|u4|c64|c128)\[([0-9,]*)\]")
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+# tuple types may contain /*index=N*/ comments; match to the first ')'
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\(.*?\))|(?:[\w\[\],{}]+))\s+"
+    r"([\w\-]+)\((.*)$")
+_REF_RE = re.compile(r"%([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"(?:branch_computations=\{([^}]*)\}"
+                        r"|true_computation=%?([\w\.\-]+)"
+                        r"|false_computation=%?([\w\.\-]+))")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "reshape", "iota", "partition-id", "replica-id",
+             "domain", "opt-barrier",
+             # TPU: transposes fold into dot layouts; loop-carry copies are
+             # elided by buffer aliasing; while/conditional are control flow
+             # (their carried buffers alias in place)
+             "transpose", "copy", "while", "conditional"}
+
+# XLA:CPU leaves many elementwise ops unfused that XLA:TPU fuses into their
+# producers/consumers; counting their traffic would overstate TPU HBM bytes
+# several-fold. Under the TPU-fusion assumption these are traffic-free
+# (their flops are negligible next to the dots); structural ops (dot,
+# fusion, reduce, copy, transpose, concat, slice, scatter/gather,
+# collectives, dynamic-(update-)slice) still pay full traffic.
+_ELEMENTWISE = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+                "select", "compare", "convert", "negate", "abs", "sign",
+                "exponential", "exp", "log", "log-plus-one", "sqrt", "rsqrt",
+                "power", "tanh", "logistic", "sine", "cosine", "floor",
+                "ceil", "round-nearest-afz", "round-nearest-even", "clamp",
+                "and", "or", "not", "xor", "shift-left",
+                "shift-right-logical", "shift-right-arithmetic", "remainder",
+                "atan2", "expm1", "log1p", "cbrt", "is-finite", "popcnt",
+                "broadcast", "exponential-minus-one"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(m.group(1), 4)
+    return total
+
+
+def _first_shape_dims(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+class _Op:
+    __slots__ = ("name", "kind", "result_type", "args", "line")
+
+    def __init__(self, name, kind, result_type, args, line):
+        self.name = name
+        self.kind = kind
+        self.result_type = result_type
+        self.args = args
+        self.line = line
+
+
+class _Comp:
+    __slots__ = ("ops", "symtab")
+
+    def __init__(self):
+        self.ops: list[_Op] = []
+        self.symtab: dict[str, str] = {}  # value name -> type string
+
+
+def _parse(text: str):
+    comps: dict[str, _Comp] = {}
+    entry = None
+    current = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):
+            if line.lstrip().endswith("{"):
+                mc = _COMP_RE.match(line)
+                if mc:
+                    current = mc.group(2)
+                    comps[current] = _Comp()
+                    if mc.group(1):
+                        entry = current
+            continue
+        if current is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            op = _Op(mo.group(1), mo.group(3), mo.group(2), mo.group(4), line)
+            comps[current].ops.append(op)
+            comps[current].symtab[op.name] = op.result_type
+    return comps, entry
+
+
+def _operand_bytes(op: _Op, symtab: dict[str, str]) -> float:
+    return sum(_shape_bytes(symtab[n]) for n in _REF_RE.findall(op.args)
+               if n in symtab)
+
+
+def _lhs_dims(op: _Op, symtab: dict[str, str]):
+    for n in _REF_RE.findall(op.args):
+        if n in symtab:
+            return _first_shape_dims(symtab[n])
+    return _first_shape_dims(op.args)  # typed-operand format fallback
+
+
+def analyze(text: str) -> dict:
+    comps, entry = _parse(text)
+    if entry is None and comps:
+        entry = max(comps, key=lambda c: len(comps[c]))
+
+    mult: dict[str, float] = defaultdict(float)
+    fusion_comps: set[str] = set()
+    mult[entry] = 1.0
+    for _ in range(40):  # fixpoint over the (acyclic) call graph
+        changed = False
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0.0)
+            if m <= 0:
+                continue
+            for op in comp.ops:
+                callees: list[tuple[str, float]] = []
+                if op.kind == "while":
+                    mw = _WHILE_RE.search(op.line)
+                    if mw:
+                        cond, body = mw.group(1), mw.group(2)
+                        cond_ops = comps.get(cond)
+                        consts = [int(x) for o in
+                                  (cond_ops.ops if cond_ops else ())
+                                  for x in _CONST_RE.findall(o.line)]
+                        trips = max(consts) if consts else 1
+                        callees = [(body, m * max(trips, 1)),
+                                   (cond, m * max(trips, 1))]
+                elif op.kind in ("call", "fusion"):
+                    mc = _CALL_RE.search(op.line)
+                    if mc:
+                        if op.kind == "fusion":
+                            fusion_comps.add(mc.group(1))
+                        callees = [(mc.group(1), m)]
+                elif op.kind == "conditional":
+                    mb = _BRANCH_RE.search(op.line)
+                    if mb:
+                        names = (re.findall(r"%?([\w\.\-]+)", mb.group(1))
+                                 if mb.group(1) else [])
+                        names += [g for g in mb.groups()[1:] if g]
+                        callees = [(n, m) for n in names if n in comps]
+                for callee, newm in callees:
+                    if callee in comps and mult.get(callee, 0.0) < newm:
+                        mult[callee] = newm
+                        changed = True
+        if not changed:
+            break
+
+    flops = 0.0
+    hbm = 0.0
+    hbm_by_kind: dict[str, float] = defaultdict(float)
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_count: dict[str, float] = defaultdict(float)
+
+    def add_hbm(kind, amount):
+        nonlocal hbm
+        hbm += amount
+        hbm_by_kind[kind] += amount
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = cname in fusion_comps
+        symtab = comp.symtab
+        for op in comp.ops:
+            kind = op.kind
+            if kind in _FREE_OPS:
+                continue
+            if kind == "dot":
+                out_dims = _first_shape_dims(op.result_type) or []
+                out_elems = math.prod(out_dims) if out_dims else 1
+                lhs = _lhs_dims(op, symtab) or []
+                mcon = _CONTRACT_RE.search(op.line)
+                csize = 1
+                if mcon and mcon.group(1):
+                    for dd in mcon.group(1).split(","):
+                        if int(dd) < len(lhs):
+                            csize *= lhs[int(dd)]
+                flops += m * 2.0 * out_elems * csize
+                if not in_fusion:
+                    add_hbm("dot", m * (_shape_bytes(op.result_type)
+                                        + _operand_bytes(op, symtab)))
+                continue
+            if in_fusion:
+                continue  # traffic accounted at the fusion call site
+            if kind == "fusion":
+                mc = _CALL_RE.search(op.line)
+                callee = comps.get(mc.group(1)) if mc else None
+                ob = _operand_bytes(op, symtab)
+                rb = _shape_bytes(op.result_type)
+                has_dus = callee and any(o.kind == "dynamic-update-slice"
+                                         for o in callee.ops)
+                has_ds = callee and any(o.kind == "dynamic-slice"
+                                        for o in callee.ops)
+                if has_dus or has_ds:
+                    # fused indexing into a loop-invariant / carried buffer
+                    # (scan xs slicing or ys stacking): traffic is the
+                    # slice, not the whole buffer
+                    refs = [_shape_bytes(symtab[n])
+                            for n in _REF_RE.findall(op.args) if n in symtab]
+                    buf = max(refs) if refs else 0.0
+                    if has_dus:
+                        add_hbm("fusion-slice", m * max(0.0, ob + rb - 2 * buf))
+                    else:
+                        add_hbm("fusion-slice", m * (max(0.0, ob - buf) + rb))
+                else:
+                    add_hbm("fusion", m * (ob + rb))
+                continue
+            base = next((c for c in _COLLECTIVES if kind.startswith(c)), None)
+            if base:
+                b = _shape_bytes(op.result_type)
+                coll_bytes[base] += m * b
+                coll_count[base] += m
+                add_hbm("collective", m * (b + _operand_bytes(op, symtab)))
+                continue
+            if kind == "dynamic-update-slice":
+                refs = [n for n in _REF_RE.findall(op.args) if n in symtab]
+                upd = _shape_bytes(symtab[refs[1]]) if len(refs) >= 2 else 0.0
+                add_hbm("dus", m * 2 * upd)
+                continue
+            if kind == "dynamic-slice":
+                add_hbm("ds", m * 2 * _shape_bytes(op.result_type))
+                continue
+            if kind in _ELEMENTWISE:
+                continue  # fused on TPU (see note above)
+            add_hbm(kind, m * (_shape_bytes(op.result_type)
+                               + _operand_bytes(op, symtab)))
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "hbm_by_kind": {k: v for k, v in sorted(hbm_by_kind.items(),
+                                                key=lambda kv: -kv[1])},
+        "collective_bytes": dict(coll_bytes),
+        "collective_count": dict(coll_count),
+        "collective_total": sum(coll_bytes.values()),
+        "n_computations": len(comps),
+    }

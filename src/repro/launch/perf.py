@@ -1,0 +1,106 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Perf-iteration harness: re-lower one (arch x shape) cell with config /
+sharding-rule overrides and report the roofline terms, for
+hypothesis -> change -> measure loops (EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m repro.launch.perf --arch deepseek-v2-236b \
+        --shape train_4k --set remat=dots --rule act_seq=model --label v2
+"""
+
+import argparse
+import ast
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import dryrun_cell
+from repro.runtime.sharding import rules_for, use_rules
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "perf"
+
+
+def measure(arch: str, shape: str, *, overrides=None, rule_overrides=None,
+            tc: TrainConfig | None = None, label: str = "baseline",
+            multi_pod: bool = False) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    rules = rules_for(cfg)
+    if rule_overrides:
+        rules.update(rule_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh), use_rules(rules):
+        step, args, donate, jkw = dryrun_cell(arch, shape, mesh,
+                                              tc=tc, cfg=cfg)
+        compiled = jax.jit(step, donate_argnums=donate,
+                           **jkw).lower(*args).compile()
+        res = hlo_cost.analyze(compiled.as_text())
+        mem = compiled.memory_analysis()
+    rec = {
+        "label": label, "arch": arch, "shape": shape,
+        "compute_s": res["flops"] / PEAK_FLOPS,
+        "memory_s": res["hbm_bytes"] / HBM_BW,
+        "collective_s": res["collective_total"] / ICI_BW,
+        "hbm_peak_gib": mem.temp_size_in_bytes / 2**30,
+        "collective_by_kind_gib": {k: round(v / 2**30, 2) for k, v in
+                                   res["collective_bytes"].items()},
+        "compile_s": round(time.time() - t0, 1),
+        "overrides": {**(overrides or {}),
+                      **{f"rule:{k}": v for k, v in
+                         (rule_overrides or {}).items()}},
+    }
+    rec["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                          key=lambda k: rec[k])
+    return rec
+
+
+def _parse_kv(items):
+    out = {}
+    for it in items or []:
+        k, _, v = it.partition("=")
+        try:
+            out[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", dest="sets",
+                    help="ModelConfig override, e.g. remat=dots")
+    ap.add_argument("--rule", action="append", dest="rules",
+                    help="sharding-rule override, e.g. act_seq=model "
+                         "(use None to clear)")
+    ap.add_argument("--label", default="exp")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    tc = TrainConfig(microbatches=args.microbatches)
+    rule_over = {k: (None if v in ("None", "none") else v)
+                 for k, v in _parse_kv(args.rules).items()}
+    rec = measure(args.arch, args.shape, overrides=_parse_kv(args.sets),
+                  rule_overrides=rule_over, tc=tc, label=args.label)
+    ART.mkdir(parents=True, exist_ok=True)
+    out = ART / f"{args.arch}__{args.shape}__{args.label}.json"
+    out.write_text(json.dumps(rec, indent=2))
+    print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

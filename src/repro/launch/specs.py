@@ -1,0 +1,229 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input-shape) cell.
+
+``input_specs`` returns abstract inputs with attached NamedShardings —
+weak-type-correct, shardable, zero allocation — plus the matching step
+builder, so the dry-run is:
+
+    step, args, donate = dryrun_cell(arch, shape, mesh)
+    jax.jit(step, donate_argnums=donate).lower(*args).compile()
+
+Cache sharding policy (decode cells):
+  * batched decode:   batch -> ('pod','data'); kv-heads / state-heads ->
+    'model' (head-aligned TP); time axis unsharded.
+  * long_500k (B=1):  nothing to shard on batch — the KV/latent TIME axis
+    shards on 'data' (sequence parallelism for the cache); heads stay on
+    'model'. SSM states are seq-length-free and just TP-shard.
+  * MLA latent has no head dim: the time axis shards on 'model' (batched)
+    or ('data','model') (B=1).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+from repro.models import lm
+from repro.runtime import steps as steps_mod
+from repro.runtime.sharding import param_shardings, resolve_spec, rules_for
+
+# encoder memory length for enc-dec decode cells (frames after the stub
+# frontend): fixed, independent of the decoder cache length.
+ENC_DEC_MEMORY_LEN = 4096
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _dp(mesh) -> P:
+    names = tuple(mesh.axis_names)
+    axes = tuple(a for a in ("pod", "data") if a in names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    """Abstract train/prefill batch with input shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    dp = _dp(mesh)
+    out: dict[str, Any] = {}
+    if cfg.is_enc_dec:
+        out["enc_embeds"] = _sds((b, s, cfg.d_model), cfg.cdtype, mesh,
+                                 P(dp, None, None))
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, P(dp, None))
+    elif cfg.frontend == "vision":
+        f = cfg.frontend_len
+        out["frontend"] = _sds((b, f, cfg.d_model), cfg.cdtype, mesh,
+                               P(dp, None, None))
+        out["tokens"] = _sds((b, s - f), jnp.int32, mesh, P(dp, None))
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, P(dp, None))
+    return out
+
+
+def _cache_spec(path, leaf, cfg: ModelConfig, mesh: Mesh, batch: int) -> P:
+    """Sharding for one cache leaf, keyed off its name/rank."""
+    names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    leafname = names[-1] if names else ""
+    mesh_names = tuple(mesh.axis_names)
+    dp = _dp(mesh)
+    has_model = "model" in mesh_names
+    mdl = "model" if has_model else None
+    shape = leaf.shape
+    cross = "cross" in names
+
+    def head_axis(dim):  # shard a head-like dim only if it tiles the axis
+        return mdl if (has_model and dim % mesh.shape["model"] == 0) else None
+
+    spec: list = [None] * len(shape)
+    # unstacked rank per leaf kind; stacked (scan) caches carry one extra
+    # leading layers axis -> off = ndim - base, never sharded.
+    if leafname in ("k", "v"):
+        base = 4
+    elif leafname == "c":
+        base = 3 if cfg.attn_type == "mla" else (4 if "mlstm" in names else 2)
+    elif leafname == "k_rope":
+        base = 3
+    elif leafname == "state":
+        base = 4
+    elif leafname in ("conv", "conv_x", "conv_bc"):
+        base = 3
+    elif leafname == "n":
+        base = 3 if "mlstm" in names else 2
+    else:  # m, h
+        base = 2
+    off = len(shape) - base
+
+    if leafname in ("k", "v"):  # (L?, B, S, K, D)
+        bdim, sdim, kdim = off, off + 1, off + 2
+        if batch > 1:
+            spec[bdim] = dp
+            spec[kdim] = head_axis(shape[kdim])
+            if spec[kdim] is None and not cross:
+                # kv heads don't tile the model axis (qwen3 kv=8 on 16):
+                # shard the cache TIME axis instead (SP for the cache)
+                spec[sdim] = (mdl if shape[sdim] % mesh.shape.get("model", 1)
+                              == 0 else None) if has_model else None
+        else:
+            if not cross:
+                spec[sdim] = "data" if "data" in mesh_names else None
+            spec[kdim] = head_axis(shape[kdim])
+    elif leafname in ("c", "k_rope") and cfg.attn_type == "mla":
+        bdim, sdim = off, off + 1
+        if batch > 1:
+            spec[bdim] = dp
+            spec[sdim] = mdl
+        else:
+            spec[sdim] = (("data", "model") if has_model and
+                          "data" in mesh_names else mdl)
+    elif leafname == "state":  # mamba (L?, B, H, P, N)
+        if batch > 1:
+            spec[off] = dp
+        spec[off + 1] = head_axis(shape[off + 1])
+    elif leafname in ("conv", "conv_x", "conv_bc"):  # (L?, B, W-1, C)
+        if batch > 1:
+            spec[off] = dp
+        spec[off + 2] = head_axis(shape[off + 2])
+    elif leafname in ("c", "n", "m", "h"):  # xlstm states
+        if batch > 1:
+            spec[off] = dp
+    return P(*spec)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, kv_len: int, mesh: Mesh,
+                enc_len: int = 0):
+    """Abstract caches (eval_shape over init_caches) with shardings."""
+    abstract = jax.eval_shape(
+        lambda: lm.init_caches(cfg, batch, kv_len, enc_len=enc_len))
+
+    def attach(path, leaf):
+        spec = _cache_spec(path, leaf, cfg, mesh, batch)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(attach, abstract)
+
+
+def state_specs(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh):
+    """Abstract TrainState with param/optimizer shardings attached."""
+    from repro.models.lm import lm_schema
+    schema = lm_schema(cfg)
+    pshard = param_shardings(cfg, schema, mesh)
+    abstract = steps_mod.abstract_train_state(cfg, tc)
+
+    def attach(leaf, shard):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=shard)
+
+    params = jax.tree.map(attach, abstract.params, pshard)
+    m = jax.tree.map(attach, abstract.opt.m, pshard)
+    v = jax.tree.map(attach, abstract.opt.v, pshard)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    ef = None
+    if abstract.ef is not None:
+        ef = jax.tree.map(attach, abstract.ef, pshard)
+    return steps_mod.TrainState(params,
+                                steps_mod.AdamWState(step, m, v), ef)
+
+
+def param_specs_only(cfg: ModelConfig, mesh: Mesh):
+    from repro.models.lm import lm_schema
+    schema = lm_schema(cfg)
+    pshard = param_shardings(cfg, schema, mesh)
+    abstract = lm.abstract(cfg)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        abstract, pshard)
+
+
+def dryrun_cell(arch: str, shape_name: str, mesh: Mesh, *,
+                tc: TrainConfig | None = None, cfg: ModelConfig | None = None):
+    """Returns (step_fn, example_args, donate_argnums) for one dry-run cell."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    tc = tc or TrainConfig()
+
+    if shape.kind == "train":
+        step = steps_mod.build_train_step(cfg, tc)
+        state = state_specs(cfg, tc, mesh)
+        batch = batch_specs(cfg, shape, mesh)
+        # new state inherits the input state's shardings (donated buffers)
+        state_sh = jax.tree.map(lambda sds: sds.sharding, state)
+        return (step, (state, batch), (0,),
+                {"out_shardings": (state_sh, None)})
+
+    if shape.kind == "prefill":
+        step = steps_mod.build_prefill_step(cfg)
+        params = param_specs_only(cfg, mesh)
+        batch = batch_specs(cfg, shape, mesh)
+        b, s = shape.global_batch, shape.seq_len
+        enc_len = s if cfg.is_enc_dec else 0
+        # explicit out_shardings for the returned caches: without them XLA
+        # replicates the cache across 'model' when heads are unshardable
+        cache_sh = jax.tree.map(lambda sds: sds.sharding,
+                                cache_specs(cfg, b, s, mesh, enc_len=enc_len))
+        logits_sh = NamedSharding(mesh, P(_dp(mesh), None))
+        return (step, (params, batch), (),
+                {"out_shardings": (logits_sh, cache_sh)})
+
+    # decode: one new token against a kv_len cache
+    b = shape.global_batch
+    kv_len = shape.seq_len
+    enc_len = ENC_DEC_MEMORY_LEN if cfg.is_enc_dec else 0
+    step = steps_mod.build_decode_step(cfg, kv_len=kv_len)
+    params = param_specs_only(cfg, mesh)
+    dp = _dp(mesh)
+    token = _sds((b, 1), jnp.int32, mesh, P(dp if b > 1 else None, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    caches = cache_specs(cfg, b, kv_len, mesh, enc_len=enc_len)
+    cache_sh = jax.tree.map(lambda sds: sds.sharding, caches)
+    logits_sh = NamedSharding(mesh, P(dp if b > 1 else None, None))
+    return (step, (params, token, pos, caches), (3,),
+            {"out_shardings": (logits_sh, cache_sh)})

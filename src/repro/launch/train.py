@@ -1,0 +1,64 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --preset smoke \
+        --steps 50 --workdir /tmp/run1
+
+On a real TPU slice the same entrypoint runs the full config with the
+production mesh (--mesh pod); on this CPU container use the reduced
+presets. Lease seconds > 0 exercises chained executor semantics.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import TrainConfig
+from repro.data.synthetic import lm_batch
+from repro.runtime import driver
+from repro.runtime.sharding import rules_for, use_rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b", help=f"one of {ARCHS}")
+    ap.add_argument("--preset", default="smoke",
+                    choices=["smoke", "full"],
+                    help="smoke: reduced config for CPU; full: the real "
+                         "config (TPU slice)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--lease-seconds", type=float, default=0.0)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--workdir", default="/tmp/flintjax_run")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.preset == "smoke":
+        cfg = cfg.reduced()
+    tc = TrainConfig(total_steps=args.steps, learning_rate=args.lr,
+                     warmup_steps=max(5, args.steps // 20),
+                     checkpoint_every=max(5, args.steps // 10),
+                     lease_seconds=args.lease_seconds,
+                     grad_compression=args.grad_compression,
+                     microbatches=args.microbatches)
+    with use_rules(rules_for(cfg)):
+        reports = driver.train_with_restarts(
+            cfg, tc, workdir=args.workdir,
+            batch_fn=lambda i: lm_batch(tc.seed, i, args.batch, args.seq,
+                                        cfg.vocab_size),
+            verbose=True, max_restarts=1000)
+    r = reports[-1]
+    print(f"status={r.status} end_step={r.end_step} leases={len(reports)}")
+    if r.metrics:
+        print(f"final loss={r.metrics[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,387 @@
+"""Attention variants: GQA (with qk-norm / bias / sliding window) and MLA.
+
+Three execution paths per variant:
+
+* ``full``    — materialized scores; used for short sequences (train_4k).
+* ``chunked`` — pure-JAX online-softmax scan over KV chunks; memory O(S*C)
+                instead of O(S^2); used for long prefill in the dry-run and
+                anywhere Pallas is unavailable (CPU hosts).
+* ``pallas``  — the flash-attention TPU kernel in repro/kernels (TPU target;
+                validated under interpret=True in tests).
+
+Decode reads a cache: GQA caches (k, v); MLA caches the 512-d latent +
+shared rope key (the paper-era "cache the compressed thing" optimization),
+with an optional weight-absorbed score path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import P
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, rmsnorm_heads
+
+NEG_INF = -1e30
+
+
+# =================================================================== GQA
+
+
+def gqa_schema(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    s = {
+        "w_q": P((d, h, hd), ("w_embed", "w_heads", None)),
+        "w_k": P((d, k, hd), ("w_embed", "w_kv_heads", None)),
+        "w_v": P((d, k, hd), ("w_embed", "w_kv_heads", None)),
+        "w_o": P((h, hd, d), ("w_heads", None, "w_embed")),
+    }
+    if cfg.attn_bias:
+        s["b_q"] = P((h, hd), ("w_heads", None), "zeros")
+        s["b_k"] = P((k, hd), ("w_kv_heads", None), "zeros")
+        s["b_v"] = P((k, hd), ("w_kv_heads", None), "zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = P((hd,), (None,), "ones")
+        s["k_norm"] = P((hd,), (None,), "ones")
+    del cross
+    return s
+
+
+def _project_qkv(params, x, kv_x, cfg: ModelConfig, q_pos, kv_pos):
+    """Project + (optionally) bias/norm/rope q, k, v."""
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"].astype(x.dtype))
+    k = jnp.einsum("bsd,dke->bske", kv_x, params["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,dke->bske", kv_x, params["w_v"].astype(x.dtype))
+    if cfg.attn_bias:
+        q = q + params["b_q"].astype(x.dtype)
+        k = k + params["b_k"].astype(x.dtype)
+        v = v + params["b_v"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm_heads(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_heads(params["k_norm"], k, cfg.norm_eps)
+    if q_pos is not None:  # rope (self-attention); cross-attn passes None
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos, kv_pos, causal: bool, window: int) -> jax.Array:
+    """(B, Sq, Skv) additive mask. q_pos/kv_pos: (B, S)."""
+    d = q_pos[:, :, None] - kv_pos[:, None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa_full(q, k, v, mask_bias):
+    """q:(B,Sq,H,D) k:(B,Skv,K,D) v:(B,Skv,K,Dv); grouped-query attention.
+    Dv may differ from D (MLA)."""
+    b, sq, h, dh = q.shape
+    kk = k.shape[2]
+    g = h // kk
+    q = q.reshape(b, sq, kk, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    scores = scores + mask_bias[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def _sdpa_chunked(q, k, v, q_pos, kv_pos, causal, window, chunk=512):
+    """Memory-efficient attention: scan over QUERY chunks with per-step
+    remat. K/V are loop-invariant (saved once); each step materializes only
+    a (B, heads, chunk, Skv) score block and recomputes it in the backward
+    pass — flash-attention memory semantics in pure JAX, with no
+    O(S^2/chunk) stacked scan carries."""
+    b, sq, h, dh = q.shape
+    dv = v.shape[-1]
+    kk = k.shape[2]
+    g = h // kk
+    nchunks = -(-sq // chunk)
+    pad = nchunks * chunk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-(10**9))
+    qc = q.reshape(b, nchunks, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(b, nchunks, chunk).transpose(1, 0, 2)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        qb, pb = xs  # (B, C, H, D), (B, C)
+        qg = qb.reshape(b, chunk, kk, g, dh)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+        d = pb[:, None, None, :, None] - kv_pos[:, None, None, None, :]
+        ok = jnp.ones(d.shape, bool)
+        if causal:
+            ok &= d >= 0
+        if window:
+            ok &= d < window
+        s = jnp.where(ok, s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(v.dtype), v)
+        out = pv.astype(jnp.float32) / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.transpose(0, 3, 1, 2, 4).reshape(
+            b, chunk, h, dv).astype(qb.dtype)
+
+    _, out = jax.lax.scan(step, (), (qc, pc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * chunk, h, dv)
+    return out[:, :sq]
+
+
+# chunked path kicks in above this many KV positions (keeps train_4k on the
+# fused-friendly full path, forces prefill_32k+ onto O(S*C) memory).
+CHUNKED_THRESHOLD = 8_192
+
+
+def gqa_attend(params, x, cfg: ModelConfig, *, positions, causal=True,
+               kv_x=None, kv_positions=None, attn_impl: str = "auto"):
+    """Full-sequence (train/prefill) attention. Returns (out, kv) so callers
+    may build a cache from kv."""
+    cross = kv_x is not None
+    kv_x = x if kv_x is None else kv_x
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project_qkv(params, x, kv_x, cfg,
+                           None if cross else positions,
+                           None if cross else kv_positions)
+    window = cfg.sliding_window
+    skv = k.shape[1]
+    if attn_impl == "auto":
+        attn_impl = "chunked" if skv > CHUNKED_THRESHOLD else "full"
+    if attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal and not cross,
+                                   window=window)
+    elif attn_impl == "chunked":
+        out = _sdpa_chunked(q, k, v, positions, kv_positions,
+                            causal and not cross, window)
+    else:
+        mb = _mask_bias(positions, kv_positions, causal and not cross, window)
+        out = _sdpa_full(q, k, v, mb)
+    y = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(x.dtype))
+    return y, (k, v)
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """SWA archs roll a window-sized cache; full attention keeps max_len."""
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    k, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, length, k, hd), dtype),
+        "v": jnp.zeros((batch, length, k, hd), dtype),
+    }
+
+
+def gqa_decode(params, x, cache, pos, cfg: ModelConfig, *, kv_len):
+    """One-token decode. x: (B, 1, d). pos: scalar int32 current position.
+    kv_len: static max positions represented in the cache."""
+    q, k, v = _project_qkv(
+        params, x, x, cfg,
+        jnp.broadcast_to(pos, (x.shape[0], 1)),
+        jnp.broadcast_to(pos, (x.shape[0], 1)),
+    )
+    length = cache["k"].shape[1]
+    rolling = bool(cfg.sliding_window) and length < kv_len  # static
+    slot = pos % length if rolling else jnp.minimum(pos, length - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    # positions held in each cache slot (for masking): rolling for SWA.
+    idx = jnp.arange(length)
+    if rolling:
+        base = pos - (pos % length)
+        slot_pos = jnp.where(idx <= pos % length, base + idx, base - length + idx)
+    else:
+        slot_pos = idx
+    valid = slot_pos <= pos
+    if cfg.sliding_window:
+        valid &= slot_pos > pos - cfg.sliding_window
+    b, _, h, dh = q.shape
+    kk = ck.shape[2]
+    g = h // kk
+    qg = q.reshape(b, 1, kk, g, dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, ck).astype(jnp.float32)
+    s = s / jnp.sqrt(dh).astype(jnp.float32)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, cv).reshape(b, 1, h, dh)
+    y = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(x.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+# =================================================================== MLA
+
+
+def mla_schema(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope_d = cfg.resolved_head_dim, cfg.rope_head_dim
+    vdim = cfg.resolved_v_head_dim
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    s = {
+        # KV joint compression: d -> latent(r_kv) + shared rope key
+        "w_dkv": P((d, r_kv + rope_d), ("w_embed", None)),
+        "kv_norm": P((r_kv,), (None,), "ones"),
+        "w_uk": P((r_kv, h, nope), (None, "w_heads", None)),
+        "w_uv": P((r_kv, h, vdim), (None, "w_heads", None)),
+        "w_o": P((h, vdim, d), ("w_heads", None, "w_embed")),
+    }
+    if r_q:
+        s["w_dq"] = P((d, r_q), ("w_embed", None))
+        s["q_norm"] = P((r_q,), (None,), "ones")
+        s["w_uq"] = P((r_q, h, nope + rope_d), (None, "w_heads", None))
+    else:
+        s["w_q"] = P((d, h, nope + rope_d), ("w_embed", "w_heads", None))
+    return s
+
+
+def _mla_q(params, x, cfg: ModelConfig, positions):
+    from repro.models.layers import rmsnorm
+    nope, rope_d = cfg.resolved_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(x.dtype))
+        cq = rmsnorm({"scale": params["q_norm"]}, cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,rhe->bshe", cq, params["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    del rope_d
+    return q_nope, q_rope
+
+
+def _mla_latent(params, x, cfg: ModelConfig, positions):
+    from repro.models.layers import rmsnorm
+    r_kv = cfg.kv_lora_rank
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(x.dtype))
+    c, k_rope = ckv[..., :r_kv], ckv[..., r_kv:]
+    c = rmsnorm({"scale": params["kv_norm"]}, c, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c, k_rope
+
+
+def mla_attend(params, x, cfg: ModelConfig, *, positions, attn_impl="auto"):
+    """Prefill/train MLA.
+
+    The per-head key never materializes as concat(k_nope, rope(k)) — under
+    TP that concat mixes a head-sharded tensor with a broadcast one and
+    GSPMD reshards the full (B, S, H, D) key across 'model' (measured:
+    ~1.2 TiB/device/step of all-gather on deepseek-v2 train_4k). Instead
+    the score splits into two head-sharded einsums:
+        q.k = q_nope . k_nope + q_rope . k_rope.
+    """
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)
+    c, k_rope = _mla_latent(params, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhe->bshe", c, params["w_uv"].astype(x.dtype))
+    skv = k_nope.shape[1]
+    if attn_impl == "auto":
+        attn_impl = "chunked" if skv > CHUNKED_THRESHOLD else "full"
+    if attn_impl == "chunked":
+        # long prefill (forward-only): the concat costs one bf16 gather per
+        # layer, while split-score inside the q-chunk scan reshards per
+        # step — measured 3x worse on deepseek-v2 prefill_32k. The split
+        # form wins where it matters: training, where the concat's f32
+        # cotangent resharding dominates.
+        h = cfg.n_heads
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                    k_rope.shape[:2] + (h, k_rope.shape[-1]))
+        k = jnp.concatenate([k_nope, k_rope_h], -1)
+        out = _sdpa_chunked(q, k, v, positions, positions, True, 0)
+    else:
+        out = _mla_sdpa(q_nope, q_rope, k_nope, k_rope, v, positions,
+                        cfg, chunked=False)
+    y = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(x.dtype))
+    return y, (c, k_rope)
+
+
+def _mla_sdpa(q_nope, q_rope, k_nope, k_rope, v, positions, cfg: ModelConfig,
+              *, chunked: bool, chunk: int = 512):
+    """Split-score MLA attention; rope key stays a (B, S, E) broadcast."""
+    b, sq, h, dn = q_nope.shape
+    scale = 1.0 / jnp.sqrt(dn + cfg.rope_head_dim).astype(jnp.float32)
+
+    def block(qn, qr, pos_q):  # qn: (b, C, h, dn); attends over full kv
+        s = jnp.einsum("bshd,bthd->bhst", qn, k_nope).astype(jnp.float32)
+        s = s + jnp.einsum("bshe,bte->bhst", qr, k_rope).astype(jnp.float32)
+        s = s * scale
+        causal_ok = pos_q[:, None, :, None] >= positions[:, None, None, :]
+        s = jnp.where(causal_ok, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhst,bthd->bshd", w, v)
+
+    if not chunked:
+        return block(q_nope, q_rope, positions)
+
+    nchunks = -(-sq // chunk)
+    pad = nchunks * chunk - sq
+    if pad:
+        q_nope = jnp.pad(q_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_rope = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions_q = jnp.pad(positions, ((0, 0), (0, pad)),
+                              constant_values=-(10**9))
+    else:
+        positions_q = positions
+    qnc = q_nope.reshape(b, nchunks, chunk, h, dn).transpose(1, 0, 2, 3, 4)
+    qrc = q_rope.reshape(b, nchunks, chunk, h, -1).transpose(1, 0, 2, 3, 4)
+    pc = positions_q.reshape(b, nchunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        qn, qr, pq = xs
+        return carry, block(qn, qr, pq)
+
+    _, out = jax.lax.scan(step, (), (qnc, qrc, pc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * chunk, h, -1)
+    return out[:, :sq]
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {
+        "c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+    }
+
+
+def mla_decode(params, x, cache, pos, cfg: ModelConfig, *, absorb=True):
+    """One-token MLA decode against the latent cache.
+
+    ``absorb=True`` folds W_uk into the query and attends directly in latent
+    space (never materializing per-head K/V for the whole cache) — DeepSeek's
+    decode-time optimization; ``absorb=False`` is the naive expand path used
+    as the §Perf baseline.
+    """
+    b = x.shape[0]
+    posb = jnp.broadcast_to(pos, (b, 1))
+    q_nope, q_rope = _mla_q(params, x, cfg, posb)
+    c_new, kr_new = _mla_latent(params, x, cfg, posb)
+    ck = jax.lax.dynamic_update_slice(cache["c"], c_new, (0, pos, 0))
+    ckr = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, pos, 0))
+    length = ck.shape[1]
+    valid = jnp.arange(length) <= pos
+    scale = 1.0 / jnp.sqrt(cfg.resolved_head_dim + cfg.rope_head_dim).astype(jnp.float32)
+    if absorb:
+        # q_lat[b,h,r] = q_nope . W_uk ; scores over latent cache directly
+        q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, params["w_uk"].astype(x.dtype))
+        s = jnp.einsum("bshr,btr->bhst", q_lat, ck).astype(jnp.float32)
+        s = s + jnp.einsum("bshe,bte->bhst", q_rope, ckr).astype(jnp.float32)
+        s = jnp.where(valid[None, None, None, :], s * scale, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btr->bshr", w, ck)
+        out = jnp.einsum("bshr,rhe->bshe", o_lat, params["w_uv"].astype(x.dtype))
+    else:
+        k_nope = jnp.einsum("btr,rhe->bthe", ck, params["w_uk"].astype(x.dtype))
+        v = jnp.einsum("btr,rhe->bthe", ck, params["w_uv"].astype(x.dtype))
+        s = jnp.einsum("bshe,bthe->bhst", q_nope, k_nope).astype(jnp.float32)
+        s = s + jnp.einsum("bshe,bte->bhst", q_rope, ckr).astype(jnp.float32)
+        s = jnp.where(valid[None, None, None, :], s * scale, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthe->bshe", w, v)
+    y = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(x.dtype))
+    return y, {"c": ck, "k_rope": ckr}

@@ -1,0 +1,116 @@
+"""Shared layer primitives: norms, RoPE, SwiGLU MLP, embeddings.
+
+All layers follow the same convention: ``<layer>_schema(cfg) -> {name: P}``
+and ``<layer>(params, x, ...) -> y``.  Weights use logical axis names that
+:mod:`repro.runtime.sharding` resolves to mesh axes:
+
+  w_embed   — the d_model dim of big weights (FSDP-sharded on 'data')
+  w_vocab   — vocab dim (TP on 'model')
+  w_heads / w_kv_heads / w_mlp / w_experts — TP/EP dims (on 'model')
+  None      — replicated
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import P
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------- norms
+
+
+def rmsnorm_schema(dim: int) -> dict:
+    return {"scale": P((dim,), (None,), "ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_heads(scale, x, eps: float = 1e-5):
+    """Per-head qk-norm (qwen3): x is (..., head_dim), scale (head_dim,)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with even D; positions: (B, S) int32.
+
+    Angles/cos/sin are computed in f32 (large positions), but the rotation
+    itself runs in x's dtype: an f32 rotation leaks f32 cotangents into
+    every attention-weight gradient downstream (measured: f32 dW_qkv
+    all-reduces on command-r-plus), doubling gradient-reduction bytes.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)  # (B, S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def swiglu_schema(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    return {
+        "w_gate": P((d, f), ("w_embed", "w_mlp")),
+        "w_up": P((d, f), ("w_embed", "w_mlp")),
+        "w_down": P((f, d), ("w_mlp", "w_embed")),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------- embedding
+
+
+def embedding_schema(cfg: ModelConfig) -> dict:
+    # rows padded to a shardable count (cfg.padded_vocab); ids never index
+    # the padding, and unembed slices logits back to vocab_size.
+    return {"table": P((cfg.padded_vocab, cfg.d_model),
+                       ("w_vocab", "w_embed"), "embed")}
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    return params["table"].astype(cfg.cdtype)[tokens]
+
+
+def unembed_schema(cfg: ModelConfig) -> dict:
+    return {"w_out": P((cfg.d_model, cfg.padded_vocab),
+                       ("w_embed", "w_vocab"))}
+
+
+def unembed(params, x, cfg: ModelConfig):
+    # bf16 operands with f32 accumulation: logits stay f32 for a stable
+    # softmax at large vocab, but the (huge, FSDP-gathered) vocab matrix
+    # moves at bf16 width instead of being upcast before the matmul
+    logits = jnp.einsum("bsd,dv->bsv", x, params["w_out"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]
+    return logits

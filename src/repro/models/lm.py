@@ -1,0 +1,257 @@
+"""Top-level LM API: schema/init, loss (chunked CE), prefill, decode.
+
+Pure functions over param pytrees; everything works under ``jax.eval_shape``
+so the multi-pod dry-run never allocates.
+
+Input batch conventions (matching ``launch.specs.input_specs``):
+  * LM:      {"tokens": (B, S) int32}
+  * VLM:     {"frontend": (B, F, d) cdtype, "tokens": (B, S-F) int32}
+  * enc-dec: {"enc_embeds": (B, Se, d) cdtype, "tokens": (B, Sd) int32}
+Decode:      token (B, 1) int32, pos scalar int32, caches pytree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import param as pm
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import (embed, embedding_schema, rmsnorm,
+                                 rmsnorm_schema, unembed, unembed_schema)
+
+# tokens per CE chunk are sized so B*chunk*vocab stays bounded (~8G f32
+# elements globally, ~134 MB/chip on the production mesh) — big vocabs never
+# materialize (B, S, V), while chunks stay large enough that the per-chunk
+# re-gather of the (sharded) unembed weight amortizes (a 2^29 budget cost
+# command-r-plus 585 gathers of the f32 vocab matrix per step).
+_CE_BUDGET = 1 << 33
+
+
+def lm_schema(cfg: ModelConfig) -> dict:
+    s = {"embed": embedding_schema(cfg), "stack": tfm.stack_schema_for(cfg),
+         "ln_f": rmsnorm_schema(cfg.d_model)}
+    if cfg.is_enc_dec:
+        s["encoder"] = {
+            "blocks": pm.stack_schema(
+                tfm.decoder_block_schema(cfg, use_moe=False),
+                cfg.encoder_layers),
+            "ln_f": rmsnorm_schema(cfg.d_model),
+        }
+    if not cfg.tie_embeddings:
+        s["unembed"] = unembed_schema(cfg)
+    return s
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    return pm.init_params(lm_schema(cfg), key, cfg.pdtype)
+
+
+def abstract(cfg: ModelConfig) -> dict:
+    return pm.abstract_params(lm_schema(cfg), cfg.pdtype)
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return pm.param_count(lm_schema(cfg))
+
+
+# ----------------------------------------------------------------- fwd
+
+
+def _encode(params, batch, cfg: ModelConfig, attn_impl):
+    enc = batch["enc_embeds"].astype(cfg.cdtype)
+    pos = jnp.broadcast_to(jnp.arange(enc.shape[1]), enc.shape[:2])
+
+    def body(lp, x, i, extra):
+        x, _, a, d = tfm.decoder_block_apply(lp, x, pos, cfg, use_moe=False,
+                                             causal=False, attn_impl=attn_impl)
+        return x, a, d, extra
+
+    x, _, _, _ = tfm._scan_apply(body, params["encoder"]["blocks"], enc,
+                                 cfg.encoder_layers, cfg)
+    return rmsnorm(params["encoder"]["ln_f"], x, cfg.norm_eps), pos
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Returns (x, positions, n_prefix) where n_prefix = frontend positions
+    carrying no next-token loss."""
+    tok = embed(params["embed"], batch["tokens"], cfg)
+    if cfg.frontend and "frontend" in batch:
+        front = batch["frontend"].astype(cfg.cdtype)
+        x = jnp.concatenate([front, tok], axis=1)
+        n_prefix = front.shape[1]
+    else:
+        x, n_prefix = tok, 0
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    return x, pos, n_prefix
+
+
+def hidden_states(params, batch, cfg: ModelConfig, attn_impl="auto"):
+    """Full-sequence hidden states. Returns (h, n_prefix, aux, drop)."""
+    memory = memory_pos = None
+    if cfg.is_enc_dec:
+        memory, memory_pos = _encode(params, batch, cfg, attn_impl)
+    x, pos, n_prefix = _embed_inputs(params, batch, cfg)
+    x, aux, drop = tfm.apply_stack(params["stack"], x, pos, cfg,
+                                   memory=memory, memory_positions=memory_pos,
+                                   attn_impl=attn_impl)
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps), n_prefix, aux, drop
+
+
+def _unembed_params(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {"w_out": params["embed"]["table"].T}
+    return params["unembed"]
+
+
+def forward(params, batch, cfg: ModelConfig, attn_impl="auto"):
+    """Full logits — smoke tests / tiny models only (materializes (B,S,V))."""
+    h, n_prefix, aux, drop = hidden_states(params, batch, cfg, attn_impl)
+    return unembed(_unembed_params(params, cfg), h, cfg), n_prefix, aux, drop
+
+
+def _chunked_ce(uparams, h, labels, cfg: ModelConfig):
+    """Cross-entropy without materializing (B, S, V). labels < 0 are masked."""
+    b, t, _ = h.shape
+    chunk = max(1, min(t, _CE_BUDGET // max(1, b * cfg.vocab_size)))
+    while t % chunk:
+        chunk -= 1
+    nc = t // chunk
+    hc = h.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute the (b, chunk, V) logits block in backward
+    def body(carry, xs):
+        hx, lx = xs
+        logits = unembed(uparams, hx, cfg)  # (b, chunk, V) f32
+        lz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lx, 0)[..., None], axis=-1)[..., 0]
+        mask = (lx >= 0).astype(jnp.float32)
+        loss, cnt = carry
+        return (loss + jnp.sum((lz - ll) * mask), cnt + jnp.sum(mask)), None
+
+    (loss, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                  (hc, lc))
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, attn_impl="auto"):
+    """Next-token CE (+ MoE aux). Returns (loss, metrics)."""
+    h, n_prefix, aux, drop = hidden_states(params, batch, cfg, attn_impl)
+    tokens = batch["tokens"]
+    # predictions for token i come from hidden state at position n_prefix+i-1
+    start = n_prefix  # first token position in the packed sequence
+    if start:
+        h_pred = jax.lax.slice_in_dim(h, start - 1, h.shape[1] - 1, axis=1)
+        labels = tokens
+    else:
+        h_pred, labels = h[:, :-1], tokens[:, 1:]
+    if "loss_mask" in batch:
+        m = batch["loss_mask"] if start else batch["loss_mask"][:, 1:]
+        labels = jnp.where(m > 0, labels, -1)
+    ce = _chunked_ce(_unembed_params(params, cfg), h_pred, labels, cfg)
+    loss = ce + aux
+    return loss, {"ce": ce, "moe_aux": aux, "moe_drop_frac": drop}
+
+
+# ------------------------------------------------------------- serving
+
+
+def prefill(params, batch, cfg: ModelConfig, attn_impl="auto"):
+    """Returns (last_token_logits (B, V), caches)."""
+    memory = memory_pos = None
+    if cfg.is_enc_dec:
+        memory, memory_pos = _encode(params, batch, cfg, attn_impl)
+    x, pos, _ = _embed_inputs(params, batch, cfg)
+    x, caches = tfm.prefill_stack(params["stack"], x, pos, cfg,
+                                  memory=memory, memory_positions=memory_pos,
+                                  attn_impl=attn_impl)
+    h = rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = unembed(_unembed_params(params, cfg), h, cfg)
+    return logits[:, 0], caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    return tfm.init_stack_cache(cfg, batch, max_len, cfg.cdtype,
+                                enc_len=enc_len)
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig, *, kv_len: int):
+    """token: (B, 1) int32; pos: scalar int32. Returns (logits (B,V), caches)."""
+    x = embed(params["embed"], token, cfg)
+    x, caches = tfm.decode_stack(params["stack"], x, caches, pos, cfg,
+                                 kv_len=kv_len)
+    h = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(_unembed_params(params, cfg), h, cfg)
+    return logits[:, 0], caches
+
+
+def generate(params, batch, cfg: ModelConfig, n_steps: int, *,
+             temperature: float = 0.0, key=None):
+    """Greedy/sampled generation driven by lax.scan (for tests/examples)."""
+    logits, caches = prefill(params, batch, cfg)
+    start = batch["tokens"].shape[1] + (
+        batch["frontend"].shape[1] if (cfg.frontend and "frontend" in batch)
+        else 0)
+    kv_len = start + n_steps
+
+    # prefill caches have length `start` (or the SWA window); decode needs
+    # room for n_steps more — grow along the time axis where applicable.
+    caches = _grow_caches(caches, cfg, kv_len)
+
+    def pick(logits, k):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, logits / temperature).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tok0 = pick(logits, key)
+
+    def body(carry, i):
+        tok, caches, key = carry
+        key, sub = jax.random.split(key)
+        logits, caches = decode_step(params, tok[:, None], start + i, caches,
+                                     cfg, kv_len=kv_len)
+        nxt = pick(logits, sub)
+        return (nxt, caches, key), nxt
+
+    (_, caches, _), toks = jax.lax.scan(
+        body, (tok0, caches, key), jnp.arange(n_steps - 1))
+    return jnp.concatenate([tok0[:, None], toks.T], axis=1)
+
+
+def _grow_caches(caches, cfg: ModelConfig, kv_len: int):
+    """Pad attention caches along their time axis up to kv_len (no-op for
+    state caches and rolling SWA windows)."""
+
+    def grow(path, a):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        leaf = names[-1] if names else ""
+        if "cross" in names:  # encoder memory is fixed-length — never grow
+            return a
+        if leaf in ("k", "v") and a.ndim == 5:  # (L, B, S, K, D) stacked
+            s = a.shape[2]
+            tgt = min(kv_len, cfg.sliding_window) if cfg.sliding_window else kv_len
+            if s < tgt:
+                padding = [(0, 0)] * a.ndim
+                padding[2] = (0, tgt - s)
+                return jnp.pad(a, padding)
+        if leaf in ("k", "v") and a.ndim == 4:  # unstacked (B, S, K, D)
+            s = a.shape[1]
+            tgt = min(kv_len, cfg.sliding_window) if cfg.sliding_window else kv_len
+            if s < tgt:
+                padding = [(0, 0)] * a.ndim
+                padding[1] = (0, tgt - s)
+                return jnp.pad(a, padding)
+        if cfg.attn_type == "mla" and leaf in ("c", "k_rope"):
+            axis = a.ndim - 2  # (L, B, S, R) stacked or (B, S, R) prefix
+            s = a.shape[axis]
+            if s < kv_len:
+                padding = [(0, 0)] * a.ndim
+                padding[axis] = (0, kv_len - s)
+                return jnp.pad(a, padding)
+        return a
+
+    return jax.tree_util.tree_map_with_path(grow, caches)

@@ -1,0 +1,166 @@
+"""Mixture-of-Experts with GShard-style grouped dispatch.
+
+This is the in-model analogue of Flint's queue shuffle (DESIGN.md C2):
+tokens are messages, experts are partitions, the capacity factor is the
+queue's bounded buffer (overflow tokens are dropped and carried by the
+residual — exactly the overflow-flush semantics of the paper's executors),
+and the dispatch/combine einsums lower to `all_to_all` on the ICI when the
+expert dim is sharded on the 'model' mesh axis (EP).
+
+Two expert-compute paths:
+  * einsum — dispatch tensors + dense per-expert matmuls (GShard);
+  * gmm    — expert-sorted grouped matmul backed by the Pallas kernel
+             (TPU target; ref path on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import P
+from repro.configs.base import ModelConfig
+from repro.models.layers import swiglu, swiglu_schema
+
+
+def moe_schema(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    s = {
+        "w_router": P((d, e), ("w_embed", None), scale=0.02),
+        # expert-internal width gets its own logical axis: EP archs (deepseek)
+        # shard the expert dim and replicate f; TP-in-expert archs (mixtral,
+        # 8 experts < mesh model size) replicate experts and shard f.
+        "w_gate": P((e, d, f), ("w_experts", "w_embed", "w_expert_mlp")),
+        "w_up": P((e, d, f), ("w_experts", "w_embed", "w_expert_mlp")),
+        "w_down": P((e, f, d), ("w_experts", "w_expert_mlp", "w_embed")),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = swiglu_schema(cfg, cfg.n_shared_experts * cfg.moe_d_ff)
+    return s
+
+
+def _router(params, x, cfg: ModelConfig):
+    """x: (..., d) -> (gates, idx) both (..., top_k); gates f32.
+
+    bf16 inputs with f32 accumulation: casting x to f32 first makes GSPMD
+    move f32 activations (2x the bytes) when it reshards around the router.
+    """
+    logits = jnp.einsum("...d,de->...e", x, params["w_router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return probs, gates, idx
+
+
+def _aux_loss(probs, idx, cfg: ModelConfig):
+    """Switch/GShard load-balancing loss."""
+    e = cfg.n_experts
+    me = jnp.mean(probs.reshape(-1, e), axis=0)
+    chosen = jax.nn.one_hot(idx.reshape(-1, idx.shape[-1]), e).sum(1)
+    ce = jnp.mean(chosen, axis=0) / cfg.top_k
+    return e * jnp.sum(me * ce)
+
+
+def _capacity(group_len: int, cfg: ModelConfig) -> int:
+    c = int(group_len * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    # keep MXU-friendly and never below top_k
+    return max(cfg.top_k, -(-c // 8) * 8)
+
+
+def moe_apply(params, x, cfg: ModelConfig, group_size: int = 1024):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Tokens are flattened and re-grouped to bounded 'queues' of
+    ``group_size`` so the dispatch one-hots stay O(T * k * cf * group_size)
+    rather than O(T * S) — the bounded-buffer trick.
+    """
+    b, s, d = x.shape
+    t = b * s
+    gs = min(group_size, t)
+    while t % gs:
+        gs //= 2
+    g = t // gs
+    xt = x.reshape(g, gs, d)
+
+    probs, gates, idx = _router(params, xt, cfg)  # (g, gs, k)
+    aux = _aux_loss(probs, idx, cfg) * cfg.router_aux_coef
+
+    e, cap = cfg.n_experts, _capacity(gs, cfg)
+    # queue slot of each (token, k) assignment within its expert's queue.
+    # top_k returns DISTINCT experts per token, so each (token, expert)
+    # pair has at most one assignment and the k axis collapses to a 0/1
+    # (g, gs, e) membership BEFORE the cumsum — keeping the routing state
+    # O(T*e) (the (g, gs*k, e) form costs top_k x more bytes), and letting
+    # the expert dim carry EP sharding through the whole dispatch chain.
+    from repro.runtime.sharding import constrain
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (g, gs, k, e)
+    onehot_se = onehot.sum(axis=2)  # (g, gs, e) in {0, 1}
+    onehot_se = constrain(onehot_se, "act_group", None, "act_experts")
+    pos_se = jnp.cumsum(onehot_se, axis=1) * onehot_se - 1  # (g, gs, e)
+    gate_se = jnp.einsum("gsk,gske->gse", gates.astype(x.dtype),
+                         onehot.astype(x.dtype))
+    # one_hot of -1 (unrouted) or >=cap (queue overflow -> dropped) is all-0
+    disp = jax.nn.one_hot(pos_se, cap, dtype=x.dtype)  # (g, gs, e, cap)
+    disp = constrain(disp, "act_group", None, "act_experts", None)
+    comb = disp * gate_se[..., None]
+    drop_frac = 1.0 - jnp.sum(disp) / (g * gs * cfg.top_k)
+
+    # dispatch: (g, e, cap, d) — this einsum is the all_to_all under EP
+    ex_in = jnp.einsum("gsec,gsd->gecd", disp, xt)
+    ex_in = constrain(ex_in, "act_group", "act_experts", None, None)
+    if cfg.moe_impl == "gmm":
+        ex_out = _experts_gmm(params, ex_in, cfg)
+    else:
+        ex_out = _experts_einsum(params, ex_in, cfg)
+    y = jnp.einsum("gsec,gecd->gsd", comb, ex_out)  # combine (all_to_all back)
+
+    if cfg.n_shared_experts:
+        y = y + swiglu(params["shared"], xt)
+    return y.reshape(b, s, d), aux, drop_frac
+
+
+def _experts_einsum(params, ex_in, cfg: ModelConfig):
+    """ex_in: (g, e, cap, d) -> (g, e, cap, d); dense per-expert SwiGLU."""
+    wg = params["w_gate"].astype(ex_in.dtype)
+    wu = params["w_up"].astype(ex_in.dtype)
+    wd = params["w_down"].astype(ex_in.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ex_in, wg))
+    h = h * jnp.einsum("gecd,edf->gecf", ex_in, wu)
+    return jnp.einsum("gecf,efd->gecd", h, wd)
+
+
+def _experts_gmm(params, ex_in, cfg: ModelConfig):
+    """Grouped-matmul expert compute (Pallas kernel on TPU, ref on CPU)."""
+    from repro.kernels import ops as kops
+    g, e, cap, d = ex_in.shape
+    flat = ex_in.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+    sizes = jnp.full((e,), g * cap, jnp.int32)
+    h = jax.nn.silu(kops.grouped_matmul(flat, params["w_gate"].astype(flat.dtype), sizes))
+    h = h * kops.grouped_matmul(flat, params["w_up"].astype(flat.dtype), sizes)
+    out = kops.grouped_matmul(h, params["w_down"].astype(flat.dtype), sizes)
+    return out.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
+
+
+def moe_decode(params, x, cfg: ModelConfig):
+    """Decode-time MoE on a (B, 1, d) token batch: tiny T, single group,
+    generous capacity so nothing is dropped mid-generation."""
+    b, s, d = x.shape
+    xt = x.reshape(1, b * s, d)
+    probs, gates, idx = _router(params, xt, cfg)
+    e = cfg.n_experts
+    cap = max(cfg.top_k, min(b * s, -(-b * s * cfg.top_k * 2 // e) // 8 * 8 + 8))
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)
+    flatoh = onehot.reshape(1, -1, e)
+    pos_se = (jnp.cumsum(flatoh, axis=1) * flatoh - 1).reshape(
+        1, b * s, cfg.top_k, e).max(axis=2)
+    gate_se = jnp.einsum("gsk,gske->gse", gates.astype(x.dtype),
+                         onehot.astype(x.dtype))
+    disp = jax.nn.one_hot(pos_se, cap, dtype=x.dtype)
+    comb = disp * gate_se[..., None]
+    ex_in = jnp.einsum("gsec,gsd->gecd", disp, xt)
+    ex_out = _experts_einsum(params, ex_in, cfg)
+    y = jnp.einsum("gsec,gecd->gsd", comb, ex_out)
+    if cfg.n_shared_experts:
+        y = y + swiglu(params["shared"], xt)
+    return y.reshape(b, s, d)

@@ -1,0 +1,198 @@
+"""Mamba2 (state-space duality) blocks — chunked scan for train/prefill,
+recurrent state update for decode.
+
+The chunked form computes intra-chunk interactions as attention-like
+matmuls (MXU-friendly) and carries a (H, P, N) state across chunks with a
+sequential `lax.scan`; decode carries the same state token-to-token, which
+is what makes `long_500k` a fixed-memory cell for SSM/hybrid archs.
+
+Projections are kept separate (z / x / BC / dt) rather than fused so the
+tensor-parallel shard boundaries never cut through a logical split: the
+wide d_inner tensors shard on 'model' head-aligned, while the small B/C/dt
+projections replicate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import P
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+
+def mamba2_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_state
+
+
+def mamba2_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, h, n = mamba2_dims(cfg)
+    w = cfg.ssm_conv_width
+    return {
+        "w_z": P((d, di), ("w_embed", "w_mlp")),
+        "w_x": P((d, di), ("w_embed", "w_mlp")),
+        "w_bc": P((d, 2 * n), ("w_embed", None)),
+        "w_dt": P((d, h), ("w_embed", None)),
+        "conv_x_w": P((w, di), (None, "w_mlp"), scale=0.5),
+        "conv_x_b": P((di,), ("w_mlp",), "zeros"),
+        "conv_bc_w": P((w, 2 * n), (None, None), scale=0.5),
+        "conv_bc_b": P((2 * n,), (None,), "zeros"),
+        "a_log": P((h,), (None,), "ones"),
+        "d_skip": P((h,), (None,), "ones"),
+        "dt_bias": P((h,), (None,), "zeros"),
+        "norm": P((di,), ("w_mlp",), "ones"),
+        "w_out": P((di, d), ("w_mlp", "w_embed")),
+    }
+
+
+def _projections(params, u):
+    z = jnp.einsum("bsd,de->bse", u, params["w_z"].astype(u.dtype))
+    x = jnp.einsum("bsd,de->bse", u, params["w_x"].astype(u.dtype))
+    bc = jnp.einsum("bsd,de->bse", u, params["w_bc"].astype(u.dtype))
+    dt = jnp.einsum("bsd,de->bse", u, params["w_dt"].astype(u.dtype))
+    return z, x, bc, dt
+
+
+def causal_conv(w, b, x, conv_state=None):
+    """Depthwise causal conv over time + silu. x: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    if conv_state is not None:  # decode: (B, W-1, C) rolling buffer
+        window = jnp.concatenate([conv_state, x], axis=1)  # (B, W, C)
+        out = jnp.einsum("bwc,wc->bc", window, w)[:, None, :]
+        return jax.nn.silu(out + b), window[:, 1:, :]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + b), None
+
+
+def _gated_norm(params, y, z, eps):
+    dtype = y.dtype
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + eps) * params["norm"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def mamba2_apply(params, u, cfg: ModelConfig, return_state: bool = False):
+    """Chunked SSD. u: (B, S, d) -> (B, S, d)."""
+    b, s, _ = u.shape
+    di, nh, n = mamba2_dims(cfg)
+    p = cfg.ssm_head_dim
+    lc = min(cfg.ssm_chunk, s)
+    while s % lc:
+        lc //= 2
+    nc = s // lc
+
+    z, xr, bcr, dt = _projections(params, u)
+    x, _ = causal_conv(params["conv_x_w"].astype(u.dtype),
+                       params["conv_x_b"].astype(u.dtype), xr)
+    bc, _ = causal_conv(params["conv_bc_w"].astype(u.dtype),
+                        params["conv_bc_b"].astype(u.dtype), bcr)
+    x = x.reshape(b, s, nh, p)
+    bm, cm = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (h,)
+    la = dt * a[None, None, :]  # (b, s, h) log-decay per step
+
+    # chunk views
+    xc = x.reshape(b, nc, lc, nh, p)
+    bcn = bm.reshape(b, nc, lc, n)
+    ccn = cm.reshape(b, nc, lc, n)
+    dtc = dt.reshape(b, nc, lc, nh)
+    lac = la.reshape(b, nc, lc, nh)
+    acs = jnp.cumsum(lac, axis=2)  # (b, nc, lc, h) decay from chunk start (incl.)
+
+    # ---- intra-chunk (quadratic within chunk, matmul form)
+    cb = jnp.einsum("bcin,bcjn->bcij", ccn, bcn).astype(jnp.float32)
+    seg = acs[:, :, :, None, :] - acs[:, :, None, :, :]  # (b,nc,i,j,h)
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+    m = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    w_intra = cb[..., None] * m * dtc[:, :, None, :, :]  # (b,nc,i,j,h)
+    y = jnp.einsum("bcijh,bcjhp->bcihp", w_intra.astype(u.dtype), xc)
+
+    # ---- chunk-final states and cross-chunk recurrence
+    decay_to_end = jnp.exp(acs[:, :, -1:, :] - acs)  # (b,nc,lc,h)
+    states = jnp.einsum(
+        "bclh,bclh,bclhp,bcln->bchpn",
+        decay_to_end.astype(u.dtype), dtc.astype(u.dtype), xc, bcn,
+    )
+    chunk_decay = jnp.exp(acs[:, :, -1, :]).astype(u.dtype)  # (b, nc, h)
+
+    def step(carry, xs):
+        st_in = carry  # (b, h, p, n)
+        dec, st_c = xs  # (b, h), (b, h, p, n)
+        st_out = st_in * dec[:, :, None, None] + st_c
+        return st_out, st_in
+
+    init = jnp.zeros((b, nh, p, n), u.dtype)
+    final_state, states_in = jax.lax.scan(
+        step, init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+    )
+    states_in = states_in.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+
+    # ---- cross-chunk contribution: state entering the chunk, decayed to i
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp",
+        ccn, jnp.exp(acs).astype(u.dtype), states_in,
+    )
+    y = y + y_inter
+
+    y = y + params["d_skip"].astype(u.dtype)[None, None, :, None] * xc
+    y = y.reshape(b, s, di)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(u.dtype))
+    if return_state:
+        w = cfg.ssm_conv_width
+        cache = {"state": final_state.astype(jnp.float32),
+                 "conv_x": xr[:, s - (w - 1):, :],
+                 "conv_bc": bcr[:, s - (w - 1):, :]}
+        return out, cache
+    return out
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype):
+    di, nh, n = mamba2_dims(cfg)
+    w = cfg.ssm_conv_width
+    return {
+        "state": jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, di), dtype),
+        "conv_bc": jnp.zeros((batch, w - 1, 2 * n), dtype),
+    }
+
+
+def mamba2_decode(params, u, cache, cfg: ModelConfig):
+    """One-token recurrent step. u: (B, 1, d)."""
+    b = u.shape[0]
+    di, nh, n = mamba2_dims(cfg)
+    p = cfg.ssm_head_dim
+    z, xr, bcr, dt = _projections(params, u)
+    x, conv_x = causal_conv(params["conv_x_w"].astype(u.dtype),
+                            params["conv_x_b"].astype(u.dtype), xr,
+                            conv_state=cache["conv_x"])
+    bc, conv_bc = causal_conv(params["conv_bc_w"].astype(u.dtype),
+                              params["conv_bc_b"].astype(u.dtype), bcr,
+                              conv_state=cache["conv_bc"])
+    x = x.reshape(b, nh, p)
+    bm = bc[:, 0, :n]
+    cm = bc[:, 0, n:]
+    dt = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (b, h)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a[None, :])  # (b, h)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x.astype(jnp.float32),
+                     bm.astype(jnp.float32))
+    state = cache["state"] * dec[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cm.astype(jnp.float32), state)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(u.dtype))
+    return y, {"state": state, "conv_x": conv_x, "conv_bc": conv_bc}

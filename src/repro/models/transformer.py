@@ -1,0 +1,492 @@
+"""Block wiring: residual blocks per family + scan-over-layers assembly.
+
+All stacks lower to a single `lax.scan` over stacked layer params (compact
+HLO — essential for compiling 60-80 layer models quickly on the dry-run
+host), with `jax.checkpoint` remat applied to the block body.
+
+Heterogeneous stacks:
+  * deepseek-v2: dense-MLP prefix layers are unrolled outside the MoE scan
+    (their params differ structurally);
+  * zamba2: mamba scan with a weight-shared attention block applied on a
+    cadence via `lax.cond` (shared weights enter the scan as constants);
+  * xlstm: scan over (mLSTM, sLSTM) pairs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import P, stack_schema
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm, xlstm
+from repro.models.layers import rmsnorm, rmsnorm_schema, swiglu, swiglu_schema
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------- blocks
+
+
+def decoder_block_schema(cfg: ModelConfig, *, use_moe: bool,
+                         cross: bool = False, causal: bool = True) -> dict:
+    del causal
+    s: dict[str, Any] = {"ln1": rmsnorm_schema(cfg.d_model)}
+    s["attn"] = (attn.mla_schema(cfg) if cfg.attn_type == "mla"
+                 else attn.gqa_schema(cfg))
+    if cross:
+        s["ln_x"] = rmsnorm_schema(cfg.d_model)
+        s["xattn"] = attn.gqa_schema(cfg, cross=True)
+    s["ln2"] = rmsnorm_schema(cfg.d_model)
+    s["mlp"] = moe_mod.moe_schema(cfg) if use_moe else swiglu_schema(cfg)
+    return s
+
+
+def decoder_block_apply(params, x, positions, cfg: ModelConfig, *,
+                        use_moe: bool, causal: bool = True,
+                        memory=None, memory_positions=None,
+                        attn_impl: str = "auto"):
+    """Returns (x, kv_for_cache, aux_loss, drop_frac).
+
+    kv_for_cache = {"self": ..., "cross": ...} — self is (k, v) for GQA or
+    (latent, k_rope) for MLA; cross present only under enc-dec.
+    """
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, kv_self = attn.mla_attend(params["attn"], h, cfg,
+                                     positions=positions, attn_impl=attn_impl)
+    else:
+        a, kv_self = attn.gqa_attend(params["attn"], h, cfg,
+                                     positions=positions, causal=causal,
+                                     attn_impl=attn_impl)
+    x = x + a
+    kv = {"self": kv_self}
+    if memory is not None:
+        h = rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        a, kv_cross = attn.gqa_attend(params["xattn"], h, cfg,
+                                      positions=positions,
+                                      causal=False, kv_x=memory,
+                                      kv_positions=memory_positions,
+                                      attn_impl=attn_impl)
+        kv["cross"] = kv_cross
+        x = x + a
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        m, aux, drop = moe_mod.moe_apply(params["mlp"], h, cfg)
+    else:
+        m, aux, drop = swiglu(params["mlp"], h), 0.0, 0.0
+    return x + m, kv, jnp.asarray(aux, jnp.float32), jnp.asarray(drop, jnp.float32)
+
+
+def decoder_block_decode(params, x, cache, pos, cfg: ModelConfig, *,
+                         use_moe: bool, kv_len: int, cross_cache=None):
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, new_cache = attn.mla_decode(params["attn"], h, cache, pos, cfg)
+    else:
+        a, new_cache = attn.gqa_decode(params["attn"], h, cache, pos, cfg,
+                                       kv_len=kv_len)
+    x = x + a
+    if cross_cache is not None:
+        # cross K/V precomputed at prefill; plain attention over memory
+        h = rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        a = _cross_decode(params["xattn"], h, cross_cache, cfg)
+        x = x + a
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    m = (moe_mod.moe_decode(params["mlp"], h, cfg) if use_moe
+         else swiglu(params["mlp"], h))
+    return x + m, new_cache
+
+
+def _cross_decode(params, h, cross_cache, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhe->bshe", h, params["w_q"].astype(h.dtype))
+    if cfg.attn_bias:
+        q = q + params["b_q"].astype(h.dtype)
+    k, v = cross_cache["k"], cross_cache["v"]
+    b, _, hh, dh = q.shape
+    kk = k.shape[2]
+    qg = q.reshape(b, 1, kk, hh // kk, dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    w = jax.nn.softmax(s / jnp.sqrt(dh), axis=-1).astype(h.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(b, 1, hh, dh)
+    return jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(h.dtype))
+
+
+def mamba_block_schema(cfg: ModelConfig) -> dict:
+    return {"ln": rmsnorm_schema(cfg.d_model), "mix": ssm.mamba2_schema(cfg)}
+
+
+def shared_attn_block_schema(cfg: ModelConfig) -> dict:
+    return {
+        "ln_a": rmsnorm_schema(cfg.d_model),
+        "attn": attn.gqa_schema(cfg),
+        "ln_m": rmsnorm_schema(cfg.d_model),
+        "mlp": swiglu_schema(cfg),
+    }
+
+
+def xlstm_pair_schema(cfg: ModelConfig) -> dict:
+    return {
+        "ln_m": rmsnorm_schema(cfg.d_model),
+        "mlstm": xlstm.mlstm_schema(cfg),
+        "ln_s": rmsnorm_schema(cfg.d_model),
+        "slstm": xlstm.slstm_schema(cfg),
+    }
+
+
+# ------------------------------------------------------------- assembly
+
+
+def stack_config(cfg: ModelConfig) -> dict:
+    """Static description of the layer stack (what is scanned vs unrolled)."""
+    if cfg.block_pattern == "xlstm_pair":
+        return {"kind": "xlstm", "scan_len": cfg.n_layers // 2}
+    if cfg.block_pattern == "mamba_shared_attn":
+        return {"kind": "zamba", "scan_len": cfg.n_layers,
+                "n_shared": -(-cfg.n_layers // cfg.shared_attn_every)}
+    n_moe = cfg.n_layers - cfg.first_dense_layers if cfg.n_experts else 0
+    return {"kind": "attn", "scan_len": (n_moe or cfg.n_layers),
+            "prefix": cfg.first_dense_layers if cfg.n_experts else 0}
+
+
+def stack_schema_for(cfg: ModelConfig) -> dict:
+    sc = stack_config(cfg)
+    if sc["kind"] == "xlstm":
+        return {"pairs": stack_schema(xlstm_pair_schema(cfg), sc["scan_len"])}
+    if sc["kind"] == "zamba":
+        return {
+            "mamba": stack_schema(mamba_block_schema(cfg), sc["scan_len"]),
+            "shared": shared_attn_block_schema(cfg),
+        }
+    s: dict[str, Any] = {}
+    if sc["prefix"]:
+        dense = decoder_block_schema(cfg, use_moe=False)
+        s["prefix"] = [dense for _ in range(sc["prefix"])]
+    s["blocks"] = stack_schema(
+        decoder_block_schema(cfg, use_moe=bool(cfg.n_experts),
+                             cross=cfg.is_enc_dec), sc["scan_len"])
+    return s
+
+
+def _scan_apply(body, stacked_params, x, n, cfg: ModelConfig, extra_carry=None):
+    """Scan ``body`` over stacked layer params; body returns (x, aux, drop).
+
+    The carry (= the remat-saved layer input) is sequence-sharded across
+    'model' at every boundary (Megatron-SP): per-layer saved residuals are
+    the dominant train-time memory term and must not replicate across TP.
+    """
+    from repro.runtime.sharding import constrain
+    body = _remat(body, cfg)
+
+    def step(carry, xs):
+        x, aux, drop, extra = carry
+        lp, i = xs
+        x, a, dr, extra = body(lp, x, i, extra)
+        x = constrain(x, "act_batch", "act_seq", None)
+        return (x, aux + a, drop + dr, extra), None
+
+    idx = jnp.arange(n)
+    x = constrain(x, "act_batch", "act_seq", None)
+    carry0 = (x, jnp.float32(0.0), jnp.float32(0.0), extra_carry)
+    (x, aux, drop, extra), _ = jax.lax.scan(step, carry0, (stacked_params, idx))
+    return x, aux, drop / max(n, 1), extra
+
+
+def apply_stack(params, x, positions, cfg: ModelConfig, *,
+                memory=None, memory_positions=None, attn_impl="auto"):
+    """Full-sequence pass through the layer stack. Returns (x, aux, drop)."""
+    sc = stack_config(cfg)
+
+    if sc["kind"] == "xlstm":
+        def body(lp, x, i, extra):
+            h = rmsnorm(lp["ln_m"], x, cfg.norm_eps)
+            x = x + xlstm.mlstm_apply(lp["mlstm"], h, cfg)
+            h = rmsnorm(lp["ln_s"], x, cfg.norm_eps)
+            x = x + xlstm.slstm_apply(lp["slstm"], h, cfg)
+            return x, 0.0, 0.0, extra
+        x, aux, drop, _ = _scan_apply(body, params["pairs"], x, sc["scan_len"], cfg)
+        return x, aux, drop
+
+    if sc["kind"] == "zamba":
+        shared = params["shared"]
+
+        def body(lp, x, i, extra):
+            h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+            x = x + ssm.mamba2_apply(lp["mix"], h, cfg)
+
+            def with_shared(x):
+                h = rmsnorm(shared["ln_a"], x, cfg.norm_eps)
+                a, _ = attn.gqa_attend(shared["attn"], h, cfg,
+                                       positions=positions, attn_impl=attn_impl)
+                x = x + a
+                h = rmsnorm(shared["ln_m"], x, cfg.norm_eps)
+                return x + swiglu(shared["mlp"], h)
+
+            x = jax.lax.cond(i % cfg.shared_attn_every == 0, with_shared,
+                             lambda x: x, x)
+            return x, 0.0, 0.0, extra
+        x, aux, drop, _ = _scan_apply(body, params["mamba"], x, sc["scan_len"], cfg)
+        return x, aux, drop
+
+    # standard attention stacks (dense / moe / enc-dec decoder)
+    aux0 = jnp.float32(0.0)
+    drop0 = jnp.float32(0.0)
+    for lp in params.get("prefix", []):
+        x, _, a, d = decoder_block_apply(lp, x, positions, cfg, use_moe=False,
+                                         memory=memory,
+                                         memory_positions=memory_positions,
+                                         attn_impl=attn_impl)
+        aux0, drop0 = aux0 + a, drop0 + d
+
+    def body(lp, x, i, extra):
+        x, _, a, d = decoder_block_apply(lp, x, positions, cfg,
+                                         use_moe=bool(cfg.n_experts),
+                                         memory=memory,
+                                         memory_positions=memory_positions,
+                                         attn_impl=attn_impl)
+        return x, a, d, extra
+
+    x, aux, drop, _ = _scan_apply(body, params["blocks"], x, sc["scan_len"], cfg)
+    return x, aux + aux0, drop + drop0
+
+
+# --------------------------------------------------------------- caches
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                     enc_len: int = 0):
+    """Abstract-safe cache construction (works under jax.eval_shape)."""
+    sc = stack_config(cfg)
+    if sc["kind"] == "xlstm":
+        n = sc["scan_len"]
+        one = {
+            "mlstm": xlstm.mlstm_init_cache(cfg, batch, dtype),
+            "slstm": xlstm.slstm_init_cache(cfg, batch, dtype),
+        }
+        return {"pairs": jax.tree.map(lambda a: _tile(a, n), one)}
+    if sc["kind"] == "zamba":
+        m = jax.tree.map(lambda a: _tile(a, sc["scan_len"]),
+                         ssm.mamba2_init_cache(cfg, batch, dtype))
+        sh = jax.tree.map(lambda a: _tile(a, sc["n_shared"]),
+                          attn.gqa_init_cache(cfg, batch, max_len, dtype))
+        return {"mamba": m, "shared": sh}
+    init_one = (attn.mla_init_cache if cfg.attn_type == "mla"
+                else attn.gqa_init_cache)
+    one = init_one(cfg, batch, max_len, dtype)
+    out = {}
+    if sc["prefix"]:
+        out["prefix"] = [init_one(cfg, batch, max_len, dtype)
+                         for _ in range(sc["prefix"])]
+    out["blocks"] = jax.tree.map(lambda a: _tile(a, sc["scan_len"]), one)
+    if cfg.is_enc_dec and enc_len:
+        xkv = {
+            "k": jnp.zeros((batch, enc_len, cfg.n_kv_heads,
+                            cfg.resolved_head_dim), dtype),
+            "v": jnp.zeros((batch, enc_len, cfg.n_kv_heads,
+                            cfg.resolved_head_dim), dtype),
+        }
+        out["cross"] = jax.tree.map(lambda a: _tile(a, sc["scan_len"]), xkv)
+    return out
+
+
+def _tile(a, n):
+    return jnp.broadcast_to(a[None], (n,) + a.shape)
+
+
+def prefill_stack(params, x, positions, cfg: ModelConfig, *,
+                  memory=None, memory_positions=None, attn_impl="auto"):
+    """Full-sequence pass that also builds the decode caches.
+
+    Returns (x, caches) with the same cache structure init_stack_cache
+    produces (SWA archs get a rolling window-sized cache).
+    """
+    sc = stack_config(cfg)
+    s = x.shape[1]
+
+    def roll(k):  # window-slice for SWA caches
+        w = cfg.sliding_window
+        if w and s >= w:
+            assert s % w == 0, "prefill length must be a multiple of the window"
+            return k[:, s - w:]
+        return k
+
+    if sc["kind"] == "xlstm":
+        def body(x, lp):
+            h = rmsnorm(lp["ln_m"], x, cfg.norm_eps)
+            a, cm = xlstm.mlstm_apply(lp["mlstm"], h, cfg, return_state=True)
+            x = x + a
+            h = rmsnorm(lp["ln_s"], x, cfg.norm_eps)
+            a, cs = xlstm.slstm_apply(lp["slstm"], h, cfg, return_state=True)
+            return x + a, {"mlstm": cm, "slstm": cs}
+        x, states = jax.lax.scan(body, x, params["pairs"])
+        return x, {"pairs": states}
+
+    if sc["kind"] == "zamba":
+        shared = params["shared"]
+        every = cfg.shared_attn_every
+        kv_buf = jax.tree.map(
+            lambda a: _tile(a, sc["n_shared"]),
+            attn.gqa_init_cache(cfg, x.shape[0], s, x.dtype))
+
+        def body(carry, xs):
+            x, kv_buf = carry
+            lp, i = xs
+            h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+            a, cm = ssm.mamba2_apply(lp["mix"], h, cfg, return_state=True)
+            x = x + a
+
+            def with_shared(operand):
+                x, kv_buf = operand
+                inv = i // every
+                h = rmsnorm(shared["ln_a"], x, cfg.norm_eps)
+                a, (k, v) = attn.gqa_attend(shared["attn"], h, cfg,
+                                            positions=positions,
+                                            attn_impl=attn_impl)
+                x = x + a
+                h = rmsnorm(shared["ln_m"], x, cfg.norm_eps)
+                x = x + swiglu(shared["mlp"], h)
+                new = {"k": roll(k), "v": roll(v)}
+                kv_buf = jax.tree.map(
+                    lambda buf, n: jax.lax.dynamic_update_index_in_dim(
+                        buf, n.astype(buf.dtype), inv, 0), kv_buf, new)
+                return x, kv_buf
+
+            x, kv_buf = jax.lax.cond(i % every == 0, with_shared,
+                                     lambda o: o, (x, kv_buf))
+            return (x, kv_buf), cm
+
+        idx = jnp.arange(sc["scan_len"])
+        (x, kv_buf), mstates = jax.lax.scan(body, (x, kv_buf),
+                                            (params["mamba"], idx))
+        return x, {"mamba": mstates, "shared": kv_buf}
+
+    use_moe = bool(cfg.n_experts)
+    prefix_caches = []
+    for lp in params.get("prefix", []):
+        x, kv, _, _ = decoder_block_apply(lp, x, positions, cfg, use_moe=False,
+                                          memory=memory,
+                                          memory_positions=memory_positions,
+                                          attn_impl=attn_impl)
+        prefix_caches.append(_kv_to_cache(kv["self"], cfg, roll))
+
+    def body(x, lp):
+        x, kv, _, _ = decoder_block_apply(lp, x, positions, cfg,
+                                          use_moe=use_moe, memory=memory,
+                                          memory_positions=memory_positions,
+                                          attn_impl=attn_impl)
+        ys = {"self": _kv_to_cache(kv["self"], cfg, roll)}
+        if "cross" in kv:
+            k, v = kv["cross"]
+            ys["cross"] = {"k": k, "v": v}
+        return x, ys
+
+    x, ys = jax.lax.scan(body, x, params["blocks"])
+    out = {"blocks": ys["self"]}
+    if prefix_caches:
+        out["prefix"] = prefix_caches
+    if "cross" in ys:
+        out["cross"] = ys["cross"]
+    return x, out
+
+
+def _kv_to_cache(kv_self, cfg: ModelConfig, roll):
+    if cfg.attn_type == "mla":
+        c, k_rope = kv_self
+        return {"c": c, "k_rope": k_rope}
+    k, v = kv_self
+    return {"k": roll(k), "v": roll(v)}
+
+
+def decode_stack(params, x, caches, pos, cfg: ModelConfig, *, kv_len: int):
+    """One-token pass; returns (x, new_caches)."""
+    sc = stack_config(cfg)
+
+    if sc["kind"] == "xlstm":
+        def body(x, xs):
+            lp, c = xs
+            h = rmsnorm(lp["ln_m"], x, cfg.norm_eps)
+            a, cm = xlstm.mlstm_decode(lp["mlstm"], h, c["mlstm"], cfg)
+            x = x + a
+            h = rmsnorm(lp["ln_s"], x, cfg.norm_eps)
+            a, cs = xlstm.slstm_decode(lp["slstm"], h, c["slstm"], cfg)
+            return x + a, {"mlstm": cm, "slstm": cs}
+        x, new = jax.lax.scan(body, x, (params["pairs"], caches["pairs"]))
+        return x, {"pairs": new}
+
+    if sc["kind"] == "zamba":
+        shared = params["shared"]
+        every = cfg.shared_attn_every
+
+        def body(carry, xs):
+            x, sh_caches = carry
+            lp, c, i = xs
+            h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+            a, cm = ssm.mamba2_decode(lp["mix"], h, c, cfg)
+            x = x + a
+
+            def with_shared(operand):
+                x, sh_caches = operand
+                inv = i // every
+                ci = jax.tree.map(lambda a: a[inv], sh_caches)
+                h = rmsnorm(shared["ln_a"], x, cfg.norm_eps)
+                a, cnew = attn.gqa_decode(shared["attn"], h, ci, pos, cfg,
+                                          kv_len=kv_len)
+                x = x + a
+                h = rmsnorm(shared["ln_m"], x, cfg.norm_eps)
+                x = x + swiglu(shared["mlp"], h)
+                sh_caches = jax.tree.map(
+                    lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+                        buf, new.astype(buf.dtype), inv, 0),
+                    sh_caches, cnew)
+                return x, sh_caches
+
+            x, sh_caches = jax.lax.cond(i % every == 0, with_shared,
+                                        lambda o: o, (x, sh_caches))
+            return (x, sh_caches), cm
+
+        idx = jnp.arange(sc["scan_len"])
+        (x, sh), new_m = jax.lax.scan(
+            body, (x, caches["shared"]), (params["mamba"], caches["mamba"], idx))
+        return x, {"mamba": new_m, "shared": sh}
+
+    use_moe = bool(cfg.n_experts)
+    new_prefix = []
+    for lp, c in zip(params.get("prefix", []), caches.get("prefix", [])):
+        x, cn = decoder_block_decode(lp, x, c, pos, cfg, use_moe=False,
+                                     kv_len=kv_len)
+        new_prefix.append(cn)
+
+    has_cross = "cross" in caches
+
+    def body(x, xs):
+        if has_cross:
+            lp, c, xc = xs
+        else:
+            lp, c = xs
+            xc = None
+        x, cn = decoder_block_decode(lp, x, c, pos, cfg, use_moe=use_moe,
+                                     kv_len=kv_len, cross_cache=xc)
+        return x, cn
+
+    xs = ((params["blocks"], caches["blocks"], caches["cross"]) if has_cross
+          else (params["blocks"], caches["blocks"]))
+    x, new_blocks = jax.lax.scan(body, x, xs)
+    out = {"blocks": new_blocks}
+    if new_prefix:
+        out["prefix"] = new_prefix
+    if has_cross:
+        out["cross"] = caches["cross"]
+    return x, out

@@ -1,0 +1,286 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent gate connections).
+
+mLSTM's stabilized parallel form has the flash-attention structure (running
+max + rescaled accumulators with an additive log-decay), so train/prefill
+uses an online chunked scan over the KV axis; decode is a rank-1 state
+update on the (H, P, P) matrix memory.  sLSTM is inherently sequential
+(hidden-to-gate recurrence) and scans over time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import P
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ================================================================ mLSTM
+
+
+def mlstm_dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model  # projection factor 2 (paper)
+    h = cfg.n_heads
+    return di, h, di // h
+
+
+def mlstm_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, h, p = mlstm_dims(cfg)
+    return {
+        "w_up": P((d, di), ("w_embed", "w_mlp")),
+        "w_gate_up": P((d, di), ("w_embed", "w_mlp")),
+        "conv_w": P((cfg.ssm_conv_width, di), (None, "w_mlp"), scale=0.5),
+        "conv_b": P((di,), ("w_mlp",), "zeros"),
+        "w_q": P((di, di), (None, "w_mlp")),
+        "w_k": P((di, di), (None, "w_mlp")),
+        "w_v": P((di, di), (None, "w_mlp")),
+        "w_i": P((di, h), ("w_mlp", None), scale=0.02),
+        "b_i": P((h,), (None,), "zeros"),
+        "w_f": P((di, h), ("w_mlp", None), scale=0.02),
+        "b_f": P((h,), (None,), "ones"),  # bias toward remembering
+        "norm": P((di,), ("w_mlp",), "ones"),
+        "w_down": P((di, d), ("w_mlp", "w_embed")),
+    }
+
+
+def _mlstm_qkv_gates(params, x, cfg: ModelConfig, conv_state=None):
+    di, h, p = mlstm_dims(cfg)
+    b, s, _ = x.shape
+    xin = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(x.dtype))
+    xg = jnp.einsum("bsd,de->bse", x, params["w_gate_up"].astype(x.dtype))
+    # causal conv feeding q/k (paper: conv + swish before q, k)
+    w = params["conv_w"].astype(x.dtype)
+    width = w.shape[0]
+    if conv_state is not None:
+        window = jnp.concatenate([conv_state, xin], axis=1)
+        conv = jnp.einsum("bwc,wc->bc", window, w)[:, None, :]
+        new_conv_state = window[:, 1:, :]
+    else:
+        pad = jnp.pad(xin, ((0, 0), (width - 1, 0), (0, 0)))
+        conv = sum(pad[:, i : i + s, :] * w[i][None, None, :] for i in range(width))
+        new_conv_state = None
+    conv = jax.nn.silu(conv + params["conv_b"].astype(x.dtype))
+    q = jnp.einsum("bse,ef->bsf", conv, params["w_q"].astype(x.dtype))
+    k = jnp.einsum("bse,ef->bsf", conv, params["w_k"].astype(x.dtype))
+    v = jnp.einsum("bse,ef->bsf", xin, params["w_v"].astype(x.dtype))
+    q = q.reshape(b, s, h, p)
+    k = k.reshape(b, s, h, p) / jnp.sqrt(p).astype(x.dtype)
+    v = v.reshape(b, s, h, p)
+    log_i = jnp.einsum("bse,eh->bsh", xin, params["w_i"].astype(x.dtype)).astype(
+        jnp.float32) + params["b_i"].astype(jnp.float32)
+    f_pre = jnp.einsum("bse,eh->bsh", xin, params["w_f"].astype(x.dtype)).astype(
+        jnp.float32) + params["b_f"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    return xg, q, k, v, log_i, log_f, new_conv_state, xin
+
+
+def _mlstm_cell_chunked(q, k, v, log_i, log_f, chunk=256):
+    """Stabilized parallel mLSTM, scanned over QUERY chunks with per-step
+    remat (flash-attention memory semantics — see models/attention.py):
+
+    h_i = sum_{j<=i} (q_i . k_j) exp(F_i + t_j - m_i) v_j / n_i
+    with t_j = log_i_j - F_j, F = cumsum(log_f), m_i = max_j (F_i + t_j),
+    and n_i = max(|sum_j w_ij|, exp(-m_i)).
+    """
+    b, s, h, p = q.shape
+    f_cum = jnp.cumsum(log_f, axis=1)  # (b, s, h)
+    t = (log_i - f_cum).transpose(0, 2, 1)  # (b, h, s) kv-side log weights
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        f_cum = jnp.pad(f_cum, ((0, 0), (0, pad), (0, 0)))
+    qc = q.reshape(b, nchunks, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    fc = f_cum.reshape(b, nchunks, chunk, h).transpose(1, 0, 2, 3)
+    pos_kv = jnp.arange(s)
+    pc = jnp.arange(nchunks * chunk).reshape(nchunks, chunk)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        qb, fb, pb = xs  # (b, C, h, p), (b, C, h), (C,)
+        logits = fb.transpose(0, 2, 1)[:, :, :, None] + t[:, :, None, :]
+        causal = pb[None, None, :, None] >= pos_kv[None, None, None, :]
+        logits = jnp.where(causal, logits, NEG_INF)  # (b, h, C, s)
+        m = jnp.max(logits, axis=-1)
+        qk = jnp.einsum("bshp,bthp->bhst", qb, k).astype(jnp.float32)
+        w = qk * jnp.exp(logits - m[..., None])
+        acc = jnp.einsum("bhst,bthp->bhsp", w.astype(v.dtype), v)
+        n = jnp.maximum(jnp.abs(jnp.sum(w, axis=-1)), jnp.exp(-m))
+        out = acc.astype(jnp.float32) / n[..., None]
+        return carry, out.transpose(0, 2, 1, 3).astype(qb.dtype)
+
+    _, out = jax.lax.scan(step, (), (qc, fc, pc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * chunk, h, p)
+    return out[:, :s]  # (b, s, h, p)
+
+
+def _group_rmsnorm(scale, y, eps, nheads):
+    """Per-head group norm over the head dim."""
+    b, s, di = y.shape
+    p = di // nheads
+    yh = y.astype(jnp.float32).reshape(b, s, nheads, p)
+    var = jnp.mean(jnp.square(yh), axis=-1, keepdims=True)
+    yh = yh * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(b, s, di) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mlstm_apply(params, x, cfg: ModelConfig, return_state: bool = False):
+    di, h, p = mlstm_dims(cfg)
+    xg, q, k, v, log_i, log_f, _, xin = _mlstm_qkv_gates(params, x, cfg)
+    out = _mlstm_cell_chunked(q, k, v, log_i, log_f, chunk=cfg.ssm_chunk)
+    y = _group_rmsnorm(params["norm"], out.reshape(*x.shape[:2], di),
+                       cfg.norm_eps, h)
+    y = y * jax.nn.silu(xg)
+    y = jnp.einsum("bse,ed->bsd", y, params["w_down"].astype(x.dtype))
+    if not return_state:
+        return y
+    # closed-form end-of-sequence state for prefill -> decode handoff:
+    # C_S = sum_j exp(F_S - F_j) i_j k_j v_j^T  (stabilized by m_S)
+    f_cum = jnp.cumsum(log_f, axis=1)  # (b, s, h)
+    t = log_i - f_cum
+    m_end = f_cum[:, -1] + jnp.max(t, axis=1)  # (b, h)
+    w = jnp.exp(f_cum[:, -1][:, None] + t - m_end[:, None])  # (b, s, h)
+    c = jnp.einsum("bsh,bshp,bshq->bhpq", w, k.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshp->bhp", w, k.astype(jnp.float32))
+    width = cfg.ssm_conv_width
+    cache = {"c": c, "n": n, "m": m_end,
+             "conv": xin[:, x.shape[1] - (width - 1):, :]}
+    return y, cache
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype):
+    di, h, p = mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, p, p), jnp.float32),
+        "n": jnp.zeros((batch, h, p), jnp.float32),
+        "m": jnp.full((batch, h), NEG_INF, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+    }
+
+
+def mlstm_decode(params, x, cache, cfg: ModelConfig):
+    di, h, p = mlstm_dims(cfg)
+    xg, q, k, v, log_i, log_f, conv_state, _ = _mlstm_qkv_gates(
+        params, x, cfg, conv_state=cache["conv"])
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]  # (b, h, p)
+    li, lf = log_i[:, 0], log_f[:, 0]  # (b, h)
+    m_new = jnp.maximum(lf + cache["m"], li)
+    i_s = jnp.exp(li - m_new)
+    f_s = jnp.exp(lf + cache["m"] - m_new)
+    c = cache["c"] * f_s[..., None, None] + i_s[..., None, None] * jnp.einsum(
+        "bhp,bhq->bhpq", k1.astype(jnp.float32), v1.astype(jnp.float32))
+    n = cache["n"] * f_s[..., None] + i_s[..., None] * k1.astype(jnp.float32)
+    num = jnp.einsum("bhp,bhpq->bhq", q1.astype(jnp.float32), c)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhp,bhp->bh", q1.astype(jnp.float32), n)),
+        jnp.exp(-m_new))
+    out = (num / den[..., None]).astype(x.dtype).reshape(x.shape[0], 1, di)
+    y = _group_rmsnorm(params["norm"], out, cfg.norm_eps, h)
+    y = y * jax.nn.silu(xg)
+    y = jnp.einsum("bse,ed->bsd", y, params["w_down"].astype(x.dtype))
+    return y, {"c": c, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ================================================================ sLSTM
+
+
+def slstm_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    dff = int(d * 4 / 3 / 64) * 64 * 2  # paper: pf=4/3, GeGLU (2 mats fused)
+    s = {}
+    for g in ("i", "f", "z", "o"):
+        s[f"w_{g}"] = P((d, d), ("w_embed", "w_mlp"), scale=0.02)
+        s[f"r_{g}"] = P((h, p, p), (None, None, None), scale=0.02)
+        s[f"b_{g}"] = P((d,), (None,), "ones" if g == "f" else "zeros")
+    s["norm"] = P((d,), (None,), "ones")
+    s["w_ff_up"] = P((d, dff), ("w_embed", "w_mlp"))
+    s["w_ff_down"] = P((dff // 2, d), ("w_mlp", "w_embed"))
+    return s
+
+
+def _slstm_x_proj(params, x):
+    """Precompute the input half of all 4 gate preactivations in one pass
+    (keeps the big matmuls out of the sequential scan): (b, s, 4, d)."""
+    w = jnp.stack([params[f"w_{g}"] for g in ("i", "f", "z", "o")], 0)
+    b = jnp.stack([params[f"b_{g}"] for g in ("i", "f", "z", "o")], 0)
+    return (jnp.einsum("bsd,gde->bsge", x, w.astype(x.dtype))
+            + b.astype(x.dtype)[None, None])
+
+
+def _slstm_step(params, xg_t, state, nheads):
+    """xg_t: (b, 4, d) precomputed input preacts; recurrent part added here."""
+    c, n, m, h = state
+    b, d = h.shape
+    p = d // nheads
+    hh = h.reshape(b, nheads, p)
+    r = jnp.stack([params[f"r_{g}"] for g in ("i", "f", "z", "o")], 0)
+    rec = jnp.einsum("bhp,ghpq->bghq", hh, r.astype(h.dtype)).reshape(b, 4, d)
+    pi, pf, pz, po = [t[:, 0] for t in jnp.split(
+        (xg_t + rec).astype(jnp.float32), 4, axis=1)]
+    m_new = jnp.maximum(pf + m, pi)
+    i_s = jnp.exp(pi - m_new)
+    f_s = jnp.exp(pf + m - m_new)
+    z = jnp.tanh(pz)
+    o = jax.nn.sigmoid(po)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return c_new, n_new, m_new, h_new.astype(h.dtype)
+
+
+def slstm_cell(params, x, cfg: ModelConfig, state=None):
+    """x: (b, s, d); sequential scan over time."""
+    b, s, d = x.shape
+    if state is None:
+        z32 = jnp.zeros((b, d), jnp.float32)
+        state = (z32, z32, jnp.full((b, d), NEG_INF, jnp.float32),
+                 jnp.zeros((b, d), x.dtype))
+
+    xg = _slstm_x_proj(params, x)  # (b, s, 4, d)
+
+    def step(carry, xg_t):
+        new = _slstm_step(params, xg_t, carry, cfg.n_heads)
+        return new, new[3]
+
+    state, hs = jax.lax.scan(step, state, xg.transpose(1, 0, 2, 3))
+    return hs.transpose(1, 0, 2), state
+
+
+def slstm_apply(params, x, cfg: ModelConfig, return_state: bool = False):
+    h, state = slstm_cell(params, x, cfg)
+    y = _group_rmsnorm(params["norm"], h, cfg.norm_eps, cfg.n_heads)
+    up = jnp.einsum("bsd,df->bsf", y, params["w_ff_up"].astype(x.dtype))
+    u1, u2 = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(u1) * u2,
+                   params["w_ff_down"].astype(x.dtype))
+    if return_state:
+        return y, {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+    return y
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    z32 = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z32, "n": z32, "m": jnp.full((batch, d), NEG_INF, jnp.float32),
+            "h": jnp.zeros((batch, d), dtype)}
+
+
+def slstm_decode(params, x, cache, cfg: ModelConfig):
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    xg = _slstm_x_proj(params, x)[:, 0]  # (b, 4, d)
+    new = _slstm_step(params, xg, state, cfg.n_heads)
+    h = new[3][:, None, :]
+    y = _group_rmsnorm(params["norm"], h, cfg.norm_eps, cfg.n_heads)
+    up = jnp.einsum("bsd,df->bsf", y, params["w_ff_up"].astype(x.dtype))
+    u1, u2 = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(u1) * u2,
+                   params["w_ff_down"].astype(x.dtype))
+    return y, {"c": new[0], "n": new[1], "m": new[2], "h": new[3]}

@@ -1,0 +1,9 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm, lr_schedule)
+from repro.optim.compression import (compress_int8_ef, decompress_int8,
+                                     ef_state_init)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "lr_schedule", "compress_int8_ef", "decompress_int8", "ef_state_init",
+]

@@ -1,0 +1,48 @@
+"""int8 gradient compression with error feedback, for the DP all-reduce.
+
+The paper's cost model charges per byte moved through the external shuffle
+service; the training-plane analogue is the gradient all-reduce across the
+'pod' (DCN) axis. Compressing to int8 with an error-feedback residual cuts
+that traffic 4x (vs f32) / 2x (vs bf16) while keeping convergence — the
+residual carries the quantization error into the next step.
+
+Used inside train_step BEFORE the psum when cfg.grad_compression='int8_ef'
+(simulated here by quantize->dequantize around the mean-reduce, which is
+numerically identical to all-reducing the int8 payloads plus scales).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_state_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_one(g, err):
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g - deq
+
+
+def compress_int8_ef(grads, ef_state):
+    """Returns (q_tree of (int8, scale) pairs, new_ef_state)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, err = _quant_one(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(err)
+    return (jax.tree.unflatten(tdef, qs), jax.tree.unflatten(tdef, scales)), \
+        jax.tree.unflatten(tdef, errs)
+
+
+def decompress_int8(q_tree):
+    qs, scales = q_tree
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, scales)

@@ -1,0 +1,124 @@
+"""Lease-based fault-tolerant training driver — Flint's serverless
+execution model applied to the training plane.
+
+The driver never assumes it survives the run (paper C1/C3): it executes
+inside a bounded LEASE; when the lease expires — or a (simulated)
+preemption/node failure fires — state is already externalized (sharded
+checkpoint, data cursor = the step index) and a fresh driver resumes
+bit-exactly. ``train()`` returns a status so callers/chained invocations
+know whether to re-enter, exactly like the scheduler re-invoking a warm
+executor with the continuation cursor.
+
+Determinism contract making replay exact:
+  * batches are a pure function of (seed, step) (repro.data.synthetic);
+  * the train step is a deterministic jit'd function;
+  * checkpoints are atomic; a restart can only see a committed step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.synthetic import lm_batch
+from repro.runtime import steps as steps_mod
+
+
+class Preempted(RuntimeError):
+    """Simulated node failure / spot reclaim."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    at_steps: tuple[int, ...] = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise Preempted(f"injected preemption at step {step}")
+
+
+@dataclasses.dataclass
+class TrainReport:
+    status: str  # "finished" | "lease_expired" | "preempted"
+    start_step: int
+    end_step: int
+    metrics: list
+    wall_s: float
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, *, workdir: str,
+          batch_fn: Callable[[int], dict] | None = None,
+          step_fn=None, injector: FailureInjector | None = None,
+          log_every: int = 10, verbose: bool = False) -> TrainReport:
+    """Run (or resume) training under one lease. Re-enterable."""
+    t0 = time.monotonic()
+    mgr = CheckpointManager(workdir)
+    step_fn = step_fn or jax.jit(steps_mod.build_train_step(cfg, tc),
+                                 donate_argnums=0)
+    batch_fn = batch_fn or (lambda i: lm_batch(
+        tc.seed, i, 8, 128, cfg.vocab_size))
+
+    # ---- restore or init (elastic: works on any device count)
+    abstract = steps_mod.abstract_train_state(cfg, tc)
+    start = mgr.latest()
+    if start is None:
+        state = steps_mod.init_train_state(cfg, tc,
+                                           jax.random.PRNGKey(tc.seed))
+        start = 0
+    else:
+        state = mgr.restore(abstract, step=start)
+
+    deadline = (time.monotonic() + tc.lease_seconds
+                if tc.lease_seconds > 0 else None)
+    metrics_log: list[dict] = []
+    status = "finished"
+    step = start
+    try:
+        for step in range(start, tc.total_steps):
+            injector and injector.check(step)
+            state, metrics = step_fn(state, batch_fn(step))
+            if (step + 1) % log_every == 0 or step + 1 == tc.total_steps:
+                row = {k: float(v) for k, v in metrics.items()}
+                row["step"] = step + 1
+                metrics_log.append(row)
+                if verbose:
+                    print(f"step {row['step']}: loss={row['loss']:.4f} "
+                          f"lr={row['lr']:.2e} gnorm={row['grad_norm']:.3f}",
+                          flush=True)
+            if (step + 1) % tc.checkpoint_every == 0:
+                mgr.save(step + 1, state)
+            if deadline and time.monotonic() > deadline:
+                status = "lease_expired"
+                step += 1
+                break
+        else:
+            step = tc.total_steps
+    except Preempted:
+        # state since last checkpoint is lost — exactly like a real failure
+        status = "preempted"
+    if status != "preempted":
+        mgr.save(step, state, blocking=True)
+    mgr.wait()
+    return TrainReport(status, start, step, metrics_log,
+                       time.monotonic() - t0)
+
+
+def train_with_restarts(cfg: ModelConfig, tc: TrainConfig, *, workdir: str,
+                        max_restarts: int = 10, **kw) -> list[TrainReport]:
+    """Chain leases until training finishes — the scheduler loop that
+    re-invokes 'executors' (driver runs) as they expire or die."""
+    reports = []
+    for _ in range(max_restarts + 1):
+        rep = train(cfg, tc, workdir=workdir, **kw)
+        reports.append(rep)
+        if rep.status == "finished":
+            break
+    return reports

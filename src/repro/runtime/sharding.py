@@ -1,0 +1,153 @@
+"""Logical-axis -> mesh-axis resolution (MaxText-style sharding rules).
+
+Parameters declare *logical* axes in their schemas (repro.common.param.P);
+this module maps them onto the physical mesh:
+
+  w_vocab / w_heads / w_kv_heads / w_mlp  -> 'model'   (tensor parallel)
+  w_experts                               -> 'model'   (expert parallel)
+  w_expert_mlp                            -> None      (see mixtral override)
+  w_embed                                 -> 'data'    (FSDP / ZeRO-3: the
+                                             SPMD partitioner inserts the
+                                             per-layer all-gathers)
+  everything else                         -> replicated
+
+The 'pod' axis (multi-pod mesh) carries pure data parallelism: batch dims
+shard on ('pod', 'data'); weights are replicated across pods so the only
+cross-pod (DCN) traffic is the gradient all-reduce.
+
+Per-arch overrides come from ModelConfig.sharding_overrides (e.g. mixtral
+swaps EP for TP-in-expert because 8 experts < 16-way model axis).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.common import param as pm
+from repro.configs.base import ModelConfig
+
+DEFAULT_RULES: dict[str, Any] = {
+    "w_vocab": "model",
+    "w_heads": "model",
+    "w_kv_heads": "model",
+    "w_mlp": "model",
+    "w_experts": "model",
+    "w_expert_mlp": None,
+    "w_embed": "data",
+    "layers": None,
+    # activation logical axes (used by constrain())
+    "act_batch": ("pod", "data"),
+    "act_group": ("pod", "data"),
+    "act_experts": "model",
+    "act_heads": "model",
+    "act_mlp": "model",
+    # sequence parallelism for the per-layer saved residual stream: without
+    # this the remat-saved layer inputs replicate across 'model' and the
+    # train shapes cannot fit HBM (Megatron-SP, applied at scan boundaries).
+    "act_seq": "model",
+}
+
+_active_rules: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "repro_sharding_rules", default=None)
+
+
+def rules_for(cfg: ModelConfig) -> dict:
+    rules = dict(DEFAULT_RULES)
+    rules.update(dict(cfg.sharding_overrides))
+    return rules
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict):
+    token = _active_rules.set(rules)
+    try:
+        yield
+    finally:
+        _active_rules.reset(token)
+
+
+def _mesh_axis_names():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None:
+            return ()
+        return tuple(m.axis_names)
+    except Exception:
+        return ()
+
+
+def _filter_axis(axis, names):
+    """Drop mesh axes that don't exist on the active mesh (e.g. 'pod' on a
+    single-pod mesh)."""
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in names else None
+    sub = tuple(a for a in axis if a in names)
+    return sub if len(sub) > 1 else (sub[0] if sub else None)
+
+
+def resolve_spec(logical_axes: tuple, rules: dict, mesh_names: tuple,
+                 shape: tuple | None = None, mesh: Mesh | None = None) -> P:
+    """logical axis names -> PartitionSpec, dropping non-divisible shardings:
+    jit input shardings must tile evenly, so a dim that doesn't divide the
+    axis product (e.g. qwen3's 40 heads on a 16-way model axis) replicates
+    instead — the 'uneven-head tax' called out in the roofline notes."""
+    out = []
+    for i, name in enumerate(logical_axes):
+        axis = _filter_axis(rules.get(name), mesh_names)
+        if axis is not None and shape is not None and mesh is not None:
+            axes = (axis,) if isinstance(axis, str) else axis
+            n = math.prod(mesh.shape[a] for a in axes)
+            if shape[i] % n:
+                axis = None  # not evenly shardable -> replicate
+        out.append(axis)
+    return P(*out)
+
+
+def param_pspecs(cfg: ModelConfig, schema, mesh: Mesh):
+    """PartitionSpec tree matching ``schema`` (a tree of P entries)."""
+    rules = rules_for(cfg)
+    names = tuple(mesh.axis_names)
+
+    def one(p: pm.P):
+        return resolve_spec(p.axes, rules, names, p.shape, mesh)
+
+    return jax.tree.map(one, schema, is_leaf=pm.is_leaf)
+
+
+def param_shardings(cfg: ModelConfig, schema, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(cfg, schema, mesh))
+
+
+def constrain(x, *logical_axes):
+    """In-model activation sharding hint; no-op outside a mesh context."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or not m.axis_names:
+            return x
+        names = tuple(m.axis_names)
+    except Exception:
+        return x
+    rules = _active_rules.get() or DEFAULT_RULES
+    out = []
+    for i, name in enumerate(tuple(logical_axes)):
+        axis = _filter_axis(rules.get(name), names)
+        if axis is not None:
+            axes = (axis,) if isinstance(axis, str) else axis
+            n = math.prod(m.shape[a] for a in axes)
+            if x.shape[i] % n:
+                axis = None  # don't force padded activation shards
+        out.append(axis)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*out))
+    except Exception:
+        return x

@@ -1,0 +1,41 @@
+import os
+import sys
+
+# tests must see the single real CPU device (the dry-run sets its own flags
+# in a separate process); keep any user XLA_FLAGS out of the picture.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+import pytest  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+
+ALL_ARCHS = [
+    "xlstm-350m", "pixtral-12b", "zamba2-7b", "codeqwen1.5-7b",
+    "command-r-plus-104b", "qwen3-14b", "yi-9b", "seamless-m4t-large-v2",
+    "deepseek-v2-236b", "mixtral-8x22b",
+]
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_cfg():
+    return get_config("yi-9b").reduced(n_layers=2, d_model=32, n_heads=2,
+                                       n_kv_heads=2, head_dim=16, d_ff=64,
+                                       vocab_size=128)
+
+
+def make_batch(cfg, key, batch=2, seq=16):
+    import jax.numpy as jnp  # noqa: F401
+    out = {"tokens": jax.random.randint(key, (batch, seq), 0,
+                                        cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        out["frontend"] = jax.random.normal(
+            key, (batch, cfg.frontend_len, cfg.d_model))
+    if cfg.is_enc_dec:
+        out["enc_embeds"] = jax.random.normal(key, (batch, 8, cfg.d_model))
+    return out

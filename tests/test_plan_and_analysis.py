@@ -1,0 +1,170 @@
+"""Coverage for the planning + analysis layers: DAG stage cutting, the
+mini-cloudpickle, the loop-aware HLO cost model, and dry-run input specs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core import FlintConfig, FlintContext, build_plan
+from repro.core import serde
+from repro.core.dag import ShuffleRead, SourceInput
+from repro.launch import hlo_cost
+
+
+# ----------------------------------------------------------------- DAG
+
+
+def _ctx():
+    ctx = FlintContext("flint", FlintConfig(concurrency=2))
+    ctx.upload("t.txt", b"a\nb\nc\n" * 50)
+    return ctx
+
+
+def test_narrow_chain_is_single_stage():
+    ctx = _ctx()
+    rdd = ctx.textFile("t.txt", 3).map(str.upper).filter(lambda x: True)
+    stages = build_plan(rdd, "collect")
+    assert len(stages) == 1
+    assert len(stages[0].tasks) == 3
+    assert all(isinstance(t.input, SourceInput) for t in stages[0].tasks)
+    assert [k for k, _ in stages[0].tasks[0].ops] == ["map", "filter"]
+
+
+def test_wide_dep_cuts_stage():
+    ctx = _ctx()
+    rdd = (ctx.textFile("t.txt", 3).map(lambda x: (x, 1))
+           .reduceByKey(lambda a, b: a + b, 4).map(lambda kv: kv[0]))
+    stages = build_plan(rdd, "collect")
+    assert len(stages) == 2
+    assert stages[0].write is not None and stages[0].write.mode == "agg"
+    assert len(stages[1].tasks) == 4  # one per shuffle partition
+    assert isinstance(stages[1].tasks[0].input, ShuffleRead)
+    assert [k for k, _ in stages[1].tasks[0].ops] == ["map"]
+
+
+def test_join_produces_two_producer_stages():
+    ctx = _ctx()
+    left = ctx.parallelize([(1, "a")], 2)
+    right = ctx.parallelize([(1, "b")], 2)
+    stages = build_plan(left.join(right, 3), "collect")
+    assert len(stages) == 3  # left write, right write, join read
+    assert stages[0].write.key_side == "left"
+    assert stages[1].write.key_side == "right"
+    assert len(stages[2].tasks[0].input.parts) == 2
+
+
+def test_partition_multiplier_scales_wide_ops():
+    ctx = _ctx()
+    rdd = ctx.textFile("t.txt", 2).map(lambda x: (x, 1)).groupByKey(3)
+    stages = build_plan(rdd, "collect", partition_multiplier=4)
+    assert stages[0].write.nparts == 12
+    assert len(stages[1].tasks) == 12
+
+
+def test_union_and_mappartitions():
+    ctx = _ctx()
+    a = ctx.parallelize(list(range(10)), 2)
+    b = ctx.parallelize(list(range(10, 20)), 3)
+    u = a.union(b).mapPartitions(lambda it: [sum(it)])
+    out = u.collect()
+    assert len(out) == 5 and sum(out) == sum(range(20))
+    assert a.union(b).count() == 20
+
+
+# --------------------------------------------------------------- serde
+
+
+def test_serde_nested_closures():
+    def outer(k):
+        def inner(x):
+            return x + k
+        return inner
+
+    fn = outer(5)
+    assert serde.loads_fn(serde.dumps_fn(fn))(3) == 8
+
+
+def test_serde_recursive_global_function():
+    import math
+
+    def helper(x):
+        return math.floor(x) + 1
+
+    def top(x):
+        return helper(x) * 2
+
+    assert serde.loads_fn(serde.dumps_fn(top))(3.7) == 8
+
+
+def test_serde_plain_builtin():
+    import operator
+    assert serde.loads_fn(serde.dumps_fn(operator.add))(2, 3) == 5
+
+
+# ------------------------------------------------------------ hlo_cost
+
+
+def test_hlo_cost_scan_multiplier_exact():
+    w = jnp.zeros((7, 64, 128), jnp.float32)
+    x0 = jnp.zeros((32, 64))
+
+    def step(x, wi):
+        return (x @ wi) @ wi.T, None
+
+    txt = jax.jit(lambda x, w: jax.lax.scan(step, x, w)[0]) \
+        .lower(x0, w).compile().as_text()
+    res = hlo_cost.analyze(txt)
+    assert res["flops"] == 7 * 2 * (2 * 32 * 64 * 128)
+
+
+def test_hlo_cost_nested_scan_multiplies():
+    w = jnp.zeros((3, 16, 16), jnp.float32)
+
+    def inner(x, wi):
+        return x @ wi, None
+
+    def outer(x, _):
+        return jax.lax.scan(inner, x, w)[0], None
+
+    fn = jax.jit(lambda x: jax.lax.scan(outer, x, jnp.arange(5))[0])
+    txt = fn.lower(jnp.zeros((16, 16))).compile().as_text()
+    res = hlo_cost.analyze(txt)
+    assert res["flops"] == 5 * 3 * (2 * 16 * 16 * 16)
+
+
+def test_hlo_cost_counts_dot_without_loops():
+    fn = jax.jit(lambda a, b: a @ b)
+    txt = fn.lower(jnp.zeros((8, 16)), jnp.zeros((16, 4))).compile().as_text()
+    res = hlo_cost.analyze(txt)
+    assert res["flops"] == 2 * 8 * 16 * 4
+    assert res["collective_total"] == 0
+
+
+# ------------------------------------------------------------ input specs
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "deepseek-v2-236b", "xlstm-350m",
+                                  "seamless-m4t-large-v2"])
+def test_dryrun_cell_shapes_are_abstract(arch):
+    """dryrun_cell must produce pure ShapeDtypeStructs (no allocation)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.specs import dryrun_cell
+    mesh = make_host_mesh(data=1, model=1)
+    for shape in ("train_4k", "decode_32k"):
+        cfg = get_config(arch)
+        if SHAPES[shape].kind == "decode" and not (cfg.subquadratic
+                                                   or shape == "decode_32k"):
+            continue
+        step, args, donate, jkw = dryrun_cell(arch, shape, mesh)
+        leaves = jax.tree.leaves(args)
+        assert leaves, arch
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        assert callable(step) and "out_shardings" in jkw
+
+
+def test_shape_table_matches_assignment():
+    assert SHAPES["train_4k"].tokens == 4096 * 256
+    assert SHAPES["prefill_32k"].kind == "prefill"
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288
