@@ -32,6 +32,14 @@ def main() -> None:
               f";cost={r['shuffle_cost_usd']}")
     print(f"shuffle_agreement,0,{agree}")
 
+    ab, identical, speedup = shuffle_backends.run_pipeline_ab()
+    for r in ab:
+        print(f"pipeline_{r['mode']},{r['wall_s'] * 1e6:.0f},"
+              f"sqs_requests={r['sqs_requests']}"
+              f";lambda_requests={r['lambda_requests']}"
+              f";cost={r['total_usd']}")
+    print(f"pipeline_speedup,0,{speedup}x_identical={identical}")
+
     kernels_bench.main()  # prints its own rows
 
     try:

@@ -1,12 +1,21 @@
-"""SQS vs S3 shuffle (paper §V/§VI: 'the design choice of using S3 vs. SQS
-for data shuffling should be examined in detail').
+"""Shuffle benchmarks.
 
-Same shuffle-heavy query, two transports. We report measured wall latency,
-billed requests, and the MODELED service latency (request count x typical
-2018 per-op latency: SQS batch ~10 ms, S3 PUT ~30 ms / GET ~20 ms,
-LIST ~50 ms) — the analytic form of the paper's 'I/O patterns are not a
-good fit for S3' claim: object-store shuffles pay per-object latency and
-12.5x the per-request price of a queue batch.
+1. SQS vs S3 transport (paper §V/§VI: 'the design choice of using S3 vs.
+   SQS for data shuffling should be examined in detail'). Same
+   shuffle-heavy query, two transports. We report measured wall latency,
+   billed requests, and the MODELED service latency (request count x
+   typical 2018 per-op latency: SQS batch ~10 ms, S3 PUT ~30 ms /
+   GET ~20 ms, LIST ~50 ms) — the analytic form of the paper's 'I/O
+   patterns are not a good fit for S3' claim: object-store shuffles pay
+   per-object latency and 12.5x the per-request price of a queue batch.
+
+2. Barrier vs PIPELINED stage execution (EOS shuffle protocol, see
+   docs/eos_shuffle.md). Same query, same transport, invocation start
+   latency simulated (``start_latency_scale=1``): the barrier scheduler
+   pays the consumer stage's cold-start wave and queue drain AFTER the
+   producer stage finishes; the pipelined scheduler overlaps both with
+   producer compute. Results must be identical — the speedup is measured,
+   not claimed.
 """
 
 from __future__ import annotations
@@ -63,6 +72,39 @@ def run(rows=None):
     return out, agreement
 
 
+def run_pipeline_ab(rows=None, trials=2):
+    """Barrier vs pipelined stage execution, same query + transport.
+    Best-of-``trials`` wall time per mode (latency benchmark: the minimum
+    is the least noise-contaminated sample). Returns (per-mode rows,
+    results-identical, speedup)."""
+    data = taxi_csv(rows or N_ROWS, seed=13)
+    out = []
+    answers = []
+    for pipelined in (False, True):
+        wall = float("inf")
+        for _ in range(trials):
+            ctx = FlintContext("flint",
+                               FlintConfig(concurrency=16,
+                                           flush_records=2000,
+                                           start_latency_scale=1.0,
+                                           pipeline_stages=pipelined))
+            ctx.upload("taxi.csv", data)
+            t0 = time.monotonic()
+            ans = shuffle_query(ctx)
+            wall = min(wall, time.monotonic() - t0)
+        rep = ctx.cost_report()
+        out.append({
+            "mode": "pipelined" if pipelined else "barrier",
+            "wall_s": round(wall, 4),
+            "sqs_requests": rep["sqs_requests"],
+            "lambda_requests": rep["lambda_requests"],
+            "total_usd": round(rep["total_usd"], 6),
+        })
+        answers.append(sorted(ans))
+    speedup = out[0]["wall_s"] / max(out[1]["wall_s"], 1e-9)
+    return out, answers[0] == answers[1], round(speedup, 2)
+
+
 def main():
     rows, agreement = run()
     print("backend,wall_s,modeled_service_s,shuffle_cost_usd,sqs_requests,s3_ops")
@@ -70,6 +112,12 @@ def main():
         print(f"{r['backend']},{r['wall_s']},{r['modeled_service_s']},"
               f"{r['shuffle_cost_usd']},{r['sqs_requests']},{r['s3_ops']}")
     print(f"# backends agree: {agreement}")
+    ab, identical, speedup = run_pipeline_ab()
+    print("mode,wall_s,sqs_requests,lambda_requests,total_usd")
+    for r in ab:
+        print(f"{r['mode']},{r['wall_s']},{r['sqs_requests']},"
+              f"{r['lambda_requests']},{r['total_usd']}")
+    print(f"# pipelined speedup: {speedup}x, results identical: {identical}")
     return rows, agreement
 
 

@@ -68,15 +68,22 @@ class StagePlan:
     write: ShuffleWrite | None
     action: str | None = None  # set on the final stage
     save_prefix: str | None = None
+    # shuffle_id -> number of producer TASKS feeding it. Known at plan time
+    # (it is just the producing stage's task count), which is what lets the
+    # scheduler hand consumers an EOS quorum up front and launch them
+    # concurrently with their producers instead of waiting for post-hoc
+    # per-queue message-count expectations.
+    producer_counts: dict = dataclasses.field(default_factory=dict)
 
 
 class _Chain:
     """A stage under construction: per-task (input, ops)."""
 
-    def __init__(self, task_inputs, deps):
+    def __init__(self, task_inputs, deps, producer_counts=None):
         self.task_inputs = task_inputs  # list of input specs
         self.ops_per_task = [[] for _ in task_inputs]
         self.deps = deps  # upstream StagePlans
+        self.producer_counts = dict(producer_counts or {})
 
     def add_op(self, kind, fn):
         for ops in self.ops_per_task:
@@ -102,7 +109,8 @@ def _visit(node, stages: list, mult: int) -> _Chain:
     if isinstance(node, R.Union):
         ca = _visit(node.a, stages, mult)
         cb = _visit(node.b, stages, mult)
-        merged = _Chain(ca.task_inputs + cb.task_inputs, ca.deps + cb.deps)
+        merged = _Chain(ca.task_inputs + cb.task_inputs, ca.deps + cb.deps,
+                        {**ca.producer_counts, **cb.producer_counts})
         merged.ops_per_task = ca.ops_per_task + cb.ops_per_task
         return merged
     if isinstance(node, R.ShuffleAgg):
@@ -113,24 +121,28 @@ def _visit(node, stages: list, mult: int) -> _Chain:
                                         combine_fn=node.fn))
         inputs = [ShuffleRead([(sid, mode)], p, combine_fn=node.fn)
                   for p in range(nparts)]
-        return _Chain(inputs, [stages[-1]])
+        return _Chain(inputs, [stages[-1]],
+                      {sid: len(stages[-1].tasks)})
     if isinstance(node, R.Repartition):
         nparts = node.nparts * mult
         sid = _close_stage(node.parent, stages, mult,
                            ShuffleWrite(next(_next_shuffle), nparts, "repart"))
         inputs = [ShuffleRead([(sid, "repart")], p) for p in range(nparts)]
-        return _Chain(inputs, [stages[-1]])
+        return _Chain(inputs, [stages[-1]],
+                      {sid: len(stages[-1].tasks)})
     if isinstance(node, R.Join):
         nparts = node.nparts * mult
         sid_l = _close_stage(node.left, stages, mult,
                              ShuffleWrite(next(_next_shuffle), nparts,
                                           "join", key_side="left"))
+        n_left = len(stages[-1].tasks)
         sid_r = _close_stage(node.right, stages, mult,
                              ShuffleWrite(next(_next_shuffle), nparts,
                                           "join", key_side="right"))
+        n_right = len(stages[-1].tasks)
         inputs = [ShuffleRead([(sid_l, "join"), (sid_r, "join")], p)
                   for p in range(nparts)]
-        return _Chain(inputs, [])
+        return _Chain(inputs, [], {sid_l: n_left, sid_r: n_right})
     raise TypeError(f"unknown RDD node {type(node).__name__}")
 
 
@@ -141,7 +153,8 @@ def _close_stage(node, stages: list, mult: int, write: ShuffleWrite) -> int:
     tasks = [TaskDef(stage_id, i, inp, ops, write)
              for i, (inp, ops) in enumerate(
                  zip(chain.task_inputs, chain.ops_per_task))]
-    stages.append(StagePlan(stage_id, tasks, write))
+    stages.append(StagePlan(stage_id, tasks, write,
+                            producer_counts=chain.producer_counts))
     return sid
 
 
@@ -154,5 +167,6 @@ def build_plan(node, action: str, save_prefix: str | None = None,
              for i, (inp, ops) in enumerate(
                  zip(chain.task_inputs, chain.ops_per_task))]
     stages.append(StagePlan(stage_id, tasks, None, action=action,
-                            save_prefix=save_prefix))
+                            save_prefix=save_prefix,
+                            producer_counts=chain.producer_counts))
     return stages

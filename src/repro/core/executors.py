@@ -5,7 +5,9 @@ Semantics preserved from the paper (§III-A/B):
   * one task per invocation; executors are stateless between invocations;
   * input iterator reads an S3 byte range (stage 0) or drains SQS queues
     (intermediate stages), deduplicating at-least-once deliveries by
-    (producer task, sequence id);
+    (producer task, sequence id); under pipelined execution the drain
+    starts BEFORE producers finish and terminates on per-producer EOS
+    control messages (docs/eos_shuffle.md) instead of a count table;
   * outputs are hash-partitioned, buffered in memory, and FLUSHED to the
     per-partition queues when the buffer grows past its cap (the 3008 MB
     limit made concrete as a record-count proxy);
@@ -26,17 +28,23 @@ import dataclasses
 import pickle
 import threading
 import time
+import zlib
 from typing import Any
 
 from repro.core import serde
 from repro.core.costs import (LAMBDA_PAYLOAD_LIMIT, CostLedger)
 from repro.core.dag import CollectionInput, ShuffleRead, SourceInput, TaskDef
-from repro.core.queues import (Message, ObjectStoreSim, SQSSim, pack_records,
-                               unpack_records)
+from repro.core.queues import (Message, ObjectStoreSim, SQSSim, eos_message,
+                               pack_records, unpack_records)
 
 
 class InjectedFailure(RuntimeError):
     pass
+
+
+class AbortedError(RuntimeError):
+    """The scheduler shut the shuffle transport down mid-drain (fatal
+    stage failure or elastic re-plan) — unblock and exit quietly."""
 
 
 class MemoryCapExceeded(RuntimeError):
@@ -51,6 +59,10 @@ class FlintConfig:
     # intermediate-data transport: "sqs" (the paper's choice) or "s3"
     # (Qubole's choice, paper SSV/SVI flag the comparison as open work)
     shuffle_backend: str = "sqs"
+    # pipelined stage execution: launch consumer tasks concurrently with
+    # their producers; consumers terminate on per-producer EOS control
+    # messages. False restores barrier scheduling (A/B comparison).
+    pipeline_stages: bool = True
     lease_safety: float = 0.8  # stop ingesting at this fraction of the lease
     concurrency: int = 80
     cold_start_s: float = 0.4
@@ -137,7 +149,8 @@ class LambdaSim:
             if "spilled" in payload:
                 payload = pickle.loads(self.store.get(payload["spilled"]))
             resp = executor_main(payload, self)
-        except (InjectedFailure, MemoryCapExceeded) as e:
+        except (InjectedFailure, MemoryCapExceeded, AbortedError,
+                TimeoutError) as e:
             resp = {"status": "error", "error_type": type(e).__name__,
                     "error": str(e)}
         finally:
@@ -234,13 +247,26 @@ class _SourceReader:
                 yield ln.decode("utf-8", "replace")
 
 
-def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict) -> dict:
-    """Drain queue(s) for this partition with seq-id dedup. Returns
-    {(sid, mode): {src: records...}} merged data structures per input."""
+def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict,
+                   n_producers: dict | None = None) -> dict:
+    """Drain queue(s) for this partition with seq-id dedup, folding each
+    message into the aggregate AS IT ARRIVES (streaming — transport time
+    overlaps the fold). Two termination protocols:
+
+      * pipelined (``n_producers`` given): drain until an EOS control
+        message has arrived from every one of the ``n_producers[sid]``
+        producer tasks AND every producer's advertised sequence count has
+        been seen. EOS may outrun data (no ordering guarantee), duplicated
+        EOS (speculation, at-least-once delivery) is idempotent.
+      * barrier (``expected`` given): the legacy post-hoc message-count
+        table handed over after the producer stage fully completed.
+
+    Returns ({(sid, mode): folded-aggregate}, stats)."""
     out = {}
     stats = {"messages": 0, "duplicates": 0, "records": 0}
     combine = (serde.loads_fn(read.combine_fn)
                if isinstance(read.combine_fn, bytes) else read.combine_fn)
+    timeout = env.cfg.drain_timeout_s
 
     def fold(agg, records, mode):
         if mode == "agg":
@@ -258,47 +284,89 @@ def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict) -> dict:
                 f"{env.cfg.agg_memory_records}")
 
     for sid, mode in read.parts:
-        need = dict(expected.get(str(sid), {}))  # src -> message count
-        seen: set = set()
         agg: Any = {} if mode in ("agg", "group", "join") else []
-        deadline = time.monotonic() + env.cfg.drain_timeout_s
+        seen: set = set()
+        per_src: dict[str, int] = {}   # distinct data messages per producer
+        eos_total: dict[str, int] = {}  # producer -> advertised seq count
+        deadline = time.monotonic() + timeout  # inactivity deadline
+        pipelined = n_producers is not None
+        quorum = int(n_producers.get(str(sid), 0)) if pipelined else 0
+        need = {} if pipelined else dict(expected.get(str(sid), {}))
+
+        def done() -> bool:
+            if pipelined:
+                return (len(eos_total) >= quorum
+                        and all(per_src.get(s, 0) >= t
+                                for s, t in eos_total.items()))
+            return len(seen) >= sum(need.values())
 
         if env.cfg.shuffle_backend == "s3":
             prefix = f"_shuffle/{sid}/p{read.partition}/"
-            while sum(need.values()) > len(seen):
+            # S3 has no arrival notification — polling LIST is inherent to
+            # an object-store shuffle (the paper's cost argument against
+            # it); back off exponentially so an early pipelined consumer
+            # doesn't spin while its producers compute
+            backoff = 0.002
+            while not done():
+                progressed = False
                 for key in env.store.list(prefix):
-                    src, _, seqs = key[len(prefix):].rpartition("-")
-                    kid = (src, int(seqs))
+                    src, _, tail = key[len(prefix):].rpartition("-")
+                    if tail == "eos":
+                        if pipelined and src not in eos_total:
+                            eos_total[src] = env.store.get_obj(key)
+                            progressed = True
+                        continue
+                    kid = (src, int(tail))
                     if kid in seen:
                         continue
                     seen.add(kid)
+                    per_src[src] = per_src.get(src, 0) + 1
                     stats["messages"] += 1
                     records = env.store.get_obj(key)
                     stats["records"] += len(records)
                     fold(agg, records, mode)
-                if sum(need.values()) > len(seen):
-                    if time.monotonic() > deadline:
-                        raise TimeoutError(f"s3 shuffle {prefix} incomplete")
-                    time.sleep(0.001)
+                    progressed = True
+                if done():
+                    break
+                if env.sqs.closed:
+                    raise AbortedError(f"s3 shuffle {prefix}: aborted")
+                if progressed:
+                    deadline = time.monotonic() + timeout
+                    backoff = 0.002
+                elif time.monotonic() > deadline:
+                    raise TimeoutError(f"s3 shuffle {prefix} incomplete")
+                time.sleep(backoff)
+                backoff = min(backoff * 2, 0.1)
             out[(sid, mode)] = agg
             continue
 
         name = queue_name(sid, read.partition)
-        while sum(need.values()) > len(seen):
-            msgs = env.sqs.receive_batch(name)
+        while not done():
+            msgs = env.sqs.receive_many(name)
             if not msgs:
+                if env.sqs.closed:
+                    raise AbortedError(f"queue {name}: aborted")
                 if time.monotonic() > deadline:
                     raise TimeoutError(
+                        f"queue {name} incomplete: {len(seen)} data msgs, "
+                        f"eos {len(eos_total)}/{quorum}" if pipelined else
                         f"queue {name} incomplete: {len(seen)}"
                         f"/{sum(need.values())} messages")
-                time.sleep(0.001)
+                # block on arrival instead of sleep-spinning
+                env.sqs.wait_for_messages(name, 0.25)
                 continue
+            deadline = time.monotonic() + timeout  # progress resets it
             for m in msgs:
+                if m.kind == "eos":
+                    if pipelined:
+                        eos_total[m.src] = m.seq  # idempotent on duplicates
+                    continue
                 kid = (m.src, m.seq)
                 if kid in seen:
                     stats["duplicates"] += 1
                     continue
                 seen.add(kid)
+                per_src[m.src] = per_src.get(m.src, 0) + 1
                 stats["messages"] += 1
                 records = unpack_records(m.body)
                 stats["records"] += len(records)
@@ -307,8 +375,9 @@ def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict) -> dict:
     return out, stats
 
 
-def _shuffle_input_iter(read: ShuffleRead, env: LambdaSim, expected: dict):
-    data, stats = _drain_shuffle(read, env, expected)
+def _shuffle_input_iter(read: ShuffleRead, env: LambdaSim, expected: dict,
+                        n_producers: dict | None = None):
+    data, stats = _drain_shuffle(read, env, expected, n_producers)
     if len(read.parts) == 2:  # join
         (sid_l, _), (sid_r, _) = read.parts
         left, right = data[read.parts[0]], data[read.parts[1]]
@@ -351,6 +420,20 @@ def _apply_ops(it, ops):
     return it
 
 
+def _canonical_key(key):
+    """Normalize keys that compare equal but pickle differently, so they
+    route to the same partition: Python guarantees 1 == 1.0 == True (and
+    dict folding merges them), so the partitioner must agree. Integral
+    floats and bools collapse to int; tuples normalize recursively."""
+    if isinstance(key, bool):
+        return int(key)
+    if isinstance(key, float) and key.is_integer():
+        return int(key)
+    if isinstance(key, tuple):
+        return tuple(_canonical_key(k) for k in key)
+    return key
+
+
 class _ShuffleWriter:
     """Hash-partitioned buffered writer with overflow flush (§III-A)."""
 
@@ -368,7 +451,12 @@ class _ShuffleWriter:
         self.message_counts: dict[int, int] = {}
 
     def _partition_of(self, key) -> int:
-        return hash(key) % self.write.nparts
+        # stable across interpreter runs / PYTHONHASHSEED — a retried or
+        # speculated re-invocation MUST route every key to the same
+        # partition with the same sequence ids, or dedup breaks
+        blob = pickle.dumps(_canonical_key(key),
+                            protocol=pickle.HIGHEST_PROTOCOL)
+        return zlib.crc32(blob) % self.write.nparts
 
     def add(self, record):
         w = self.write
@@ -424,6 +512,25 @@ class _ShuffleWriter:
         self.buffers = {}
         self.buffered = 0
 
+    def finalize(self):
+        """Emit one EOS control message per output partition — INCLUDING
+        partitions this task never wrote to (total 0) — carrying the total
+        sequence count, so consumers can count down a fixed producer quorum.
+        Only the final (non-continuation) link of a chained task calls this;
+        a retried/speculated duplicate re-emits identical EOS (partitioning
+        and sequence assignment are deterministic), which consumers dedup
+        by producer id."""
+        w = self.write
+        if self.env.cfg.shuffle_backend == "s3":
+            for p in range(w.nparts):
+                key = f"_shuffle/{w.shuffle_id}/p{p}/{self.src}-eos"
+                self.env.store.put_obj(key, self.seq.get(p, 0))
+            return
+        for p in range(w.nparts):
+            self.env.sqs.send_batch(
+                queue_name(w.shuffle_id, p),
+                [eos_message(self.src, self.seq.get(p, 0))])
+
 
 def executor_main(payload: dict, env: LambdaSim) -> dict:
     """The Lambda function body: deserialize task, build input iterator,
@@ -452,7 +559,8 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
         reader = None
     else:
         base_iter, drain_stats = _shuffle_input_iter(
-            inp, env, payload.get("expected", {}))
+            inp, env, payload.get("expected", {}),
+            payload.get("n_producers"))
         stats.update(drain_stats)
         reader = None
 
@@ -460,15 +568,19 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
 
     def metered():
         n = 0
-        for rec in base_iter:
-            n += 1
-            if fail_after and n > fail_after:
-                raise InjectedFailure("injected mid-task failure")
-            yield rec
-            if lease.consumed() and chainable:
-                exhausted["flag"] = True
-                return
-        stats["records_in"] = n
+        try:
+            for rec in base_iter:
+                n += 1
+                if fail_after and n > fail_after:
+                    raise InjectedFailure("injected mid-task failure")
+                yield rec
+                if lease.consumed() and chainable:
+                    exhausted["flag"] = True
+                    return
+        finally:
+            # also on the early (chaining) return — every link reports
+            # what it actually ingested, not just the last one
+            stats["records_in"] = n
 
     out_iter = _apply_ops(metered(), payload["ops"])
 
@@ -478,6 +590,10 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
         for rec in out_iter:
             writer.add(rec)
         writer.flush()
+        if payload.get("emit_eos") and not exhausted["flag"]:
+            # pipelined protocol: the LAST link of the (possibly chained)
+            # task closes the stream for this producer
+            writer.finalize()
         resp = {"status": "ok", "message_counts": writer.message_counts,
                 "stats": stats}
         if exhausted["flag"]:

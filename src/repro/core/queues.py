@@ -5,7 +5,13 @@ SQSSim reproduces what matters for Flint's correctness story:
   * batched sends (<=10 messages, <=256 KiB each), billing per 64 KiB chunk;
   * AT-LEAST-ONCE delivery: a seeded duplicator re-delivers a configurable
     fraction of messages (paper §VI flags this; core.dedup handles it);
-  * no ordering guarantees (receive shuffles within the visible set).
+  * no ordering guarantees (receive shuffles within the visible set);
+  * two message kinds: "data" (packed record batches) and "eos" — the
+    per-producer end-of-stream control message that lets consumers start
+    draining BEFORE their producers finish (pipelined stage execution).
+    An EOS message carries the producer's total sequence count in ``seq``;
+  * a condition variable on arrival, so consumers block instead of
+    sleep-spinning while their producers are still computing.
 
 ObjectStoreSim is the S3 stand-in: ranged GETs over byte blobs for input
 splits, PUT/GET for the Qubole-style object-store shuffle (paper §V) and
@@ -16,8 +22,9 @@ from __future__ import annotations
 
 import pickle
 import random
+import struct
 import threading
-from collections import defaultdict, deque
+from collections import deque
 from typing import Any, Iterable
 
 from repro.core.costs import (SQS_BATCH_MESSAGES, SQS_MESSAGE_LIMIT,
@@ -25,12 +32,19 @@ from repro.core.costs import (SQS_BATCH_MESSAGES, SQS_MESSAGE_LIMIT,
 
 
 class Message:
-    __slots__ = ("body", "seq", "src")
+    __slots__ = ("body", "seq", "src", "kind")
 
-    def __init__(self, body: bytes, seq: int, src: str):
+    def __init__(self, body: bytes, seq: int, src: str, kind: str = "data"):
         self.body = body
         self.seq = seq
         self.src = src
+        self.kind = kind
+
+
+def eos_message(src: str, total: int) -> Message:
+    """End-of-stream control message: ``total`` is the number of data
+    messages (sequence ids 0..total-1) this producer sent to the queue."""
+    return Message(b"", total, src, kind="eos")
 
 
 class SQSSim:
@@ -41,16 +55,28 @@ class SQSSim:
         self.ledger = ledger
         self.duplicate_prob = duplicate_prob
         self._rng = random.Random(seed)
-        self._queues: dict[str, deque[Message]] = defaultdict(deque)
+        self._queues: dict[str, deque[Message]] = {}
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._closed = False
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self):
+        """Release every blocked consumer (scheduler shutdown/abort)."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
 
     def create_queue(self, name: str):
-        with self._lock:
+        with self._cond:
             self._queues.setdefault(name, deque())
         self.ledger.add_sqs_control()
 
     def delete_queue(self, name: str):
-        with self._lock:
+        with self._cond:
             self._queues.pop(name, None)
         self.ledger.add_sqs_control()
 
@@ -62,18 +88,25 @@ class SQSSim:
             if len(m.body) > SQS_MESSAGE_LIMIT:
                 raise ValueError("SQS message exceeds 256 KiB")
             payload += len(m.body)
-        self.ledger.add_sqs(payload)
-        with self._lock:
-            q = self._queues[name]
+        self.ledger.add_sqs(payload)  # a rejected send still bills
+        with self._cond:
+            q = self._queues.get(name)
+            if q is None:
+                # queue was deleted (e.g. a losing speculative duplicate
+                # still flushing after its stage completed) — like real
+                # SQS's QueueDoesNotExist, the send goes nowhere; it must
+                # NOT resurrect the queue and strand messages
+                return
             for m in messages:
                 q.append(m)
                 # at-least-once: occasionally deliver a duplicate
                 if self._rng.random() < self.duplicate_prob:
-                    q.append(Message(m.body, m.seq, m.src))
+                    q.append(Message(m.body, m.seq, m.src, m.kind))
+            self._cond.notify_all()
 
     def receive_batch(self, name: str, max_messages: int = SQS_BATCH_MESSAGES
                       ) -> list[Message]:
-        with self._lock:
+        with self._cond:
             q = self._queues.get(name)
             out = []
             if q:
@@ -86,6 +119,36 @@ class SQSSim:
         payload = sum(len(m.body) for m in out)
         self.ledger.add_sqs(max(payload, 1), receive=True)
         return out
+
+    def receive_many(self, name: str, max_messages: int = 100
+                     ) -> list[Message]:
+        """Drain up to ``max_messages`` in one scheduler step. Physically
+        this is ceil(n/10) batch-receive API calls, and it bills as such."""
+        with self._cond:
+            q = self._queues.get(name)
+            out = []
+            if q:
+                k = min(max_messages, len(q))
+                if len(q) > k and self._rng.random() < 0.5:
+                    q.rotate(-self._rng.randrange(len(q) - k + 1))
+                for _ in range(k):
+                    out.append(q.popleft())
+        if not out:
+            self.ledger.add_sqs(1, receive=True)  # one empty receive
+            return out
+        for i in range(0, len(out), SQS_BATCH_MESSAGES):
+            chunk = out[i:i + SQS_BATCH_MESSAGES]
+            payload = sum(len(m.body) for m in chunk)
+            self.ledger.add_sqs(max(payload, 1), receive=True)
+        return out
+
+    def wait_for_messages(self, name: str, timeout: float) -> bool:
+        """Block until the queue is non-empty (or the sim is closed).
+        Long polling: waiting itself is not a billable request."""
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._closed or bool(self._queues.get(name)),
+                timeout)
 
     def approx_len(self, name: str) -> int:
         with self._lock:
@@ -136,24 +199,38 @@ class ObjectStoreSim:
         return pickle.loads(self.get(key))
 
 
+_FRAME = struct.Struct("<I")  # 4-byte little-endian record-length prefix
+
+
 def pack_records(records: Iterable[Any], limit: int = SQS_MESSAGE_LIMIT
                  ) -> list[bytes]:
-    """Greedily pack records into pickled message bodies under the 256 KiB
-    SQS cap. Returns a list of message bodies."""
+    """Pack records into length-prefixed message bodies under the 256 KiB
+    SQS cap, pickling each record EXACTLY once (single-pass incremental
+    framing — the old implementation pickled twice: once to estimate the
+    size, once inside the batch pickle)."""
     bodies: list[bytes] = []
-    buf: list[Any] = []
-    size = 64  # pickle overhead headroom
+    frames: list[bytes] = []
+    size = 0
     for r in records:
-        est = len(pickle.dumps(r, protocol=pickle.HIGHEST_PROTOCOL))
-        if buf and size + est > limit:
-            bodies.append(pickle.dumps(buf, protocol=pickle.HIGHEST_PROTOCOL))
-            buf, size = [], 64
-        buf.append(r)
-        size += est
-    if buf:
-        bodies.append(pickle.dumps(buf, protocol=pickle.HIGHEST_PROTOCOL))
+        blob = pickle.dumps(r, protocol=pickle.HIGHEST_PROTOCOL)
+        need = _FRAME.size + len(blob)
+        if frames and size + need > limit:
+            bodies.append(b"".join(frames))
+            frames, size = [], 0
+        frames.append(_FRAME.pack(len(blob)))
+        frames.append(blob)
+        size += need
+    if frames:
+        bodies.append(b"".join(frames))
     return bodies
 
 
 def unpack_records(body: bytes) -> list[Any]:
-    return pickle.loads(body)
+    out = []
+    off, n = 0, len(body)
+    while off < n:
+        (ln,) = _FRAME.unpack_from(body, off)
+        off += _FRAME.size
+        out.append(pickle.loads(body[off:off + ln]))
+        off += ln
+    return out

@@ -2,7 +2,11 @@
 
 An RDD is a lazy lineage node; nothing executes until an action. The DAG
 scheduler (core.dag) cuts the lineage into stages at wide dependencies,
-exactly as the paper describes reusing Spark's physical planning.
+exactly as the paper describes reusing Spark's physical planning. Because
+every wide dependency's producer task count is fixed at plan time, stage
+plans carry those counts down to the scheduler, which pipelines consumer
+stages concurrently with their producers (EOS shuffle protocol — see
+docs/eos_shuffle.md) instead of barrier-scheduling them.
 
 Supported transformations: map, filter, flatMap, mapPartitions (narrow);
 reduceByKey, groupByKey, join, repartition (wide); union. Actions:

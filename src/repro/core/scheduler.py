@@ -1,20 +1,41 @@
 """FlintScheduler — the serverless SchedulerBackend (paper §III).
 
-Lives on the client, drives one stage at a time:
-  * creates the stage's output queues, serializes tasks, launches executors
-    asynchronously up to the concurrency cap;
-  * processes responses: CONTINUATIONS are re-invoked on warm containers
-    (executor chaining), failures retried with the same task identity
-    (idempotent via seq-id dedup), STRAGGLERS get a speculative duplicate
-    (first completion wins — duplicates are dropped by the same dedup);
-  * once all tasks of a stage complete, aggregates per-queue message counts
-    and launches the next stage with those expectations; deletes queues
-    once consumed.
+Lives on the client and drives the physical plan in one of two modes:
+
+PIPELINED (default, ``cfg.pipeline_stages``): every stage's tasks enter a
+single launch frontier ordered by stage id and bounded by the concurrency
+cap. Consumer tasks are invoked WHILE their producers are still running;
+they drain their queues as messages arrive and terminate on per-producer
+EOS control messages (the producer quorum is known at plan time), so queue
+transport and consumer-side folding overlap producer compute — no stage
+barrier. Producer-stage work (retries, chained continuations) always
+outranks consumer launches in the frontier, which keeps the window
+deadlock-free: a slot freed by a producer completion is re-offered to
+producer work before any consumer takes it.
+
+BARRIER (``pipeline_stages=False``, the paper's original design kept for
+A/B measurement): one stage at a time; per-queue message counts are
+aggregated after the producer stage completes and handed to consumers as
+drain expectations.
+
+Both modes share task semantics: CONTINUATIONS re-invoked on warm
+containers (executor chaining — a chained producer only emits EOS from its
+final link), failures retried with the same task identity (idempotent via
+stable partitioning + seq-id dedup), stragglers get a speculative
+duplicate (first completion wins; duplicate messages AND duplicate EOS are
+dropped by the same dedup). Speculation is restricted to producer-side
+(non-shuffle-reading) tasks: a consumer blocked on its producers is
+waiting, not straggling, and two drains competing for one queue would
+destructively split its messages (SQS receives consume; open item: model
+visibility-timeout redelivery to lift this). Straggler thresholds compare
+scheduler-observed latency and allow for one cold start.
 """
 
 from __future__ import annotations
 
 import concurrent.futures as cf
+import heapq
+import itertools
 import pickle
 import threading
 import time
@@ -31,6 +52,14 @@ class StageFailure(RuntimeError):
     def __init__(self, msg, error_type=""):
         super().__init__(msg)
         self.error_type = error_type
+
+
+def _consumed_shuffles(stage: StagePlan) -> set[int]:
+    sids: set[int] = set()
+    for task in stage.tasks:
+        if isinstance(task.input, ShuffleRead):
+            sids.update(sid for sid, _ in task.input.parts)
+    return sids
 
 
 class FlintScheduler:
@@ -52,8 +81,37 @@ class FlintScheduler:
 
     # ------------------------------------------------------------------
     def run(self, stages: list[StagePlan]):
+        if self.cfg.pipeline_stages:
+            return self._run_pipelined(stages)
+        return self._run_barrier(stages)
+
+    @staticmethod
+    def _queue_parts(stages: list[StagePlan]) -> dict[int, int]:
+        """shuffle_id -> number of queues (the PRODUCER's partition count,
+        not the consumer stage's task count — the two differ e.g. under
+        unions, and deleting by the wrong one leaks queues)."""
+        return {s.write.shuffle_id: s.write.nparts
+                for s in stages if s.write is not None}
+
+    def _consumer_failure_fatal(self, task: TaskDef) -> bool:
+        """A shuffle-reading task that fails mid-run may already have
+        destructively drained its SQS queue(s); its retry would only wait
+        out the drain timeout on messages that no longer exist — fail the
+        stage immediately instead. The S3 object-store drain is
+        non-destructive, so those consumers remain retryable."""
+        return (isinstance(task.input, ShuffleRead)
+                and self.cfg.shuffle_backend != "s3")
+
+    def _delete_shuffle_queues(self, sids, nparts_by_sid):
+        for sid in sids:
+            for p in range(nparts_by_sid[sid]):
+                self.sqs.delete_queue(queue_name(sid, p))
+
+    # ----------------------------------------------------- barrier mode
+    def _run_barrier(self, stages: list[StagePlan]):
         # expected message counts: shuffle_id -> partition -> src -> count
         expectations: dict[int, dict[int, dict[str, int]]] = {}
+        nparts_by_sid = self._queue_parts(stages)
         result = None
         for stage in stages:
             if stage.write is not None:
@@ -61,11 +119,8 @@ class FlintScheduler:
                     self.sqs.create_queue(queue_name(stage.write.shuffle_id, p))
             result = self._run_stage(stage, expectations)
             # queues consumed by this stage are dead — scheduler cleanup
-            for task in stage.tasks[:1]:
-                if isinstance(task.input, ShuffleRead):
-                    for sid, _ in task.input.parts:
-                        for p in range(len(stage.tasks)):
-                            self.sqs.delete_queue(queue_name(sid, p))
+            self._delete_shuffle_queues(_consumed_shuffles(stage),
+                                        nparts_by_sid)
         return result
 
     # ------------------------------------------------------------------
@@ -82,10 +137,18 @@ class FlintScheduler:
             extra["fail_after_records"] = fault["fail_after_records"]
         extra.pop("_speculative", None)
         if isinstance(task.input, ShuffleRead):
-            exp = {}
-            for sid, _ in task.input.parts:
-                exp[str(sid)] = expectations.get(sid, {}).get(task.input.partition, {})
-            extra["expected"] = exp
+            if self.cfg.pipeline_stages:
+                extra["n_producers"] = {
+                    str(sid): stage.producer_counts[sid]
+                    for sid, _ in task.input.parts}
+            else:
+                exp = {}
+                for sid, _ in task.input.parts:
+                    exp[str(sid)] = expectations.get(sid, {}).get(
+                        task.input.partition, {})
+                extra["expected"] = exp
+        if stage.write is not None and self.cfg.pipeline_stages:
+            extra["emit_eos"] = True
         if stage.action == "save" or stage.save_prefix:
             extra["save_prefix"] = stage.save_prefix
         return serialize_task(task, attempt, extra)
@@ -113,8 +176,27 @@ class FlintScheduler:
         for task in stage.tasks:
             launch(task)
 
+        def can_speculate(idx) -> bool:
+            # consumers are never speculated: two drains competing for one
+            # queue destructively split its messages so neither completes
+            return not isinstance(stage.tasks[idx].input, ShuffleRead)
+
+        def spec_armed() -> bool:
+            return (len(durations) >= self.cfg.speculation_min_done
+                    and len(inflight) < self.cfg.concurrency
+                    and any(not spec and idx not in speculated
+                            and idx not in results and can_speculate(idx)
+                            for idx, spec, _ in inflight.values()))
+
+        # straggler thresholds compare scheduler-observed latency, so allow
+        # for a cold start before calling anything a straggler
+        start_allowance = self.cfg.cold_start_s * self.cfg.start_latency_scale
+
         while inflight:
-            done, _ = cf.wait(list(inflight), timeout=0.05,
+            # event-driven: block on completions; wake periodically only
+            # while a straggler check could actually fire
+            done, _ = cf.wait(list(inflight),
+                              timeout=0.05 if spec_armed() else 5.0,
                               return_when=cf.FIRST_COMPLETED)
             now = time.monotonic()
             # straggler speculation
@@ -123,9 +205,9 @@ class FlintScheduler:
                 med = sorted(durations)[len(durations) // 2]
                 for fut, (idx, spec, started) in list(inflight.items()):
                     if (not spec and idx not in speculated
-                            and idx not in results
+                            and idx not in results and can_speculate(idx)
                             and now - started > self.cfg.speculation_factor
-                            * max(med, 0.05)):
+                            * max(med, 0.05) + start_allowance):
                         speculated.add(idx)
                         launch(stage.tasks[idx], speculative=True)
             for fut in done:
@@ -140,6 +222,13 @@ class FlintScheduler:
                     if resp.get("error_type") == "MemoryCapExceeded":
                         raise StageFailure(resp.get("error", ""),
                                            error_type="MemoryCapExceeded")
+                    if self._consumer_failure_fatal(stage.tasks[idx]):
+                        raise StageFailure(
+                            f"task {stage.id}/{idx} failed after draining "
+                            f"its queue(s); SQS receives are destructive so "
+                            f"the retry could never complete: "
+                            f"{resp.get('error')}",
+                            error_type=resp.get("error_type", ""))
                     attempts[idx] += 1
                     if attempts[idx] > self.cfg.max_task_retries:
                         raise StageFailure(
@@ -154,7 +243,7 @@ class FlintScheduler:
                     self._merge_partial(resp, idx, partials, counts)
                     launch(stage.tasks[idx], extra=resp["continuation"])
                     continue
-                durations.append(resp.get("duration_s", 0.0))
+                durations.append(now - started)
                 self._merge_partial(resp, idx, partials, counts)
                 results[idx] = True
 
@@ -177,6 +266,191 @@ class FlintScheduler:
         if self.verbose:
             print(f"[flint] stage {stage.id}: {self.stage_stats[-1]}")
 
+        return self._stage_result(stage, partials)
+
+    # --------------------------------------------------- pipelined mode
+    def _run_pipelined(self, stages: list[StagePlan]):
+        cfg = self.cfg
+        nparts_by_sid = self._queue_parts(stages)
+        for stage in stages:
+            if stage.write is not None:
+                for p in range(stage.write.nparts):
+                    self.sqs.create_queue(queue_name(stage.write.shuffle_id, p))
+
+        producer_stage_of = {s.write.shuffle_id: si
+                             for si, s in enumerate(stages)
+                             if s.write is not None}
+        deps = [sorted(producer_stage_of[sid]
+                       for sid in _consumed_shuffles(stage))
+                for stage in stages]
+
+        n_stages = len(stages)
+        results: list[dict] = [{} for _ in stages]
+        partials: list[dict] = [{} for _ in stages]
+        counts: list[dict] = [{} for _ in stages]
+        attempts = [{i: 0 for i in range(len(s.tasks))} for s in stages]
+        durations: list[list[float]] = [[] for _ in stages]
+        speculated: list[set] = [set() for _ in stages]
+        chained = [0] * n_stages
+        dup_dropped = [0] * n_stages
+        stage_done = [False] * n_stages
+        stage_t0: list[float | None] = [None] * n_stages
+        stats_rows: list[dict | None] = [None] * n_stages
+        final_result: list[Any] = [None]
+
+        # launch frontier: a min-heap keyed (stage, arrival) so producer
+        # work — including late retries and chained continuations — always
+        # outranks consumer launches for a freed window slot
+        ticket = itertools.count()
+        pending: list = []
+        inflight: dict[cf.Future, tuple[int, int, bool, float]] = {}
+
+        def push(si, task, extra=None, speculative=False):
+            heapq.heappush(pending,
+                           (si, next(ticket), task, extra, speculative))
+
+        for si, stage in enumerate(stages):
+            for task in stage.tasks:
+                push(si, task)
+
+        def launch_ready():
+            while pending and len(inflight) < cfg.concurrency:
+                si, _, task, extra, speculative = heapq.heappop(pending)
+                if task.index in results[si]:
+                    continue  # stale: original already won
+                if stage_t0[si] is None:
+                    stage_t0[si] = time.monotonic()
+                payload = self._payload_for(
+                    task, stages[si], attempts[si][task.index], None,
+                    dict(extra or {}, _speculative=speculative))
+                fut = self.pool.submit(self.lam.invoke, payload)
+                inflight[fut] = (si, task.index, speculative,
+                                 time.monotonic())
+
+        def deps_done(si) -> bool:
+            return all(stage_done[d] for d in deps[si])
+
+        def can_speculate(si, idx) -> bool:
+            # consumers are never speculated: two drains competing for one
+            # queue destructively split its messages so neither completes
+            return not isinstance(stages[si].tasks[idx].input, ShuffleRead)
+
+        start_allowance = cfg.cold_start_s * cfg.start_latency_scale
+
+        def spec_armed() -> bool:
+            if len(inflight) >= cfg.concurrency:
+                return False
+            for fsi, idx, spec, _ in inflight.values():
+                if (not spec and deps_done(fsi) and can_speculate(fsi, idx)
+                        and len(durations[fsi]) >= cfg.speculation_min_done
+                        and idx not in speculated[fsi]
+                        and idx not in results[fsi]):
+                    return True
+            return False
+
+        def finish_stage(si, stage):
+            stage_done[si] = True
+            stats_rows[si] = {
+                "stage": stage.id, "tasks": len(stage.tasks),
+                "wall_s": round(time.monotonic()
+                                - (stage_t0[si] or time.monotonic()), 4),
+                "attempts": sum(attempts[si].values()) + len(stage.tasks),
+                "chained": chained[si],
+                "speculated": len(speculated[si]),
+                "spec_dropped": dup_dropped[si],
+            }
+            if self.verbose:
+                print(f"[flint] stage {stage.id}: {stats_rows[si]}")
+            self._delete_shuffle_queues(_consumed_shuffles(stage),
+                                        nparts_by_sid)
+            if stage.action is not None or stage.write is None:
+                final_result[0] = self._stage_result(stage, partials[si])
+
+        launch_ready()
+        try:
+            while inflight:
+                done, _ = cf.wait(list(inflight),
+                                  timeout=0.05 if spec_armed() else 5.0,
+                                  return_when=cf.FIRST_COMPLETED)
+                now = time.monotonic()
+                # straggler speculation — only for stages whose producers
+                # are all done (a blocked consumer is not a straggler)
+                if len(inflight) < cfg.concurrency or pending:
+                    for fut, (fsi, idx, spec, started) in list(
+                            inflight.items()):
+                        if (spec or not deps_done(fsi)
+                                or not can_speculate(fsi, idx)
+                                or idx in speculated[fsi]
+                                or idx in results[fsi]):
+                            continue
+                        durs = durations[fsi]
+                        if len(durs) < cfg.speculation_min_done:
+                            continue
+                        med = sorted(durs)[len(durs) // 2]
+                        if now - started > (cfg.speculation_factor
+                                            * max(med, 0.05)
+                                            + start_allowance):
+                            speculated[fsi].add(idx)
+                            push(fsi, stages[fsi].tasks[idx],
+                                 speculative=True)
+                for fut in done:
+                    si, idx, speculative, started = inflight.pop(fut)
+                    resp = fut.result()
+                    if "spilled" in resp:
+                        resp = pickle.loads(self.store.get(resp["spilled"]))
+                    if idx in results[si]:
+                        dup_dropped[si] += 1  # speculative dup lost the race
+                        continue
+                    if resp.get("status") != "ok":
+                        if resp.get("error_type") == "MemoryCapExceeded":
+                            raise StageFailure(
+                                resp.get("error", ""),
+                                error_type="MemoryCapExceeded")
+                        if self._consumer_failure_fatal(stages[si].tasks[idx]):
+                            raise StageFailure(
+                                f"task {stages[si].id}/{idx} failed after "
+                                f"draining its queue(s); SQS receives are "
+                                f"destructive so the retry could never "
+                                f"complete: {resp.get('error')}",
+                                error_type=resp.get("error_type", ""))
+                        attempts[si][idx] += 1
+                        if attempts[si][idx] > cfg.max_task_retries:
+                            raise StageFailure(
+                                f"task {stages[si].id}/{idx} failed after "
+                                f"{attempts[si][idx]} attempts: "
+                                f"{resp.get('error')}",
+                                error_type=resp.get("error_type", ""))
+                        push(si, stages[si].tasks[idx])
+                        continue
+                    if "continuation" in resp:
+                        # chaining: the producer has NOT emitted EOS yet —
+                        # the re-invoked link (or its last successor) will
+                        chained[si] += 1
+                        self._merge_partial(resp, idx, partials[si],
+                                            counts[si])
+                        push(si, stages[si].tasks[idx],
+                             extra=resp["continuation"])
+                        continue
+                    durations[si].append(now - started)
+                    self._merge_partial(resp, idx, partials[si], counts[si])
+                    results[si][idx] = True
+                    if len(results[si]) == len(stages[si].tasks):
+                        finish_stage(si, stages[si])
+                launch_ready()
+        except BaseException:
+            # unblock any consumer still waiting on queues we now know
+            # will never complete (fatal failure / elastic re-plan)
+            self.sqs.close()
+            raise
+
+        # completion order is event order; report in plan order
+        self.stage_stats.extend(r for r in stats_rows if r is not None)
+        return final_result[0]
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _stage_result(stage: StagePlan, partials: dict) -> Any:
+        n = len(stage.tasks)
         if stage.action in ("collect", "sum"):
             out = []
             for i in range(n):
@@ -196,4 +470,5 @@ class FlintScheduler:
                 cur[p] = cur.get(p, 0) + c
 
     def shutdown(self):
+        self.sqs.close()  # release any consumer blocked on arrival
         self.pool.shutdown(wait=False)

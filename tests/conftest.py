@@ -7,6 +7,75 @@ os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# ---------------------------------------------------------------------------
+# Optional-dependency shim: if `hypothesis` is absent, install a tiny
+# deterministic stand-in covering the subset this suite uses
+# (given/settings + integers/floats/sampled_from/booleans), so every test
+# module collects and property tests still run over seeded random samples.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _settings(**kwargs):
+        def deco(fn):
+            fn._shim_settings = dict(kwargs)
+            return fn
+        return deco
+
+    def _given(**strategies):
+        def deco(fn):
+            max_examples = getattr(fn, "_shim_settings",
+                                   {}).get("max_examples", 10)
+
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xF11A7)
+                for _ in range(max_examples):
+                    drawn = {name: s.example_from(rng)
+                             for name, s in strategies.items()}
+                    fn(*args, **dict(kwargs, **drawn))
+            # plain (*args, **kwargs) signature on purpose: pytest must not
+            # mistake the strategy kwargs for fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    _mod = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+    _mod.given = _given
+    _mod.settings = _settings
+    _mod.strategies = _st
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _st
+# ---------------------------------------------------------------------------
+
 import jax  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "highest")
