@@ -16,6 +16,14 @@
    producer stage finishes; the pipelined scheduler overlaps both with
    producer compute. Results must be identical — the speedup is measured,
    not claimed.
+
+3. Fault-injection A/B (visibility-timeout recovery, paper §III/§VI):
+   the same query fault-free vs with one reducer dying mid-drain
+   (``fail_after_records``) plus a second reducer straggling (eligible
+   for consumer-side speculation), under at-least-once duplication.
+   Before visibility-timeout receives, the dying reducer aborted the
+   whole job; now both modes must complete with IDENTICAL results, the
+   overhead being a visibility-deadline wait plus the retry.
 """
 
 from __future__ import annotations
@@ -105,6 +113,46 @@ def run_pipeline_ab(rows=None, trials=2):
     return out, answers[0] == answers[1], round(speedup, 2)
 
 
+def run_fault_ab(rows=None):
+    """Consumer fault injection: reduce-stage task 0 dies after 5 records,
+    task 1 straggles 0.6 s (speculation candidate), SQS duplicates 5 % of
+    deliveries. Returns (per-run rows, all-runs-identical)."""
+    data = taxi_csv(rows or N_ROWS, seed=13)
+    faults = {(1, 0): {"fail_after_records": 5},
+              (1, 1): {"straggle_s": 0.6}}
+    out = []
+    identical = True
+    for pipelined in (False, True):
+        answers = []
+        for fault_plan in ({}, faults):
+            ctx = FlintContext(
+                "flint",
+                FlintConfig(concurrency=16, flush_records=2000,
+                            pipeline_stages=pipelined,
+                            duplicate_prob=0.05,
+                            visibility_timeout_s=1.0,
+                            drain_timeout_s=10.0,
+                            speculation_factor=2.0,
+                            speculation_min_done=2),
+                fault_plan=fault_plan, elastic_retries=0)
+            ctx.upload("taxi.csv", data)
+            t0 = time.monotonic()
+            ans = shuffle_query(ctx)
+            wall = time.monotonic() - t0
+            answers.append(sorted(ans))
+            stats = ctx.last_scheduler.stage_stats
+            out.append({
+                "mode": "pipelined" if pipelined else "barrier",
+                "faults": "injected" if fault_plan else "none",
+                "wall_s": round(wall, 4),
+                "attempts": sum(s["attempts"] for s in stats),
+                "speculated": sum(s["speculated"] for s in stats),
+                "redeliveries": ctx.last_scheduler.sqs.redeliveries,
+            })
+        identical = identical and answers[0] == answers[1]
+    return out, identical
+
+
 def main():
     rows, agreement = run()
     print("backend,wall_s,modeled_service_s,shuffle_cost_usd,sqs_requests,s3_ops")
@@ -118,6 +166,12 @@ def main():
         print(f"{r['mode']},{r['wall_s']},{r['sqs_requests']},"
               f"{r['lambda_requests']},{r['total_usd']}")
     print(f"# pipelined speedup: {speedup}x, results identical: {identical}")
+    fault_rows, fault_identical = run_fault_ab()
+    print("mode,faults,wall_s,attempts,speculated,redeliveries")
+    for r in fault_rows:
+        print(f"{r['mode']},{r['faults']},{r['wall_s']},{r['attempts']},"
+              f"{r['speculated']},{r['redeliveries']}")
+    print(f"# fault-injected runs identical to fault-free: {fault_identical}")
     return rows, agreement
 
 

@@ -8,6 +8,12 @@ Semantics preserved from the paper (§III-A/B):
     (producer task, sequence id); under pipelined execution the drain
     starts BEFORE producers finish and terminates on per-producer EOS
     control messages (docs/eos_shuffle.md) instead of a count table;
+  * ACK-AFTER-FOLD: SQS receives are visibility-timeout claims, not pops.
+    The drain folds each message, accumulates its receipt handle, and
+    heartbeats ``change_visibility`` through long folds; the batched
+    delete (ack) happens only once the task's OUTPUT is durable — so a
+    consumer that dies anywhere mid-task leaves every message it read to
+    redeliver to its retry (or to a speculative twin);
   * outputs are hash-partitioned, buffered in memory, and FLUSHED to the
     per-partition queues when the buffer grows past its cap (the 3008 MB
     limit made concrete as a record-count proxy);
@@ -25,6 +31,7 @@ straggler behavior deterministic in tests.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import pickle
 import threading
 import time
@@ -32,10 +39,11 @@ import zlib
 from typing import Any
 
 from repro.core import serde
-from repro.core.costs import (LAMBDA_PAYLOAD_LIMIT, CostLedger)
+from repro.core.costs import (LAMBDA_PAYLOAD_LIMIT, SQS_BATCH_MESSAGES,
+                              CostLedger)
 from repro.core.dag import CollectionInput, ShuffleRead, SourceInput, TaskDef
-from repro.core.queues import (Message, ObjectStoreSim, SQSSim, eos_message,
-                               pack_records, unpack_records)
+from repro.core.queues import (Message, ObjectStoreSim, QueueGone, SQSSim,
+                               eos_message, pack_records, unpack_records)
 
 
 class InjectedFailure(RuntimeError):
@@ -75,6 +83,11 @@ class FlintConfig:
     speculation_factor: float = 4.0  # straggler duplicate threshold
     speculation_min_done: int = 4
     drain_timeout_s: float = 30.0
+    # SQS visibility timeout: how long a received-but-unacked message stays
+    # invisible before redelivery. Must stay below drain_timeout_s or a
+    # retried consumer times out waiting for its predecessor's claims to
+    # expire.
+    visibility_timeout_s: float = 10.0
     duplicate_prob: float = 0.0  # SQS at-least-once duplication rate
     chunk_fetch_bytes: int = 4 * 2**20
 
@@ -247,8 +260,26 @@ class _SourceReader:
                 yield ln.decode("utf-8", "replace")
 
 
+def _heartbeat(env: LambdaSim, held: dict, vis: float):
+    """Extend the visibility deadline of every receipt this drain holds
+    (stale receipts and deleted queues are no-ops)."""
+    for qname, rcpts in held.items():
+        receipts = list(rcpts.values())
+        for i in range(0, len(receipts), SQS_BATCH_MESSAGES):
+            env.sqs.change_visibility(qname,
+                                      receipts[i:i + SQS_BATCH_MESSAGES], vis)
+
+
+def _stable_order(rec) -> bytes:
+    """Deterministic total order on records (their pickle bytes) — used to
+    make a shuffle-reading task's re-emission byte-identical across
+    attempts whose drains arrived in different orders."""
+    return pickle.dumps(rec, protocol=pickle.HIGHEST_PROTOCOL)
+
+
 def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict,
-                   n_producers: dict | None = None) -> dict:
+                   n_producers: dict | None = None, *,
+                   sort_groups: bool = False) -> dict:
     """Drain queue(s) for this partition with seq-id dedup, folding each
     message into the aggregate AS IT ARRIVES (streaming — transport time
     overlaps the fold). Two termination protocols:
@@ -261,12 +292,37 @@ def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict,
       * barrier (``expected`` given): the legacy post-hoc message-count
         table handed over after the producer stage fully completed.
 
-    Returns ({(sid, mode): folded-aggregate}, stats)."""
+    Receives are visibility-timeout claims: every message stays in-flight
+    under a receipt handle this drain holds and heartbeats; nothing is
+    acked here. Returns ({(sid, mode): folded-aggregate}, stats, ack)
+    where ``ack`` batch-deletes every held receipt — the caller invokes
+    it only once the task's output is durable, so an earlier death leaves
+    the whole input to redeliver for the retry.
+
+    ``sort_groups`` (set when this task WRITES another shuffle): group/
+    join value-lists collect in arrival order, which differs across
+    attempts — sort them so the records this task re-emits are
+    byte-identical and downstream (src, seq) dedup stays sound."""
     out = {}
     stats = {"messages": 0, "duplicates": 0, "records": 0}
     combine = (serde.loads_fn(read.combine_fn)
                if isinstance(read.combine_fn, bytes) else read.combine_fn)
     timeout = env.cfg.drain_timeout_s
+    # queue -> {(src, seq, kind): latest receipt handle}. Keyed, not a
+    # list: an idle wait lets claims lapse and redeliver every visibility
+    # period, and keeping only the freshest handle per message bounds
+    # held (and the heartbeat/ack request counts) by the distinct message
+    # count instead of growing per redelivery cycle.
+    held: dict[str, dict] = {}
+
+    def ack():
+        # batched ack-after-fold, deferred to task completion; duplicate
+        # or stale receipts are idempotent no-ops inside delete_batch
+        for qname, rcpts in held.items():
+            receipts = list(rcpts.values())
+            for i in range(0, len(receipts), SQS_BATCH_MESSAGES):
+                env.sqs.delete_batch(qname,
+                                     receipts[i:i + SQS_BATCH_MESSAGES])
 
     def fold(agg, records, mode):
         if mode == "agg":
@@ -337,47 +393,103 @@ def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict,
                     raise TimeoutError(f"s3 shuffle {prefix} incomplete")
                 time.sleep(backoff)
                 backoff = min(backoff * 2, 0.1)
+            if sort_groups and mode in ("group", "join"):
+                for vals in agg.values():
+                    vals.sort(key=_stable_order)
             out[(sid, mode)] = agg
             continue
 
         name = queue_name(sid, read.partition)
+        vis = env.cfg.visibility_timeout_s
+        hb_deadline = time.monotonic() + vis / 2
+        # adaptive drain sizing: one scheduler step takes the whole visible
+        # backlog (bounded), not a fixed 100. The backlog estimate is a
+        # billable request (GetQueueAttributes), so it is re-queried only
+        # while receives keep coming back full — a trickle or an idle wait
+        # falls back to the minimum batch for free.
+        want = None  # None => query the backlog estimate
         while not done():
-            msgs = env.sqs.receive_many(name)
+            if want is None:
+                want = min(1000, max(SQS_BATCH_MESSAGES,
+                                     env.sqs.approx_len(name)))
+            try:
+                msgs = env.sqs.receive_many(name, want)
+            except QueueGone:
+                raise AbortedError(
+                    f"queue {name} deleted — a competing attempt already "
+                    f"completed this partition")
+            now = time.monotonic()
             if not msgs:
+                want = SQS_BATCH_MESSAGES
                 if env.sqs.closed:
                     raise AbortedError(f"queue {name}: aborted")
-                if time.monotonic() > deadline:
+                if now > deadline:
                     raise TimeoutError(
                         f"queue {name} incomplete: {len(seen)} data msgs, "
                         f"eos {len(eos_total)}/{quorum}" if pipelined else
                         f"queue {name} incomplete: {len(seen)}"
                         f"/{sum(need.values())} messages")
-                # block on arrival instead of sleep-spinning
+                # block on arrival instead of sleep-spinning. NOTE: held
+                # claims are deliberately NOT heartbeated while idle: a
+                # drain idles because it still needs messages, and when a
+                # retry and a speculative twin race on one queue, each
+                # needs the OTHER's claims to lapse — idle heartbeats on
+                # both sides split the queue permanently and burn every
+                # retry. A lone waiting consumer instead re-receives its
+                # claimed backlog each visibility period (re-billed,
+                # deduped) — the bounded price of livelock-freedom.
                 env.sqs.wait_for_messages(name, 0.25)
                 continue
-            deadline = time.monotonic() + timeout  # progress resets it
+            want = None if len(msgs) == want else SQS_BATCH_MESSAGES
+            rcpts = held.setdefault(name, {})
+            progressed = False
             for m in msgs:
+                rcpts[(m.src, m.seq, m.kind)] = m.receipt
+                if time.monotonic() > hb_deadline:
+                    # actively folding: a long fold must not let held
+                    # messages expire mid-task and redeliver to a rival
+                    _heartbeat(env, held, vis)
+                    hb_deadline = time.monotonic() + vis / 2
                 if m.kind == "eos":
-                    if pipelined:
-                        eos_total[m.src] = m.seq  # idempotent on duplicates
+                    if pipelined and m.src not in eos_total:
+                        eos_total[m.src] = m.seq  # duplicates: same total
+                        progressed = True
                     continue
                 kid = (m.src, m.seq)
                 if kid in seen:
                     stats["duplicates"] += 1
                     continue
                 seen.add(kid)
+                progressed = True
                 per_src[m.src] = per_src.get(m.src, 0) + 1
                 stats["messages"] += 1
-                records = unpack_records(m.body)
+                records = unpack_records(m.body, env.store)
                 stats["records"] += len(records)
                 fold(agg, records, mode)
+            if progressed:
+                deadline = time.monotonic() + timeout
+            elif time.monotonic() > deadline:
+                # a batch of pure duplicates (e.g. this drain's own lapsed
+                # claims redelivering while a producer is stuck) is not
+                # progress — without this the inactivity timeout could
+                # never fire once the drain held a single claim
+                raise TimeoutError(
+                    f"queue {name} stalled: {len(seen)} data msgs, "
+                    f"eos {len(eos_total)}/{quorum}" if pipelined else
+                    f"queue {name} stalled: {len(seen)}"
+                    f"/{sum(need.values())} messages")
+        if sort_groups and mode in ("group", "join"):
+            for vals in agg.values():
+                vals.sort(key=_stable_order)
         out[(sid, mode)] = agg
-    return out, stats
+    return out, stats, ack
 
 
 def _shuffle_input_iter(read: ShuffleRead, env: LambdaSim, expected: dict,
-                        n_producers: dict | None = None):
-    data, stats = _drain_shuffle(read, env, expected, n_producers)
+                        n_producers: dict | None = None, *,
+                        sort_groups: bool = False):
+    data, stats, ack = _drain_shuffle(read, env, expected, n_producers,
+                                      sort_groups=sort_groups)
     if len(read.parts) == 2:  # join
         (sid_l, _), (sid_r, _) = read.parts
         left, right = data[read.parts[0]], data[read.parts[1]]
@@ -389,14 +501,12 @@ def _shuffle_input_iter(read: ShuffleRead, env: LambdaSim, expected: dict,
                 for lv in lvals:
                     for rv in rvals:
                         yield (k, (lv, rv))
-        return it(), stats
+        return it(), stats, ack
     (sid, mode) = read.parts[0]
     agg = data[(sid, mode)]
-    if mode == "agg":
-        return iter(agg.items()), stats
-    if mode == "group":
-        return iter(agg.items()), stats
-    return iter(agg), stats
+    if mode in ("agg", "group"):
+        return iter(agg.items()), stats, ack
+    return iter(agg), stats, ack
 
 
 def _flatmap_iter(it, fn):  # immediate fn binding (no late closure capture)
@@ -458,6 +568,15 @@ class _ShuffleWriter:
                             protocol=pickle.HIGHEST_PROTOCOL)
         return zlib.crc32(blob) % self.write.nparts
 
+    def _spill(self, blob: bytes) -> str:
+        """A single record pickle over the 256 KiB message cap rides the
+        object store; the queue carries a SpillPointer. Content-addressed
+        key, so a retry or speculative twin re-spilling the same record
+        overwrites idempotently."""
+        key = f"_spill/{hashlib.sha1(blob).hexdigest()}"
+        self.env.store.put(key, blob)
+        return key
+
     def add(self, record):
         w = self.write
         if w.mode == "repart":
@@ -497,7 +616,7 @@ class _ShuffleWriter:
                 self.env.store.put_obj(key, records)
                 continue
             name = queue_name(self.write.shuffle_id, p)
-            bodies = pack_records(records)
+            bodies = pack_records(records, spill=self._spill)
             batch: list[Message] = []
             for body in bodies:
                 seq = self.seq.get(p, 0)
@@ -550,6 +669,7 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
     inp = payload["input"]
     chainable = isinstance(inp, SourceInput)
 
+    ack_shuffle = None
     if isinstance(inp, SourceInput):
         reader = _SourceReader(inp, env.store, env.cfg,
                                payload.get("resume_offset"))
@@ -558,9 +678,10 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
         base_iter = iter(env.store.get_obj(f"{inp.key}/{inp.index}"))
         reader = None
     else:
-        base_iter, drain_stats = _shuffle_input_iter(
+        base_iter, drain_stats, ack_shuffle = _shuffle_input_iter(
             inp, env, payload.get("expected", {}),
-            payload.get("n_producers"))
+            payload.get("n_producers"),
+            sort_groups=payload["write"] is not None)
         stats.update(drain_stats)
         reader = None
 
@@ -587,6 +708,21 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
     write = payload["write"]
     if write is not None:
         writer = _ShuffleWriter(write, env, src_id, payload.get("seq_start"))
+        if ack_shuffle is not None:
+            # a shuffle-reading task's output follows its drain's arrival
+            # order, which differs across attempts. Downstream dedup keys
+            # on (src, seq), so a retry or speculative twin MUST re-emit
+            # byte-identical messages: materialize and sort before
+            # partitioning/packing (sorted input makes partition routing,
+            # flush boundaries, and body framing all deterministic).
+            out_iter = sorted(out_iter, key=_stable_order)
+            if len(out_iter) > env.cfg.agg_memory_records:
+                # the materialized output (e.g. a join cross-product) is
+                # state too — answer overflow with elasticity, like the
+                # drain aggregate
+                raise MemoryCapExceeded(
+                    f"materialized shuffle output {len(out_iter)} records "
+                    f"> cap {env.cfg.agg_memory_records}")
         for rec in out_iter:
             writer.add(rec)
         writer.flush()
@@ -594,6 +730,10 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
             # pipelined protocol: the LAST link of the (possibly chained)
             # task closes the stream for this producer
             writer.finalize()
+        if ack_shuffle is not None:
+            # input acked only now that the output is durable downstream;
+            # dying any earlier leaves it all to redeliver for the retry
+            ack_shuffle()
         resp = {"status": "ok", "message_counts": writer.message_counts,
                 "stats": stats}
         if exhausted["flag"]:
@@ -611,6 +751,8 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
         resp["saved_key"] = key
     else:
         resp["result"] = result
+    if ack_shuffle is not None:
+        ack_shuffle()  # input acked only once the sink is durable
     if exhausted["flag"]:
         resp["continuation"] = {"resume_offset": reader.consumed_until,
                                 "partial": True}

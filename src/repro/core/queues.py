@@ -6,6 +6,16 @@ SQSSim reproduces what matters for Flint's correctness story:
   * AT-LEAST-ONCE delivery: a seeded duplicator re-delivers a configurable
     fraction of messages (paper §VI flags this; core.dedup handles it);
   * no ordering guarantees (receive shuffles within the visible set);
+  * VISIBILITY-TIMEOUT receives: a receive does not pop a message — it
+    moves it to a per-queue in-flight set under a fresh receipt handle and
+    a visibility deadline. ``delete_batch`` (the ack) removes in-flight
+    messages for good; ``change_visibility`` extends a consumer's claim
+    (the heartbeat). A lazy sweep returns expired in-flight messages to
+    the visible set, where their redelivery bills as a fresh receive —
+    so a consumer that dies without acking leaves everything it read to
+    reappear for its retry (paper §III/§VI: "retry with the same
+    identity"), and two competing drains merely race on acks instead of
+    destructively splitting a queue;
   * two message kinds: "data" (packed record batches) and "eos" — the
     per-producer end-of-stream control message that lets consumers start
     draining BEFORE their producers finish (pipelined stage execution).
@@ -14,31 +24,42 @@ SQSSim reproduces what matters for Flint's correctness story:
     sleep-spinning while their producers are still computing.
 
 ObjectStoreSim is the S3 stand-in: ranged GETs over byte blobs for input
-splits, PUT/GET for the Qubole-style object-store shuffle (paper §V) and
-for the >6 MB payload spill (paper §III-B).
+splits, PUT/GET for the Qubole-style object-store shuffle (paper §V), the
+>6 MB payload spill (paper §III-B), and the >256 KiB record spill
+(SpillPointer messages).
 """
 
 from __future__ import annotations
 
+import itertools
 import pickle
 import random
 import struct
 import threading
+import time
 from collections import deque
-from typing import Any, Iterable
+from typing import Any, Callable, Iterable
 
 from repro.core.costs import (SQS_BATCH_MESSAGES, SQS_MESSAGE_LIMIT,
                               CostLedger)
 
 
+class QueueGone(RuntimeError):
+    """Receive from a deleted queue — like SQS's QueueDoesNotExist. Raised
+    so a losing speculative consumer aborts the moment the winner's
+    completion deletes the queue, instead of waiting out the drain
+    timeout."""
+
+
 class Message:
-    __slots__ = ("body", "seq", "src", "kind")
+    __slots__ = ("body", "seq", "src", "kind", "receipt")
 
     def __init__(self, body: bytes, seq: int, src: str, kind: str = "data"):
         self.body = body
         self.seq = seq
         self.src = src
         self.kind = kind
+        self.receipt = None  # set per receive; a redelivery gets a new one
 
 
 def eos_message(src: str, total: int) -> Message:
@@ -47,18 +68,31 @@ def eos_message(src: str, total: int) -> Message:
     return Message(b"", total, src, kind="eos")
 
 
+class _QueueState:
+    __slots__ = ("visible", "inflight")
+
+    def __init__(self):
+        self.visible: deque[Message] = deque()
+        self.inflight: dict[int, tuple[Message, float]] = {}  # receipt ->
+        #                                           (message, visibility deadline)
+
+
 class SQSSim:
-    """In-process SQS with at-least-once semantics and per-request billing."""
+    """In-process SQS with at-least-once + visibility-timeout semantics and
+    per-request billing."""
 
     def __init__(self, ledger: CostLedger, *, duplicate_prob: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, visibility_timeout: float = 30.0):
         self.ledger = ledger
         self.duplicate_prob = duplicate_prob
+        self.visibility_timeout = visibility_timeout
         self._rng = random.Random(seed)
-        self._queues: dict[str, deque[Message]] = {}
+        self._queues: dict[str, _QueueState] = {}
+        self._receipts = itertools.count(1)
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._closed = False
+        self.redeliveries = 0  # expired in-flight messages returned visible
 
     @property
     def closed(self) -> bool:
@@ -72,13 +106,31 @@ class SQSSim:
 
     def create_queue(self, name: str):
         with self._cond:
-            self._queues.setdefault(name, deque())
+            self._queues.setdefault(name, _QueueState())
         self.ledger.add_sqs_control()
 
     def delete_queue(self, name: str):
         with self._cond:
             self._queues.pop(name, None)
+            # a consumer blocked in wait_for_messages must wake and observe
+            # QueueGone on its next receive
+            self._cond.notify_all()
         self.ledger.add_sqs_control()
+
+    def _sweep(self, q: _QueueState):
+        """Lazy redelivery: return expired in-flight messages to the
+        visible set (their next receive bills fresh). Caller holds lock."""
+        if not q.inflight:
+            return
+        now = time.monotonic()
+        expired = [r for r, (_, dl) in q.inflight.items() if dl <= now]
+        for r in expired:
+            msg, _ = q.inflight.pop(r)
+            msg.receipt = None  # the old receipt handle is now stale
+            q.visible.append(msg)
+        if expired:
+            self.redeliveries += len(expired)
+            self._cond.notify_all()
 
     def send_batch(self, name: str, messages: list[Message]):
         if len(messages) > SQS_BATCH_MESSAGES:
@@ -98,27 +150,36 @@ class SQSSim:
                 # NOT resurrect the queue and strand messages
                 return
             for m in messages:
-                q.append(m)
+                q.visible.append(m)
                 # at-least-once: occasionally deliver a duplicate
                 if self._rng.random() < self.duplicate_prob:
-                    q.append(Message(m.body, m.seq, m.src, m.kind))
+                    q.visible.append(Message(m.body, m.seq, m.src, m.kind))
             self._cond.notify_all()
+
+    def _take_visible(self, q: _QueueState, max_messages: int
+                      ) -> list[Message]:
+        """Move up to ``max_messages`` from visible to in-flight under
+        fresh receipt handles. Caller holds lock."""
+        self._sweep(q)
+        out: list[Message] = []
+        vis = q.visible
+        k = min(max_messages, len(vis))
+        if k:
+            # no ordering guarantee: rotate by a random offset
+            if len(vis) > k and self._rng.random() < 0.5:
+                vis.rotate(-self._rng.randrange(len(vis) - k + 1))
+            deadline = time.monotonic() + self.visibility_timeout
+            for _ in range(k):
+                m = vis.popleft()
+                m.receipt = next(self._receipts)
+                q.inflight[m.receipt] = (m, deadline)
+                out.append(m)
+        return out
 
     def receive_batch(self, name: str, max_messages: int = SQS_BATCH_MESSAGES
                       ) -> list[Message]:
-        with self._cond:
-            q = self._queues.get(name)
-            out = []
-            if q:
-                # no ordering guarantee: rotate by a random offset
-                k = min(max_messages, len(q))
-                if len(q) > k and self._rng.random() < 0.5:
-                    q.rotate(-self._rng.randrange(len(q) - k + 1))
-                for _ in range(k):
-                    out.append(q.popleft())
-        payload = sum(len(m.body) for m in out)
-        self.ledger.add_sqs(max(payload, 1), receive=True)
-        return out
+        """One batch-receive API call (<=10 messages)."""
+        return self.receive_many(name, min(max_messages, SQS_BATCH_MESSAGES))
 
     def receive_many(self, name: str, max_messages: int = 100
                      ) -> list[Message]:
@@ -126,13 +187,9 @@ class SQSSim:
         this is ceil(n/10) batch-receive API calls, and it bills as such."""
         with self._cond:
             q = self._queues.get(name)
-            out = []
-            if q:
-                k = min(max_messages, len(q))
-                if len(q) > k and self._rng.random() < 0.5:
-                    q.rotate(-self._rng.randrange(len(q) - k + 1))
-                for _ in range(k):
-                    out.append(q.popleft())
+            if q is None:
+                raise QueueGone(name)
+            out = self._take_visible(q, max_messages)
         if not out:
             self.ledger.add_sqs(1, receive=True)  # one empty receive
             return out
@@ -142,17 +199,71 @@ class SQSSim:
             self.ledger.add_sqs(max(payload, 1), receive=True)
         return out
 
-    def wait_for_messages(self, name: str, timeout: float) -> bool:
-        """Block until the queue is non-empty (or the sim is closed).
-        Long polling: waiting itself is not a billable request."""
+    def delete_batch(self, name: str, receipts: list[int]):
+        """Ack: remove in-flight messages for good. Stale receipts (already
+        acked, or expired and redelivered under a new handle) and deleted
+        queues are no-ops, so duplicate acks from racing attempts are
+        idempotent."""
+        if len(receipts) > SQS_BATCH_MESSAGES:
+            raise ValueError("SQS batch delete limited to 10 receipts")
+        self.ledger.add_sqs_control()
         with self._cond:
-            return self._cond.wait_for(
-                lambda: self._closed or bool(self._queues.get(name)),
-                timeout)
+            q = self._queues.get(name)
+            if q is None:
+                return
+            for r in receipts:
+                q.inflight.pop(r, None)
+
+    def change_visibility(self, name: str, receipts: list[int],
+                          timeout: float):
+        """Heartbeat: extend the visibility deadline of held messages so a
+        long fold does not leak them to a rival mid-task. Stale receipts
+        are no-ops."""
+        if len(receipts) > SQS_BATCH_MESSAGES:
+            raise ValueError("SQS visibility batch limited to 10 receipts")
+        self.ledger.add_sqs_control()
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            q = self._queues.get(name)
+            if q is None:
+                return
+            for r in receipts:
+                entry = q.inflight.get(r)
+                if entry is not None:
+                    q.inflight[r] = (entry[0], deadline)
+
+    def wait_for_messages(self, name: str, timeout: float) -> bool:
+        """Block until the queue has a visible message, the queue is gone,
+        or the sim is closed. Long polling: waiting itself is not a
+        billable request."""
+        def ready() -> bool:
+            if self._closed:
+                return True
+            q = self._queues.get(name)
+            if q is None:
+                return True  # wake: the next receive raises QueueGone
+            self._sweep(q)
+            return bool(q.visible)
+
+        with self._cond:
+            return self._cond.wait_for(ready, timeout)
 
     def approx_len(self, name: str) -> int:
-        with self._lock:
-            return len(self._queues.get(name, ()))
+        """Visible-message backlog estimate (SQS's
+        ApproximateNumberOfMessages — in-flight messages excluded). A
+        GetQueueAttributes call, so it bills like any other request."""
+        self.ledger.add_sqs_control()
+        with self._cond:
+            q = self._queues.get(name)
+            if q is None:
+                return 0
+            self._sweep(q)
+            return len(q.visible)
+
+    def inflight_len(self, name: str) -> int:
+        with self._cond:
+            q = self._queues.get(name)
+            return len(q.inflight) if q is not None else 0
 
 
 class ObjectStoreSim:
@@ -202,18 +313,42 @@ class ObjectStoreSim:
 _FRAME = struct.Struct("<I")  # 4-byte little-endian record-length prefix
 
 
-def pack_records(records: Iterable[Any], limit: int = SQS_MESSAGE_LIMIT
-                 ) -> list[bytes]:
+class SpillPointer:
+    """Stand-in record for a single pickle too large for one SQS message:
+    the real bytes ride the object store (paper §III-B large-payload
+    handling) and the queue carries this pointer instead."""
+
+    __slots__ = ("key",)
+
+    def __init__(self, key: str):
+        self.key = key
+
+    def __reduce__(self):
+        return (SpillPointer, (self.key,))
+
+
+def pack_records(records: Iterable[Any], limit: int = SQS_MESSAGE_LIMIT,
+                 spill: Callable[[bytes], str] | None = None) -> list[bytes]:
     """Pack records into length-prefixed message bodies under the 256 KiB
     SQS cap, pickling each record EXACTLY once (single-pass incremental
     framing — the old implementation pickled twice: once to estimate the
-    size, once inside the batch pickle)."""
+    size, once inside the batch pickle).
+
+    A single record whose pickle alone exceeds the cap would make every
+    ``send_batch`` of its body raise — an unrecoverable task. With
+    ``spill`` given (blob -> object-store key), the oversized pickle is
+    stored out-of-band and a small SpillPointer record is framed in its
+    place; ``unpack_records`` resolves it against the store."""
     bodies: list[bytes] = []
     frames: list[bytes] = []
     size = 0
     for r in records:
         blob = pickle.dumps(r, protocol=pickle.HIGHEST_PROTOCOL)
         need = _FRAME.size + len(blob)
+        if spill is not None and need > limit:
+            blob = pickle.dumps(SpillPointer(spill(blob)),
+                                protocol=pickle.HIGHEST_PROTOCOL)
+            need = _FRAME.size + len(blob)
         if frames and size + need > limit:
             bodies.append(b"".join(frames))
             frames, size = [], 0
@@ -225,12 +360,19 @@ def pack_records(records: Iterable[Any], limit: int = SQS_MESSAGE_LIMIT
     return bodies
 
 
-def unpack_records(body: bytes) -> list[Any]:
+def unpack_records(body: bytes, store: ObjectStoreSim | None = None
+                   ) -> list[Any]:
     out = []
     off, n = 0, len(body)
     while off < n:
         (ln,) = _FRAME.unpack_from(body, off)
         off += _FRAME.size
-        out.append(pickle.loads(body[off:off + ln]))
+        rec = pickle.loads(body[off:off + ln])
         off += ln
+        if isinstance(rec, SpillPointer):
+            if store is None:
+                raise ValueError(
+                    f"spilled record {rec.key} needs an object store")
+            rec = pickle.loads(store.get(rec.key))
+        out.append(rec)
     return out

@@ -23,12 +23,16 @@ containers (executor chaining — a chained producer only emits EOS from its
 final link), failures retried with the same task identity (idempotent via
 stable partitioning + seq-id dedup), stragglers get a speculative
 duplicate (first completion wins; duplicate messages AND duplicate EOS are
-dropped by the same dedup). Speculation is restricted to producer-side
-(non-shuffle-reading) tasks: a consumer blocked on its producers is
-waiting, not straggling, and two drains competing for one queue would
-destructively split its messages (SQS receives consume; open item: model
-visibility-timeout redelivery to lift this). Straggler thresholds compare
-scheduler-observed latency and allow for one cold start.
+dropped by the same dedup). Consumer (shuffle-reading) tasks are as
+retryable and speculatable as producers: SQS receives are visibility-
+timeout claims, acked only at task completion, so a dead consumer's
+messages redeliver to its retry and two competing drains merely race on
+acks. In pipelined mode a consumer is only speculated once its producers
+are all done (a blocked consumer is waiting, not straggling). When a
+consumer completes, its queues are deleted immediately so a losing
+duplicate aborts on QueueGone instead of waiting out the drain timeout.
+Straggler thresholds compare scheduler-observed latency and allow for one
+cold start.
 """
 
 from __future__ import annotations
@@ -66,18 +70,29 @@ class FlintScheduler:
     def __init__(self, cfg: FlintConfig, ledger: CostLedger | None = None,
                  store: ObjectStoreSim | None = None, *,
                  fault_plan: dict | None = None, verbose: bool = False):
+        if (cfg.shuffle_backend == "sqs"
+                and cfg.visibility_timeout_s >= cfg.drain_timeout_s):
+            # otherwise a retried consumer times out waiting for its dead
+            # predecessor's claims to expire — and fails with a confusing
+            # "queue incomplete" instead of this
+            raise ValueError(
+                f"visibility_timeout_s ({cfg.visibility_timeout_s}) must be "
+                f"< drain_timeout_s ({cfg.drain_timeout_s}) or consumer "
+                f"retries cannot outwait redelivery")
         self.cfg = cfg
         self.ledger = ledger or CostLedger()
         self.store = store or ObjectStoreSim(self.ledger)
-        self.sqs = SQSSim(self.ledger, duplicate_prob=cfg.duplicate_prob)
+        self.sqs = SQSSim(self.ledger, duplicate_prob=cfg.duplicate_prob,
+                          visibility_timeout=cfg.visibility_timeout_s)
         self.lam = LambdaSim(cfg, self.ledger, self.store, self.sqs)
         self.pool = cf.ThreadPoolExecutor(max_workers=cfg.concurrency)
         # fault_plan: {(stage, index): {"fail_attempts": n} | {"straggle_s": s}
-        #             | {"fail_after_records": n}}
+        #             | {"fail_after_records": n} | {"fail_on_link": k}}
         self.fault_plan = fault_plan or {}
         self.verbose = verbose
         self.stage_stats: list[dict] = []
         self._lock = threading.Lock()
+        self._released_queues: set[str] = set()
 
     # ------------------------------------------------------------------
     def run(self, stages: list[StagePlan]):
@@ -93,19 +108,29 @@ class FlintScheduler:
         return {s.write.shuffle_id: s.write.nparts
                 for s in stages if s.write is not None}
 
-    def _consumer_failure_fatal(self, task: TaskDef) -> bool:
-        """A shuffle-reading task that fails mid-run may already have
-        destructively drained its SQS queue(s); its retry would only wait
-        out the drain timeout on messages that no longer exist — fail the
-        stage immediately instead. The S3 object-store drain is
-        non-destructive, so those consumers remain retryable."""
-        return (isinstance(task.input, ShuffleRead)
-                and self.cfg.shuffle_backend != "s3")
-
     def _delete_shuffle_queues(self, sids, nparts_by_sid):
+        """Stage-end sweep — covers only the queues not already released
+        per-task (each delete is a billed control request; re-issuing
+        deletes for queues the scheduler knows are gone would skew the
+        benchmarks' request counts)."""
         for sid in sids:
             for p in range(nparts_by_sid[sid]):
-                self.sqs.delete_queue(queue_name(sid, p))
+                name = queue_name(sid, p)
+                if name not in self._released_queues:
+                    self._released_queues.add(name)
+                    self.sqs.delete_queue(name)
+
+    def _release_task_queues(self, task: TaskDef):
+        """A completed consumer's partition queues are dead: delete them
+        now so a losing speculative duplicate (or a late retry of a task
+        that already won) aborts on QueueGone immediately instead of
+        blocking a pool thread until the drain timeout."""
+        if isinstance(task.input, ShuffleRead):
+            for sid, _ in task.input.parts:
+                name = queue_name(sid, task.input.partition)
+                if name not in self._released_queues:
+                    self._released_queues.add(name)
+                    self.sqs.delete_queue(name)
 
     # ----------------------------------------------------- barrier mode
     def _run_barrier(self, stages: list[StagePlan]):
@@ -113,14 +138,22 @@ class FlintScheduler:
         expectations: dict[int, dict[int, dict[str, int]]] = {}
         nparts_by_sid = self._queue_parts(stages)
         result = None
-        for stage in stages:
-            if stage.write is not None:
-                for p in range(stage.write.nparts):
-                    self.sqs.create_queue(queue_name(stage.write.shuffle_id, p))
-            result = self._run_stage(stage, expectations)
-            # queues consumed by this stage are dead — scheduler cleanup
-            self._delete_shuffle_queues(_consumed_shuffles(stage),
-                                        nparts_by_sid)
+        try:
+            for stage in stages:
+                if stage.write is not None:
+                    for p in range(stage.write.nparts):
+                        self.sqs.create_queue(
+                            queue_name(stage.write.shuffle_id, p))
+                result = self._run_stage(stage, expectations)
+                # queues consumed by this stage are dead — scheduler cleanup
+                self._delete_shuffle_queues(_consumed_shuffles(stage),
+                                            nparts_by_sid)
+        except BaseException:
+            # same teardown as the pipelined path: a consumer blocked on a
+            # queue that will never fill must not linger in the thread
+            # pool until drain_timeout_s
+            self.sqs.close()
+            raise
         return result
 
     # ------------------------------------------------------------------
@@ -135,6 +168,12 @@ class FlintScheduler:
             extra["straggle_s"] = fault["straggle_s"]
         if fault.get("fail_after_records") and attempt == 0:
             extra["fail_after_records"] = fault["fail_after_records"]
+        if fault.get("fail_on_link") and attempt == 0 \
+                and extra.get("_link") == fault["fail_on_link"]:
+            # kill a specific link of a CHAINED task — exercises the
+            # resume-from-cursor retry path deterministically
+            extra["inject_failure"] = True
+        extra.pop("_link", None)
         extra.pop("_speculative", None)
         if isinstance(task.input, ShuffleRead):
             if self.cfg.pipeline_stages:
@@ -165,6 +204,13 @@ class FlintScheduler:
         inflight: dict[cf.Future, tuple[int, bool, float]] = {}
         dup_dropped = 0
         chained = 0
+        # last continuation cursor per chained task: a retry resumes from
+        # here instead of replaying from scratch — the already-emitted
+        # links' (src, seq) messages stay untouched and only the failed
+        # link replays (its flush boundaries are count-based, so the
+        # replay is byte-identical)
+        cursors: dict[int, dict] = {}
+        links: dict[int, int] = {}
 
         def launch(task: TaskDef, extra=None, speculative=False):
             payload = self._payload_for(
@@ -176,16 +222,21 @@ class FlintScheduler:
         for task in stage.tasks:
             launch(task)
 
-        def can_speculate(idx) -> bool:
-            # consumers are never speculated: two drains competing for one
-            # queue destructively split its messages so neither completes
-            return not isinstance(stage.tasks[idx].input, ShuffleRead)
-
         def spec_armed() -> bool:
+            # consumers included: visibility-timeout receives make two
+            # drains of one queue race on acks, not split messages. Only
+            # FIRST attempts are speculated — a retry's latency baseline
+            # is meaningless (a consumer retry is waiting out its dead
+            # predecessor's visibility deadline), and a twin racing it
+            # would hold claims the retry needs. Tasks that already
+            # CHAINED are excluded too: a twin restarting from scratch
+            # could cut its links at different wall-clock positions and
+            # emit conflicting framings under the same sequence ids
             return (len(durations) >= self.cfg.speculation_min_done
                     and len(inflight) < self.cfg.concurrency
                     and any(not spec and idx not in speculated
-                            and idx not in results and can_speculate(idx)
+                            and idx not in results and attempts[idx] == 0
+                            and idx not in cursors
                             for idx, spec, _ in inflight.values()))
 
         # straggler thresholds compare scheduler-observed latency, so allow
@@ -205,7 +256,8 @@ class FlintScheduler:
                 med = sorted(durations)[len(durations) // 2]
                 for fut, (idx, spec, started) in list(inflight.items()):
                     if (not spec and idx not in speculated
-                            and idx not in results and can_speculate(idx)
+                            and idx not in results and attempts[idx] == 0
+                            and idx not in cursors
                             and now - started > self.cfg.speculation_factor
                             * max(med, 0.05) + start_allowance):
                         speculated.add(idx)
@@ -222,30 +274,30 @@ class FlintScheduler:
                     if resp.get("error_type") == "MemoryCapExceeded":
                         raise StageFailure(resp.get("error", ""),
                                            error_type="MemoryCapExceeded")
-                    if self._consumer_failure_fatal(stage.tasks[idx]):
-                        raise StageFailure(
-                            f"task {stage.id}/{idx} failed after draining "
-                            f"its queue(s); SQS receives are destructive so "
-                            f"the retry could never complete: "
-                            f"{resp.get('error')}",
-                            error_type=resp.get("error_type", ""))
+                    # a dead consumer's unacked messages redeliver after
+                    # the visibility timeout, so its retry sees them all
                     attempts[idx] += 1
                     if attempts[idx] > self.cfg.max_task_retries:
                         raise StageFailure(
                             f"task {stage.id}/{idx} failed after "
                             f"{attempts[idx]} attempts: {resp.get('error')}",
                             error_type=resp.get("error_type", ""))
-                    launch(stage.tasks[idx])
+                    launch(stage.tasks[idx], extra=cursors.get(idx))
                     continue
                 if "continuation" in resp:
                     # executor chaining: merge partial output, re-invoke warm
                     chained += 1
                     self._merge_partial(resp, idx, partials, counts)
-                    launch(stage.tasks[idx], extra=resp["continuation"])
+                    cursors[idx] = resp["continuation"]
+                    links[idx] = links.get(idx, 1) + 1
+                    launch(stage.tasks[idx],
+                           extra=dict(resp["continuation"],
+                                      _link=links[idx]))
                     continue
                 durations.append(now - started)
                 self._merge_partial(resp, idx, partials, counts)
                 results[idx] = True
+                self._release_task_queues(stage.tasks[idx])
 
         # stage complete: fold message counts into expectations
         if stage.write is not None:
@@ -293,6 +345,9 @@ class FlintScheduler:
         speculated: list[set] = [set() for _ in stages]
         chained = [0] * n_stages
         dup_dropped = [0] * n_stages
+        # last continuation cursor per chained task (see _run_stage)
+        cursors: list[dict] = [{} for _ in stages]
+        links: list[dict] = [{} for _ in stages]
         stage_done = [False] * n_stages
         stage_t0: list[float | None] = [None] * n_stages
         stats_rows: list[dict | None] = [None] * n_stages
@@ -330,21 +385,25 @@ class FlintScheduler:
         def deps_done(si) -> bool:
             return all(stage_done[d] for d in deps[si])
 
-        def can_speculate(si, idx) -> bool:
-            # consumers are never speculated: two drains competing for one
-            # queue destructively split its messages so neither completes
-            return not isinstance(stages[si].tasks[idx].input, ShuffleRead)
-
         start_allowance = cfg.cold_start_s * cfg.start_latency_scale
 
         def spec_armed() -> bool:
+            # consumers included (once their producers are done):
+            # visibility-timeout receives make two drains of one queue
+            # race on acks, not split messages. Only FIRST attempts are
+            # speculated — a retry's latency baseline is meaningless (a
+            # consumer retry is waiting out its dead predecessor's
+            # visibility deadline), and a twin racing it would hold
+            # claims the retry needs
             if len(inflight) >= cfg.concurrency:
                 return False
             for fsi, idx, spec, _ in inflight.values():
-                if (not spec and deps_done(fsi) and can_speculate(fsi, idx)
+                if (not spec and deps_done(fsi)
                         and len(durations[fsi]) >= cfg.speculation_min_done
                         and idx not in speculated[fsi]
-                        and idx not in results[fsi]):
+                        and idx not in results[fsi]
+                        and attempts[fsi][idx] == 0
+                        and idx not in cursors[fsi]):
                     return True
             return False
 
@@ -379,9 +438,10 @@ class FlintScheduler:
                     for fut, (fsi, idx, spec, started) in list(
                             inflight.items()):
                         if (spec or not deps_done(fsi)
-                                or not can_speculate(fsi, idx)
                                 or idx in speculated[fsi]
-                                or idx in results[fsi]):
+                                or idx in results[fsi]
+                                or attempts[fsi][idx] > 0
+                                or idx in cursors[fsi]):
                             continue
                         durs = durations[fsi]
                         if len(durs) < cfg.speculation_min_done:
@@ -406,13 +466,8 @@ class FlintScheduler:
                             raise StageFailure(
                                 resp.get("error", ""),
                                 error_type="MemoryCapExceeded")
-                        if self._consumer_failure_fatal(stages[si].tasks[idx]):
-                            raise StageFailure(
-                                f"task {stages[si].id}/{idx} failed after "
-                                f"draining its queue(s); SQS receives are "
-                                f"destructive so the retry could never "
-                                f"complete: {resp.get('error')}",
-                                error_type=resp.get("error_type", ""))
+                        # a dead consumer's unacked messages redeliver
+                        # after the visibility timeout — retry like any task
                         attempts[si][idx] += 1
                         if attempts[si][idx] > cfg.max_task_retries:
                             raise StageFailure(
@@ -420,7 +475,8 @@ class FlintScheduler:
                                 f"{attempts[si][idx]} attempts: "
                                 f"{resp.get('error')}",
                                 error_type=resp.get("error_type", ""))
-                        push(si, stages[si].tasks[idx])
+                        push(si, stages[si].tasks[idx],
+                             extra=cursors[si].get(idx))
                         continue
                     if "continuation" in resp:
                         # chaining: the producer has NOT emitted EOS yet —
@@ -428,12 +484,16 @@ class FlintScheduler:
                         chained[si] += 1
                         self._merge_partial(resp, idx, partials[si],
                                             counts[si])
+                        cursors[si][idx] = resp["continuation"]
+                        links[si][idx] = links[si].get(idx, 1) + 1
                         push(si, stages[si].tasks[idx],
-                             extra=resp["continuation"])
+                             extra=dict(resp["continuation"],
+                                        _link=links[si][idx]))
                         continue
                     durations[si].append(now - started)
                     self._merge_partial(resp, idx, partials[si], counts[si])
                     results[si][idx] = True
+                    self._release_task_queues(stages[si].tasks[idx])
                     if len(results[si]) == len(stages[si].tasks):
                         finish_stage(si, stages[si])
                 launch_ready()

@@ -3,10 +3,13 @@ for shipping to executors (paper §III: "the serialized code to execute").
 
 Standard pickle refuses lambdas and local functions; Flint tasks are built
 from exactly those. We serialize the code object with ``marshal`` plus the
-pieces needed to rebuild the function: defaults, closure cells, and the
-referenced globals (recursively for function-valued globals; by name for
-modules). Scope is intentionally bounded: anything else must already be
-picklable.
+pieces needed to rebuild the function: positional AND keyword-only
+defaults, closure cells, and the referenced globals (recursively for
+function-valued globals; by name for modules). Self- and mutually-
+recursive functions are handled with a memo: a function re-encountered
+while it is still being packed becomes a reference node, resolved back to
+the (partially built) function object at unpack time. Scope is
+intentionally bounded: anything else must already be picklable.
 """
 
 from __future__ import annotations
@@ -19,28 +22,35 @@ from typing import Any
 
 _FN_TAG = "__flint_fn__"
 _MOD_TAG = "__flint_mod__"
+_REF_TAG = "__flint_fnref__"
 
 
-def _pack_cell(value):
-    return _pack(value)
+def _pack_cell(value, memo: dict):
+    return _pack(value, memo)
 
 
-def _pack(value: Any):
+def _pack(value: Any, memo: dict):
     if isinstance(value, types.ModuleType):
         return {_MOD_TAG: value.__name__}
     if isinstance(value, types.FunctionType):
-        return _pack_function(value)
+        if id(value) in memo:
+            # cycle (fact -> fact, even -> odd -> even): emit a reference
+            # to the ancestor already being packed
+            return {_REF_TAG: memo[id(value)]}
+        return _pack_function(value, memo)
     return value
 
 
-def _pack_function(fn: types.FunctionType) -> dict:
+def _pack_function(fn: types.FunctionType, memo: dict) -> dict:
+    uid = len(memo)
+    memo[id(fn)] = uid
     code = fn.__code__
     globs = {}
     for name in code.co_names:
         if name in fn.__globals__:
             g = fn.__globals__[name]
             if isinstance(g, (types.FunctionType, types.ModuleType)):
-                globs[name] = _pack(g)
+                globs[name] = _pack(g, memo)
             else:
                 try:
                     pickle.dumps(g)
@@ -49,35 +59,49 @@ def _pack_function(fn: types.FunctionType) -> dict:
                     pass  # unpicklable global never touched at runtime, or KeyError later
     closure = None
     if fn.__closure__:
-        closure = [_pack_cell(c.cell_contents) for c in fn.__closure__]
+        closure = [_pack_cell(c.cell_contents, memo) for c in fn.__closure__]
     return {
         _FN_TAG: True,
+        "id": uid,
         "code": marshal.dumps(code),
         "name": fn.__name__,
         "defaults": fn.__defaults__,
+        "kwdefaults": fn.__kwdefaults__,
         "closure": closure,
         "globals": globs,
     }
 
 
-def _unpack(value: Any):
-    if isinstance(value, dict) and value.get(_FN_TAG):
-        return _unpack_function(value)
-    if isinstance(value, dict) and _MOD_TAG in value:
-        return importlib.import_module(value[_MOD_TAG])
+def _unpack(value: Any, memo: dict):
+    if isinstance(value, dict):
+        if value.get(_FN_TAG):
+            return _unpack_function(value, memo)
+        if _REF_TAG in value:
+            return memo[value[_REF_TAG]]  # ancestor registered before descent
+        if _MOD_TAG in value:
+            return importlib.import_module(value[_MOD_TAG])
     return value
 
 
-def _unpack_function(packed: dict) -> types.FunctionType:
+def _unpack_function(packed: dict, memo: dict) -> types.FunctionType:
     code = marshal.loads(packed["code"])
     globs = {"__builtins__": __builtins__}
-    for k, v in packed["globals"].items():
-        globs[k] = _unpack(v)
+    # the function object must exist BEFORE its globals/closure unpack, so
+    # reference nodes inside them can resolve to it; empty cells are
+    # filled afterwards (cell_contents is writable)
     closure = None
     if packed["closure"] is not None:
-        closure = tuple(types.CellType(_unpack(v)) for v in packed["closure"])
+        closure = tuple(types.CellType() for _ in packed["closure"])
     fn = types.FunctionType(code, globs, packed["name"], packed["defaults"],
                             closure)
+    fn.__kwdefaults__ = packed.get("kwdefaults")
+    if packed.get("id") is not None:
+        memo[packed["id"]] = fn
+    for k, v in packed["globals"].items():
+        globs[k] = _unpack(v, memo)
+    if closure is not None:
+        for cell, v in zip(closure, packed["closure"]):
+            cell.cell_contents = _unpack(v, memo)
     return fn
 
 
@@ -85,9 +109,9 @@ def dumps_fn(fn) -> bytes:
     """Serialize a callable (plain function, lambda, or closure)."""
     if not isinstance(fn, types.FunctionType):
         return pickle.dumps(fn)  # builtins / partials / callables
-    return pickle.dumps(_pack_function(fn))
+    return pickle.dumps(_pack_function(fn, {}))
 
 
 def loads_fn(data: bytes):
     obj = pickle.loads(data)
-    return _unpack(obj)
+    return _unpack(obj, {})
