@@ -1,34 +1,36 @@
 """Shuffle benchmarks.
 
-1. SQS vs S3 transport (paper §V/§VI: 'the design choice of using S3 vs.
-   SQS for data shuffling should be examined in detail'). Same
-   shuffle-heavy query, two transports. We report measured wall latency,
-   billed requests, and the MODELED service latency (request count x
-   typical 2018 per-op latency: SQS batch ~10 ms, S3 PUT ~30 ms /
-   GET ~20 ms, LIST ~50 ms) — the analytic form of the paper's 'I/O
-   patterns are not a good fit for S3' claim: object-store shuffles pay
-   per-object latency and 12.5x the per-request price of a queue batch.
+1. TRANSPORT THREE-WAY (paper §V/§VI: 'the design choice of using S3 vs.
+   SQS for data shuffling should be examined in detail'): the same taxi
+   groupBy and join workloads over the SQS transport, the Lambada-style
+   S3 exchange transport, and the provisioned-cluster baseline. Results
+   must be identical across all three; per run we report measured wall
+   latency, the MODELED service latency (request count x typical 2018
+   per-op latency: SQS batch ~10 ms, S3 PUT ~30 ms / GET ~20 ms /
+   LIST ~50 ms), and a Table-I-style per-service cost breakdown from
+   ``CostLedger.service_subtotals``. Every serverless run is followed by
+   a zero-leak assertion: no ``_spill/``, ``_payload/``, ``_exchange/``
+   or ``_result/`` keys survive query completion.
 
-2. Barrier vs PIPELINED stage execution (EOS shuffle protocol, see
-   docs/eos_shuffle.md). Same query, same transport, invocation start
-   latency simulated (``start_latency_scale=1``): the barrier scheduler
-   pays the consumer stage's cold-start wave and queue drain AFTER the
-   producer stage finishes; the pipelined scheduler overlaps both with
-   producer compute. Results must be identical — the speedup is measured,
-   not claimed.
+2. COLUMNAR VS PICKLE FRAMING: the same groupBy with
+   ``columnar_batches`` on/off — typed key/value columns must shrink
+   shuffled bytes on the homogeneous-key workload.
 
-3. Fault-injection A/B (visibility-timeout recovery, paper §III/§VI):
-   the same query fault-free vs with one reducer dying mid-drain
-   (``fail_after_records``) plus a second reducer straggling (eligible
-   for consumer-side speculation), under at-least-once duplication.
-   Before visibility-timeout receives, the dying reducer aborted the
-   whole job; now both modes must complete with IDENTICAL results, the
-   overhead being a visibility-deadline wait plus the retry.
+3. Barrier vs PIPELINED stage execution (EOS shuffle protocol, see
+   docs/eos_shuffle.md), invocation start latency simulated.
+
+4. Fault-injection A/B (visibility-timeout recovery, paper §III/§VI):
+   a reducer dying mid-drain plus a straggling reducer under 5 %
+   duplicate delivery; both modes must match the fault-free run.
+
+``--quick`` runs a reduced-size pass of (1) and (2) with hard
+assertions — the CI smoke gate for transport regressions.
 """
 
 from __future__ import annotations
 
 import os
+import sys
 import time
 
 from repro.core import FlintConfig, FlintContext
@@ -37,11 +39,14 @@ from repro.data.synthetic import taxi_csv
 SQS_OP_LATENCY = 0.010
 S3_PUT_LATENCY = 0.030
 S3_GET_LATENCY = 0.020
+S3_LIST_LATENCY = 0.050
 
 N_ROWS = int(os.environ.get("TAXI_ROWS", "40000"))
 
+TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/")
 
-def shuffle_query(ctx):
+
+def groupby_query(ctx):
     # high-cardinality groupBy: every (month, hour, payment) cell
     return (ctx.textFile("taxi.csv", 8)
             .map(lambda x: x.split(","))
@@ -50,34 +55,112 @@ def shuffle_query(ctx):
             .collect())
 
 
-def run(rows=None):
+def join_query(ctx):
+    # per-hour trip counts joined with per-hour tips (integer cents: float
+    # sums are arrival-order-sensitive and would break cross-transport
+    # result identity in the last bits)
+    def trips():
+        return ctx.textFile("taxi.csv", 8).map(lambda x: x.split(","))
+
+    counts = (trips().map(lambda x: (x[0][11:13], 1))
+              .reduceByKey(lambda a, b: a + b, 8))
+    tips = (trips().map(lambda x: (x[0][11:13],
+                                   int(round(float(x[6]) * 100))))
+            .reduceByKey(lambda a, b: a + b, 8))
+    return counts.join(tips, 8).collect()
+
+
+WORKLOADS = {"groupby": groupby_query, "join": join_query}
+
+
+def assert_no_leaks(ctx):
+    leaked = [k for prefix in TRANSIENT_PREFIXES
+              for k in ctx.store.list(prefix)]
+    assert not leaked, f"transient keys leaked past query completion: " \
+                       f"{leaked[:5]}{'...' if len(leaked) > 5 else ''}"
+    assert ctx.last_scheduler.sqs._queues == {}, "queues leaked"
+
+
+def modeled_service_latency(rep: dict, backend: str) -> float:
+    if backend == "sqs":
+        return rep["sqs_requests"] * SQS_OP_LATENCY
+    return (rep["s3_puts"] * S3_PUT_LATENCY
+            + rep["s3_gets"] * S3_GET_LATENCY
+            + rep["s3_lists"] * S3_LIST_LATENCY)
+
+
+def run_transport_ab(rows=None, workloads=("groupby", "join")):
+    """SQS vs S3-exchange vs cluster on each workload. Returns (rows,
+    all-transports-agree)."""
+    data = taxi_csv(rows or N_ROWS, seed=13)
+    out = []
+    agreement = True
+    for workload in workloads:
+        query = WORKLOADS[workload]
+        answers = []
+        for backend in ("sqs", "s3", "cluster"):
+            serverless = backend != "cluster"
+            ctx = FlintContext(
+                "flint" if serverless else "cluster",
+                FlintConfig(concurrency=16, flush_records=2000,
+                            shuffle_backend=backend if serverless
+                            else "sqs"))
+            ctx.upload("taxi.csv", data)
+            uploaded_bytes = ctx.ledger.bytes_to_s3  # exclude the input
+            t0 = time.monotonic()
+            ans = query(ctx)
+            wall = time.monotonic() - t0
+            rep = ctx.cost_report()
+            row = {
+                "workload": workload, "backend": backend,
+                "wall_s": round(wall, 4),
+                "total_usd": round(rep["total_usd"], 6),
+                "subtotals": ctx.ledger.service_subtotals(),
+            }
+            if serverless:
+                row["modeled_service_s"] = round(
+                    modeled_service_latency(rep, backend), 3)
+                row["shuffle_requests"] = (
+                    rep["sqs_requests"] if backend == "sqs"
+                    else rep["s3_gets"] + rep["s3_puts"] + rep["s3_lists"])
+                row["shuffled_bytes"] = (
+                    rep["bytes_to_sqs"] if backend == "sqs"
+                    else rep["bytes_to_s3"] - uploaded_bytes)
+                assert_no_leaks(ctx)
+                row["gc"] = dict(ctx.last_scheduler.gc_report)
+            answers.append(sorted(ans))
+            out.append(row)
+        agreement = agreement and answers[0] == answers[1] == answers[2]
+    return out, agreement
+
+
+def run_columnar_ab(rows=None):
+    """Columnar vs per-record-pickle framing on the homogeneous-key
+    groupBy. Returns (rows, identical-results, bytes ratio)."""
     data = taxi_csv(rows or N_ROWS, seed=13)
     out = []
     answers = []
-    for backend in ("sqs", "s3"):
-        ctx = FlintContext("flint", FlintConfig(concurrency=16,
-                                                flush_records=2000,
-                                                shuffle_backend=backend))
+    for columnar in (False, True):
+        ctx = FlintContext("flint",
+                           FlintConfig(concurrency=16, flush_records=2000,
+                                       shuffle_backend="sqs",
+                                       columnar_batches=columnar))
         ctx.upload("taxi.csv", data)
         t0 = time.monotonic()
-        ans = shuffle_query(ctx)
+        ans = groupby_query(ctx)
         wall = time.monotonic() - t0
         rep = ctx.cost_report()
-        if backend == "sqs":
-            modeled = rep["sqs_requests"] * SQS_OP_LATENCY
-        else:
-            modeled = (rep["s3_puts"] * S3_PUT_LATENCY
-                       + rep["s3_gets"] * S3_GET_LATENCY)
         out.append({
-            "backend": backend, "wall_s": round(wall, 4),
-            "modeled_service_s": round(modeled, 3),
-            "shuffle_cost_usd": round(rep["sqs_usd"] + rep["s3_usd"], 6),
+            "framing": "columnar" if columnar else "pickle",
+            "wall_s": round(wall, 4),
+            "bytes_to_sqs": rep["bytes_to_sqs"],
             "sqs_requests": rep["sqs_requests"],
-            "s3_ops": rep["s3_gets"] + rep["s3_puts"],
+            "shuffle_cost_usd": round(rep["sqs_usd"], 6),
         })
         answers.append(sorted(ans))
-    agreement = answers[0] == answers[1]
-    return out, agreement
+        assert_no_leaks(ctx)
+    ratio = out[1]["bytes_to_sqs"] / max(out[0]["bytes_to_sqs"], 1)
+    return out, answers[0] == answers[1], round(ratio, 3)
 
 
 def run_pipeline_ab(rows=None, trials=2):
@@ -94,11 +177,12 @@ def run_pipeline_ab(rows=None, trials=2):
             ctx = FlintContext("flint",
                                FlintConfig(concurrency=16,
                                            flush_records=2000,
+                                           shuffle_backend="sqs",
                                            start_latency_scale=1.0,
                                            pipeline_stages=pipelined))
             ctx.upload("taxi.csv", data)
             t0 = time.monotonic()
-            ans = shuffle_query(ctx)
+            ans = groupby_query(ctx)
             wall = min(wall, time.monotonic() - t0)
         rep = ctx.cost_report()
         out.append({
@@ -128,6 +212,7 @@ def run_fault_ab(rows=None):
             ctx = FlintContext(
                 "flint",
                 FlintConfig(concurrency=16, flush_records=2000,
+                            shuffle_backend="sqs",
                             pipeline_stages=pipelined,
                             duplicate_prob=0.05,
                             visibility_timeout_s=1.0,
@@ -137,7 +222,7 @@ def run_fault_ab(rows=None):
                 fault_plan=fault_plan, elastic_retries=0)
             ctx.upload("taxi.csv", data)
             t0 = time.monotonic()
-            ans = shuffle_query(ctx)
+            ans = groupby_query(ctx)
             wall = time.monotonic() - t0
             answers.append(sorted(ans))
             stats = ctx.last_scheduler.stage_stats
@@ -153,16 +238,49 @@ def run_fault_ab(rows=None):
     return out, identical
 
 
-def main():
-    rows, agreement = run()
-    print("backend,wall_s,modeled_service_s,shuffle_cost_usd,sqs_requests,s3_ops")
+def _print_transport_rows(rows, agreement):
+    print("workload,backend,wall_s,modeled_service_s,total_usd,"
+          "shuffle_requests,shuffled_bytes")
     for r in rows:
-        print(f"{r['backend']},{r['wall_s']},{r['modeled_service_s']},"
-              f"{r['shuffle_cost_usd']},{r['sqs_requests']},{r['s3_ops']}")
-    print(f"# backends agree: {agreement}")
-    ab, identical, speedup = run_pipeline_ab()
+        print(f"{r['workload']},{r['backend']},{r['wall_s']},"
+              f"{r.get('modeled_service_s', '-')},{r['total_usd']},"
+              f"{r.get('shuffle_requests', '-')},"
+              f"{r.get('shuffled_bytes', '-')}")
+    print("# Table-I-style cost breakdown (USD per service operation):")
+    print("workload,backend," + ",".join(rows[0]["subtotals"]))
+    for r in rows:
+        print(f"{r['workload']},{r['backend']}," +
+              ",".join(str(v) for v in r["subtotals"].values()))
+    print(f"# transports agree: {agreement}")
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
+    rows = 4000 if quick else None
+
+    ab, agreement = run_transport_ab(rows)
+    _print_transport_rows(ab, agreement)
+    col, col_identical, ratio = run_columnar_ab(rows)
+    print("framing,wall_s,bytes_to_sqs,sqs_requests,shuffle_cost_usd")
+    for r in col:
+        print(f"{r['framing']},{r['wall_s']},{r['bytes_to_sqs']},"
+              f"{r['sqs_requests']},{r['shuffle_cost_usd']}")
+    print(f"# columnar/pickle shuffled-bytes ratio: {ratio}, "
+          f"results identical: {col_identical}")
+
+    # hard gates — make transport regressions fail loudly (CI --quick)
+    assert agreement, "transports disagree on query results"
+    assert col_identical, "columnar framing changed query results"
+    assert ratio < 1.0, \
+        f"columnar batches did not shrink shuffled bytes (ratio {ratio})"
+    if quick:
+        print("# quick smoke passed")
+        return ab, agreement
+
+    pab, identical, speedup = run_pipeline_ab()
     print("mode,wall_s,sqs_requests,lambda_requests,total_usd")
-    for r in ab:
+    for r in pab:
         print(f"{r['mode']},{r['wall_s']},{r['sqs_requests']},"
               f"{r['lambda_requests']},{r['total_usd']}")
     print(f"# pipelined speedup: {speedup}x, results identical: {identical}")
@@ -172,7 +290,7 @@ def main():
         print(f"{r['mode']},{r['faults']},{r['wall_s']},{r['attempts']},"
               f"{r['speculated']},{r['redeliveries']}")
     print(f"# fault-injected runs identical to fault-free: {fault_identical}")
-    return rows, agreement
+    return ab, agreement
 
 
 if __name__ == "__main__":

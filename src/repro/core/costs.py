@@ -30,6 +30,19 @@ SQS_BATCH_MESSAGES = 10
 
 S3_PER_GET = 0.0004 / 1e3
 S3_PER_PUT = 0.005 / 1e3
+# LIST bills at the PUT tier (it is a "LIST request" on the 2018 sheet);
+# DELETE is free but counted, because a job-scoped GC that issued millions
+# of them would still matter operationally.
+S3_PER_LIST = 0.005 / 1e3
+# Objects above the threshold upload as multipart: one CreateMultipartUpload
+# + ceil(size/part) UploadPart + one CompleteMultipartUpload, each billed at
+# the PUT tier. The S3 exchange shuffle is the only writer big enough.
+S3_MULTIPART_THRESHOLD = 8 * 2**20
+S3_MULTIPART_PART_SIZE = 8 * 2**20
+# One S3-exchange batch object may be far larger than an SQS message — the
+# whole point of an object-store shuffle (Lambada §4: few large objects
+# instead of many tiny requests).
+S3_EXCHANGE_BATCH_LIMIT = 64 * 2**20
 
 M4_2XLARGE_HOURLY = 0.40
 CLUSTER_INSTANCES = 11  # 1 driver + 10 workers (paper's Databricks cluster)
@@ -54,6 +67,9 @@ class CostLedger:
     sqs_requests: int = 0
     s3_gets: int = 0
     s3_puts: int = 0
+    s3_lists: int = 0
+    s3_upload_parts: int = 0
+    s3_deletes: int = 0
     bytes_to_sqs: int = 0
     bytes_from_sqs: int = 0
     bytes_from_s3: int = 0
@@ -83,13 +99,34 @@ class CostLedger:
             self.sqs_requests += 1
 
     def add_s3(self, nbytes: int, put: bool = False):
-        with self._lock:
-            if put:
-                self.s3_puts += 1
-                self.bytes_to_s3 += nbytes
-            else:
+        if put:
+            self.add_s3_put(nbytes)
+        else:
+            with self._lock:
                 self.s3_gets += 1
                 self.bytes_from_s3 += nbytes
+
+    def add_s3_put(self, nbytes: int):
+        """A PUT; above the multipart threshold it bills as a multipart
+        upload instead: Create + per-part UploadPart + Complete, each a
+        PUT-tier request."""
+        with self._lock:
+            self.bytes_to_s3 += nbytes
+            if nbytes > S3_MULTIPART_THRESHOLD:
+                self.s3_puts += 2  # CreateMultipartUpload + Complete
+                self.s3_upload_parts += math.ceil(
+                    nbytes / S3_MULTIPART_PART_SIZE)
+            else:
+                self.s3_puts += 1
+
+    def add_s3_list(self):
+        with self._lock:
+            self.s3_lists += 1
+
+    def add_s3_delete(self):
+        """DELETE requests are free on the price sheet; counted anyway."""
+        with self._lock:
+            self.s3_deletes += 1
 
     # ------------------------------------------------------------- report
     @property
@@ -103,11 +140,25 @@ class CostLedger:
 
     @property
     def s3_usd(self) -> float:
-        return self.s3_gets * S3_PER_GET + self.s3_puts * S3_PER_PUT
+        return (self.s3_gets * S3_PER_GET
+                + (self.s3_puts + self.s3_upload_parts) * S3_PER_PUT
+                + self.s3_lists * S3_PER_LIST)
 
     @property
     def total_usd(self) -> float:
         return self.lambda_usd + self.sqs_usd + self.s3_usd
+
+    def service_subtotals(self) -> dict:
+        """Per-service / per-operation USD — the Table-I-style breakdown the
+        shuffle benchmark prints per transport."""
+        return {
+            "lambda": round(self.lambda_usd, 6),
+            "sqs": round(self.sqs_usd, 6),
+            "s3.GET": round(self.s3_gets * S3_PER_GET, 6),
+            "s3.PUT": round(self.s3_puts * S3_PER_PUT, 6),
+            "s3.UploadPart": round(self.s3_upload_parts * S3_PER_PUT, 6),
+            "s3.LIST": round(self.s3_lists * S3_PER_LIST, 6),
+        }
 
     def report(self) -> dict:
         return {
@@ -120,6 +171,11 @@ class CostLedger:
             "sqs_requests": self.sqs_requests,
             "s3_gets": self.s3_gets,
             "s3_puts": self.s3_puts,
+            "s3_lists": self.s3_lists,
+            "s3_upload_parts": self.s3_upload_parts,
+            "s3_deletes": self.s3_deletes,
             "bytes_to_sqs": self.bytes_to_sqs,
             "bytes_from_sqs": self.bytes_from_sqs,
+            "bytes_to_s3": self.bytes_to_s3,
+            "bytes_from_s3": self.bytes_from_s3,
         }

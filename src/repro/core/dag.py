@@ -41,6 +41,9 @@ class ShuffleRead:
     parts: list  # list of (shuffle_id, mode) — mode: agg|group|join|repart
     partition: int
     combine_fn: Any = None  # serialized via serde at task-build time
+    # shuffle_id -> transport name, mirroring the producing ShuffleWrite's
+    # hint so both ends of a shuffle always agree on the backend
+    transports: dict | None = None
 
 
 @dataclasses.dataclass
@@ -50,6 +53,9 @@ class ShuffleWrite:
     mode: str  # agg | group | join | repart
     combine_fn: Any = None  # map-side combine (reduceByKey)
     key_side: str = ""  # join: 'left' | 'right'
+    # per-shuffle transport hint (core.shuffle registry name); "" defers
+    # to FlintConfig.shuffle_backend — the Flock-style per-shuffle choice
+    transport: str = ""
 
 
 @dataclasses.dataclass
@@ -116,31 +122,40 @@ def _visit(node, stages: list, mult: int) -> _Chain:
     if isinstance(node, R.ShuffleAgg):
         mode = "agg" if node.map_side_combine else "group"
         nparts = node.nparts * mult
+        tr = node.transport or ""
         sid = _close_stage(node.parent, stages, mult,
                            ShuffleWrite(next(_next_shuffle), nparts, mode,
-                                        combine_fn=node.fn))
-        inputs = [ShuffleRead([(sid, mode)], p, combine_fn=node.fn)
+                                        combine_fn=node.fn, transport=tr))
+        inputs = [ShuffleRead([(sid, mode)], p, combine_fn=node.fn,
+                              transports={sid: tr})
                   for p in range(nparts)]
         return _Chain(inputs, [stages[-1]],
                       {sid: len(stages[-1].tasks)})
     if isinstance(node, R.Repartition):
         nparts = node.nparts * mult
+        tr = node.transport or ""
         sid = _close_stage(node.parent, stages, mult,
-                           ShuffleWrite(next(_next_shuffle), nparts, "repart"))
-        inputs = [ShuffleRead([(sid, "repart")], p) for p in range(nparts)]
+                           ShuffleWrite(next(_next_shuffle), nparts,
+                                        "repart", transport=tr))
+        inputs = [ShuffleRead([(sid, "repart")], p, transports={sid: tr})
+                  for p in range(nparts)]
         return _Chain(inputs, [stages[-1]],
                       {sid: len(stages[-1].tasks)})
     if isinstance(node, R.Join):
         nparts = node.nparts * mult
+        tr = node.transport or ""
         sid_l = _close_stage(node.left, stages, mult,
                              ShuffleWrite(next(_next_shuffle), nparts,
-                                          "join", key_side="left"))
+                                          "join", key_side="left",
+                                          transport=tr))
         n_left = len(stages[-1].tasks)
         sid_r = _close_stage(node.right, stages, mult,
                              ShuffleWrite(next(_next_shuffle), nparts,
-                                          "join", key_side="right"))
+                                          "join", key_side="right",
+                                          transport=tr))
         n_right = len(stages[-1].tasks)
-        inputs = [ShuffleRead([(sid_l, "join"), (sid_r, "join")], p)
+        inputs = [ShuffleRead([(sid_l, "join"), (sid_r, "join")], p,
+                              transports={sid_l: tr, sid_r: tr})
                   for p in range(nparts)]
         return _Chain(inputs, [], {sid_l: n_left, sid_r: n_right})
     raise TypeError(f"unknown RDD node {type(node).__name__}")

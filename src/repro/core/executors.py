@@ -3,20 +3,19 @@ plus the Lambda runtime simulation itself.
 
 Semantics preserved from the paper (§III-A/B):
   * one task per invocation; executors are stateless between invocations;
-  * input iterator reads an S3 byte range (stage 0) or drains SQS queues
-    (intermediate stages), deduplicating at-least-once deliveries by
-    (producer task, sequence id); under pipelined execution the drain
-    starts BEFORE producers finish and terminates on per-producer EOS
-    control messages (docs/eos_shuffle.md) instead of a count table;
-  * ACK-AFTER-FOLD: SQS receives are visibility-timeout claims, not pops.
-    The drain folds each message, accumulates its receipt handle, and
-    heartbeats ``change_visibility`` through long folds; the batched
-    delete (ack) happens only once the task's OUTPUT is durable — so a
-    consumer that dies anywhere mid-task leaves every message it read to
-    redeliver to its retry (or to a speculative twin);
+  * input iterator reads an S3 byte range (stage 0) or drains a shuffle
+    transport (intermediate stages) — a pluggable backend behind the
+    ``core.shuffle.ShuffleTransport`` contract, chosen per shuffle
+    (``ShuffleWrite.transport`` hint, default ``cfg.shuffle_backend``).
+    Both execution modes terminate the drain on per-producer EOS at the
+    plan-time quorum (docs/eos_shuffle.md); dedup of at-least-once,
+    unordered delivery by (producer task, sequence id) is shared drain
+    state, and ACK-AFTER-FOLD (docs/shuffle_transports.md) means the
+    drained input is released only once the task's OUTPUT is durable;
   * outputs are hash-partitioned, buffered in memory, and FLUSHED to the
-    per-partition queues when the buffer grows past its cap (the 3008 MB
-    limit made concrete as a record-count proxy);
+    transport as columnar record batches (shuffle.batch) when the buffer
+    grows past its cap (the 3008 MB limit made concrete as a record-count
+    proxy);
   * executor CHAINING: when the invocation lease is nearly exhausted the
     executor stops ingesting, flushes, and returns a continuation cursor
     that the scheduler re-invokes on a warm container (map-side combine
@@ -31,7 +30,7 @@ straggler behavior deterministic in tests.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
+import os
 import pickle
 import threading
 import time
@@ -39,20 +38,17 @@ import zlib
 from typing import Any
 
 from repro.core import serde
-from repro.core.costs import (LAMBDA_PAYLOAD_LIMIT, SQS_BATCH_MESSAGES,
-                              CostLedger)
+from repro.core.costs import LAMBDA_PAYLOAD_LIMIT, CostLedger
 from repro.core.dag import CollectionInput, ShuffleRead, SourceInput, TaskDef
-from repro.core.queues import (Message, ObjectStoreSim, QueueGone, SQSSim,
-                               eos_message, pack_records, unpack_records)
+from repro.core.queues import ObjectStoreSim, SQSSim
+from repro.core.shuffle import (TransportSet, pack_batch, queue_name,
+                                unpack_batch)
+from repro.core.shuffle.base import AbortedError  # noqa: F401 (re-export:
+#                       pre-subsystem callers import it from here)
 
 
 class InjectedFailure(RuntimeError):
     pass
-
-
-class AbortedError(RuntimeError):
-    """The scheduler shut the shuffle transport down mid-drain (fatal
-    stage failure or elastic re-plan) — unblock and exit quietly."""
 
 
 class MemoryCapExceeded(RuntimeError):
@@ -64,9 +60,17 @@ class MemoryCapExceeded(RuntimeError):
 class FlintConfig:
     memory_mb: int = 3008
     time_limit_s: float = 300.0
-    # intermediate-data transport: "sqs" (the paper's choice) or "s3"
-    # (Qubole's choice, paper SSV/SVI flag the comparison as open work)
-    shuffle_backend: str = "sqs"
+    # default intermediate-data transport: "sqs" (the paper's choice) or
+    # "s3" (the Lambada-style object exchange); any ShuffleWrite.transport
+    # hint overrides it per shuffle. The env var lets CI run the whole
+    # tier-1 suite under each backend without touching test code.
+    shuffle_backend: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("FLINT_SHUFFLE_BACKEND",
+                                               "sqs"))
+    # frame shuffle batches as typed key/value columns where the data is
+    # homogeneous (shuffle.batch); False forces per-record pickle framing
+    # everywhere (the pre-columnar wire format, kept for A/B measurement)
+    columnar_batches: bool = True
     # pipelined stage execution: launch consumer tasks concurrently with
     # their producers; consumers terminate on per-producer EOS control
     # messages. False restores barrier scheduling (A/B comparison).
@@ -90,10 +94,6 @@ class FlintConfig:
     visibility_timeout_s: float = 10.0
     duplicate_prob: float = 0.0  # SQS at-least-once duplication rate
     chunk_fetch_bytes: int = 4 * 2**20
-
-
-def queue_name(shuffle_id: int, partition: int) -> str:
-    return f"shuffle{shuffle_id}-p{partition}"
 
 
 # --------------------------------------------------------------- payloads
@@ -122,11 +122,13 @@ class LambdaSim:
     per-invocation billing."""
 
     def __init__(self, cfg: FlintConfig, ledger: CostLedger,
-                 store: ObjectStoreSim, sqs: SQSSim):
+                 store: ObjectStoreSim, sqs: SQSSim,
+                 transports: TransportSet | None = None):
         self.cfg = cfg
         self.ledger = ledger
         self.store = store
         self.sqs = sqs
+        self.transports = transports or TransportSet(cfg, ledger, store, sqs)
         self._warm = 0
         self._lock = threading.Lock()
         self.invocations = 0
@@ -260,16 +262,6 @@ class _SourceReader:
                 yield ln.decode("utf-8", "replace")
 
 
-def _heartbeat(env: LambdaSim, held: dict, vis: float):
-    """Extend the visibility deadline of every receipt this drain holds
-    (stale receipts and deleted queues are no-ops)."""
-    for qname, rcpts in held.items():
-        receipts = list(rcpts.values())
-        for i in range(0, len(receipts), SQS_BATCH_MESSAGES):
-            env.sqs.change_visibility(qname,
-                                      receipts[i:i + SQS_BATCH_MESSAGES], vis)
-
-
 def _stable_order(rec) -> bytes:
     """Deterministic total order on records (their pickle bytes) — used to
     make a shuffle-reading task's re-emission byte-identical across
@@ -277,27 +269,26 @@ def _stable_order(rec) -> bytes:
     return pickle.dumps(rec, protocol=pickle.HIGHEST_PROTOCOL)
 
 
-def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict,
-                   n_producers: dict | None = None, *,
-                   sort_groups: bool = False) -> dict:
-    """Drain queue(s) for this partition with seq-id dedup, folding each
-    message into the aggregate AS IT ARRIVES (streaming — transport time
-    overlaps the fold). Two termination protocols:
+def _read_transport_name(read: ShuffleRead, sid: int, cfg: FlintConfig
+                         ) -> str:
+    """The per-shuffle transport hint recorded at plan time, falling back
+    to the engine default."""
+    return (read.transports or {}).get(sid) or cfg.shuffle_backend
 
-      * pipelined (``n_producers`` given): drain until an EOS control
-        message has arrived from every one of the ``n_producers[sid]``
-        producer tasks AND every producer's advertised sequence count has
-        been seen. EOS may outrun data (no ordering guarantee), duplicated
-        EOS (speculation, at-least-once delivery) is idempotent.
-      * barrier (``expected`` given): the legacy post-hoc message-count
-        table handed over after the producer stage fully completed.
 
-    Receives are visibility-timeout claims: every message stays in-flight
-    under a receipt handle this drain holds and heartbeats; nothing is
-    acked here. Returns ({(sid, mode): folded-aggregate}, stats, ack)
-    where ``ack`` batch-deletes every held receipt — the caller invokes
-    it only once the task's output is durable, so an earlier death leaves
-    the whole input to redeliver for the retry.
+def _drain_shuffle(read: ShuffleRead, env: LambdaSim, n_producers: dict, *,
+                   sort_groups: bool = False) -> tuple:
+    """Drain this partition's shuffle input(s) through their transports,
+    folding each record batch into the aggregate AS IT ARRIVES (streaming —
+    transport time overlaps the fold). Termination, dedup of at-least-once
+    unordered delivery, claim leases and abort detection all live in the
+    transport's DrainHandle; the per-producer EOS quorum comes from
+    ``n_producers`` (fixed at plan time) in BOTH scheduler modes.
+
+    Returns ({(sid, mode): folded-aggregate}, stats, ack) where ``ack``
+    releases every drained input for good — the caller invokes it only
+    once the task's output is durable (ack-after-fold), so an earlier
+    death leaves the whole input to redeliver for the retry.
 
     ``sort_groups`` (set when this task WRITES another shuffle): group/
     join value-lists collect in arrival order, which differs across
@@ -307,22 +298,6 @@ def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict,
     stats = {"messages": 0, "duplicates": 0, "records": 0}
     combine = (serde.loads_fn(read.combine_fn)
                if isinstance(read.combine_fn, bytes) else read.combine_fn)
-    timeout = env.cfg.drain_timeout_s
-    # queue -> {(src, seq, kind): latest receipt handle}. Keyed, not a
-    # list: an idle wait lets claims lapse and redeliver every visibility
-    # period, and keeping only the freshest handle per message bounds
-    # held (and the heartbeat/ack request counts) by the distinct message
-    # count instead of growing per redelivery cycle.
-    held: dict[str, dict] = {}
-
-    def ack():
-        # batched ack-after-fold, deferred to task completion; duplicate
-        # or stale receipts are idempotent no-ops inside delete_batch
-        for qname, rcpts in held.items():
-            receipts = list(rcpts.values())
-            for i in range(0, len(receipts), SQS_BATCH_MESSAGES):
-                env.sqs.delete_batch(qname,
-                                     receipts[i:i + SQS_BATCH_MESSAGES])
 
     def fold(agg, records, mode):
         if mode == "agg":
@@ -339,156 +314,40 @@ def _drain_shuffle(read: ShuffleRead, env: LambdaSim, expected: dict,
                 f"aggregation state {len(agg)} records > cap "
                 f"{env.cfg.agg_memory_records}")
 
+    # the task-scoped claim group: a join drains two shuffles in sequence,
+    # and lease-based transports must keep the first drain's claims alive
+    # through the second's folds (heartbeats extend the whole group)
+    claim_group: list = []
+    handles = []
     for sid, mode in read.parts:
+        transport = env.transports.get(_read_transport_name(read, sid,
+                                                            env.cfg))
+        handle = transport.open_drain(sid, read.partition,
+                                      int(n_producers.get(str(sid), 0)),
+                                      group=claim_group)
         agg: Any = {} if mode in ("agg", "group", "join") else []
-        seen: set = set()
-        per_src: dict[str, int] = {}   # distinct data messages per producer
-        eos_total: dict[str, int] = {}  # producer -> advertised seq count
-        deadline = time.monotonic() + timeout  # inactivity deadline
-        pipelined = n_producers is not None
-        quorum = int(n_producers.get(str(sid), 0)) if pipelined else 0
-        need = {} if pipelined else dict(expected.get(str(sid), {}))
-
-        def done() -> bool:
-            if pipelined:
-                return (len(eos_total) >= quorum
-                        and all(per_src.get(s, 0) >= t
-                                for s, t in eos_total.items()))
-            return len(seen) >= sum(need.values())
-
-        if env.cfg.shuffle_backend == "s3":
-            prefix = f"_shuffle/{sid}/p{read.partition}/"
-            # S3 has no arrival notification — polling LIST is inherent to
-            # an object-store shuffle (the paper's cost argument against
-            # it); back off exponentially so an early pipelined consumer
-            # doesn't spin while its producers compute
-            backoff = 0.002
-            while not done():
-                progressed = False
-                for key in env.store.list(prefix):
-                    src, _, tail = key[len(prefix):].rpartition("-")
-                    if tail == "eos":
-                        if pipelined and src not in eos_total:
-                            eos_total[src] = env.store.get_obj(key)
-                            progressed = True
-                        continue
-                    kid = (src, int(tail))
-                    if kid in seen:
-                        continue
-                    seen.add(kid)
-                    per_src[src] = per_src.get(src, 0) + 1
-                    stats["messages"] += 1
-                    records = env.store.get_obj(key)
-                    stats["records"] += len(records)
-                    fold(agg, records, mode)
-                    progressed = True
-                if done():
-                    break
-                if env.sqs.closed:
-                    raise AbortedError(f"s3 shuffle {prefix}: aborted")
-                if progressed:
-                    deadline = time.monotonic() + timeout
-                    backoff = 0.002
-                elif time.monotonic() > deadline:
-                    raise TimeoutError(f"s3 shuffle {prefix} incomplete")
-                time.sleep(backoff)
-                backoff = min(backoff * 2, 0.1)
-            if sort_groups and mode in ("group", "join"):
-                for vals in agg.values():
-                    vals.sort(key=_stable_order)
-            out[(sid, mode)] = agg
-            continue
-
-        name = queue_name(sid, read.partition)
-        vis = env.cfg.visibility_timeout_s
-        hb_deadline = time.monotonic() + vis / 2
-        # adaptive drain sizing: one scheduler step takes the whole visible
-        # backlog (bounded), not a fixed 100. The backlog estimate is a
-        # billable request (GetQueueAttributes), so it is re-queried only
-        # while receives keep coming back full — a trickle or an idle wait
-        # falls back to the minimum batch for free.
-        want = None  # None => query the backlog estimate
-        while not done():
-            if want is None:
-                want = min(1000, max(SQS_BATCH_MESSAGES,
-                                     env.sqs.approx_len(name)))
-            try:
-                msgs = env.sqs.receive_many(name, want)
-            except QueueGone:
-                raise AbortedError(
-                    f"queue {name} deleted — a competing attempt already "
-                    f"completed this partition")
-            now = time.monotonic()
-            if not msgs:
-                want = SQS_BATCH_MESSAGES
-                if env.sqs.closed:
-                    raise AbortedError(f"queue {name}: aborted")
-                if now > deadline:
-                    raise TimeoutError(
-                        f"queue {name} incomplete: {len(seen)} data msgs, "
-                        f"eos {len(eos_total)}/{quorum}" if pipelined else
-                        f"queue {name} incomplete: {len(seen)}"
-                        f"/{sum(need.values())} messages")
-                # block on arrival instead of sleep-spinning. NOTE: held
-                # claims are deliberately NOT heartbeated while idle: a
-                # drain idles because it still needs messages, and when a
-                # retry and a speculative twin race on one queue, each
-                # needs the OTHER's claims to lapse — idle heartbeats on
-                # both sides split the queue permanently and burn every
-                # retry. A lone waiting consumer instead re-receives its
-                # claimed backlog each visibility period (re-billed,
-                # deduped) — the bounded price of livelock-freedom.
-                env.sqs.wait_for_messages(name, 0.25)
-                continue
-            want = None if len(msgs) == want else SQS_BATCH_MESSAGES
-            rcpts = held.setdefault(name, {})
-            progressed = False
-            for m in msgs:
-                rcpts[(m.src, m.seq, m.kind)] = m.receipt
-                if time.monotonic() > hb_deadline:
-                    # actively folding: a long fold must not let held
-                    # messages expire mid-task and redeliver to a rival
-                    _heartbeat(env, held, vis)
-                    hb_deadline = time.monotonic() + vis / 2
-                if m.kind == "eos":
-                    if pipelined and m.src not in eos_total:
-                        eos_total[m.src] = m.seq  # duplicates: same total
-                        progressed = True
-                    continue
-                kid = (m.src, m.seq)
-                if kid in seen:
-                    stats["duplicates"] += 1
-                    continue
-                seen.add(kid)
-                progressed = True
-                per_src[m.src] = per_src.get(m.src, 0) + 1
-                stats["messages"] += 1
-                records = unpack_records(m.body, env.store)
-                stats["records"] += len(records)
-                fold(agg, records, mode)
-            if progressed:
-                deadline = time.monotonic() + timeout
-            elif time.monotonic() > deadline:
-                # a batch of pure duplicates (e.g. this drain's own lapsed
-                # claims redelivering while a producer is stuck) is not
-                # progress — without this the inactivity timeout could
-                # never fire once the drain held a single claim
-                raise TimeoutError(
-                    f"queue {name} stalled: {len(seen)} data msgs, "
-                    f"eos {len(eos_total)}/{quorum}" if pipelined else
-                    f"queue {name} stalled: {len(seen)}"
-                    f"/{sum(need.values())} messages")
+        for _src, _seq, body in handle:
+            records = unpack_batch(body, env.store)
+            stats["records"] += len(records)
+            fold(agg, records, mode)
+        stats["messages"] += handle.stats["messages"]
+        stats["duplicates"] += handle.stats["duplicates"]
         if sort_groups and mode in ("group", "join"):
             for vals in agg.values():
                 vals.sort(key=_stable_order)
         out[(sid, mode)] = agg
+        handles.append(handle)
+
+    def ack():
+        for handle in handles:
+            handle.ack()
+
     return out, stats, ack
 
 
-def _shuffle_input_iter(read: ShuffleRead, env: LambdaSim, expected: dict,
-                        n_producers: dict | None = None, *,
-                        sort_groups: bool = False):
-    data, stats, ack = _drain_shuffle(read, env, expected, n_producers,
+def _shuffle_input_iter(read: ShuffleRead, env: LambdaSim,
+                        n_producers: dict, *, sort_groups: bool = False):
+    data, stats, ack = _drain_shuffle(read, env, n_producers,
                                       sort_groups=sort_groups)
     if len(read.parts) == 2:  # join
         (sid_l, _), (sid_r, _) = read.parts
@@ -545,7 +404,8 @@ def _canonical_key(key):
 
 
 class _ShuffleWriter:
-    """Hash-partitioned buffered writer with overflow flush (§III-A)."""
+    """Hash-partitioned buffered writer with overflow flush (§III-A),
+    shipping columnar record batches over the shuffle's transport."""
 
     def __init__(self, write, env: LambdaSim, task_src: str,
                  seq_start: dict | None):
@@ -558,7 +418,10 @@ class _ShuffleWriter:
         self.buffers: dict[int, Any] = {}
         self.buffered = 0
         self.seq = {int(k): v for k, v in (seq_start or {}).items()}
-        self.message_counts: dict[int, int] = {}
+
+    def _transport(self):
+        return self.env.transports.get(self.write.transport
+                                       or self.env.cfg.shuffle_backend)
 
     def _partition_of(self, key) -> int:
         # stable across interpreter runs / PYTHONHASHSEED — a retried or
@@ -567,15 +430,6 @@ class _ShuffleWriter:
         blob = pickle.dumps(_canonical_key(key),
                             protocol=pickle.HIGHEST_PROTOCOL)
         return zlib.crc32(blob) % self.write.nparts
-
-    def _spill(self, blob: bytes) -> str:
-        """A single record pickle over the 256 KiB message cap rides the
-        object store; the queue carries a SpillPointer. Content-addressed
-        key, so a retry or speculative twin re-spilling the same record
-        overwrites idempotently."""
-        key = f"_spill/{hashlib.sha1(blob).hexdigest()}"
-        self.env.store.put(key, blob)
-        return key
 
     def add(self, record):
         w = self.write
@@ -600,55 +454,30 @@ class _ShuffleWriter:
             self.flush()
 
     def flush(self):
-        s3_mode = self.env.cfg.shuffle_backend == "s3"
+        transport = self._transport()
         for p, buf in self.buffers.items():
             records = list(buf.items()) if isinstance(buf, dict) else buf
             if not records:
                 continue
-            if s3_mode:
-                # Qubole-style object-store shuffle: one object per flush;
-                # idempotent keys make retries/speculation free to dedup
-                seq = self.seq.get(p, 0)
-                self.seq[p] = seq + 1
-                self.message_counts[p] = self.message_counts.get(p, 0) + 1
-                key = (f"_shuffle/{self.write.shuffle_id}/p{p}/"
-                       f"{self.src}-{seq}")
-                self.env.store.put_obj(key, records)
-                continue
-            name = queue_name(self.write.shuffle_id, p)
-            bodies = pack_records(records, spill=self._spill)
-            batch: list[Message] = []
-            for body in bodies:
-                seq = self.seq.get(p, 0)
-                self.seq[p] = seq + 1
-                self.message_counts[p] = self.message_counts.get(p, 0) + 1
-                batch.append(Message(body, seq, self.src))
-                if len(batch) == 10:
-                    self.env.sqs.send_batch(name, batch)
-                    batch = []
-            if batch:
-                self.env.sqs.send_batch(name, batch)
+            bodies = pack_batch(records, limit=transport.batch_limit,
+                                spill=transport.spill,
+                                columnar=self.env.cfg.columnar_batches)
+            seq = self.seq.get(p, 0)
+            transport.send(self.write.shuffle_id, p, self.src, seq, bodies)
+            self.seq[p] = seq + len(bodies)
         self.buffers = {}
         self.buffered = 0
 
     def finalize(self):
-        """Emit one EOS control message per output partition — INCLUDING
-        partitions this task never wrote to (total 0) — carrying the total
-        sequence count, so consumers can count down a fixed producer quorum.
-        Only the final (non-continuation) link of a chained task calls this;
-        a retried/speculated duplicate re-emits identical EOS (partitioning
-        and sequence assignment are deterministic), which consumers dedup
-        by producer id."""
-        w = self.write
-        if self.env.cfg.shuffle_backend == "s3":
-            for p in range(w.nparts):
-                key = f"_shuffle/{w.shuffle_id}/p{p}/{self.src}-eos"
-                self.env.store.put_obj(key, self.seq.get(p, 0))
-            return
-        for p in range(w.nparts):
-            self.env.sqs.send_batch(
-                queue_name(w.shuffle_id, p),
-                [eos_message(self.src, self.seq.get(p, 0))])
+        """Emit EOS on every output partition — INCLUDING partitions this
+        task never wrote to (total 0) — carrying the total sequence count,
+        so consumers can count down a fixed producer quorum. Only the final
+        (non-continuation) link of a chained task calls this; a retried/
+        speculated duplicate re-emits identical EOS (partitioning and
+        sequence assignment are deterministic), which consumers dedup by
+        producer id."""
+        self._transport().emit_eos(self.write.shuffle_id, self.write.nparts,
+                                   self.src, self.seq)
 
 
 def executor_main(payload: dict, env: LambdaSim) -> dict:
@@ -679,8 +508,7 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
         reader = None
     else:
         base_iter, drain_stats, ack_shuffle = _shuffle_input_iter(
-            inp, env, payload.get("expected", {}),
-            payload.get("n_producers"),
+            inp, env, payload.get("n_producers") or {},
             sort_groups=payload["write"] is not None)
         stats.update(drain_stats)
         reader = None
@@ -726,16 +554,15 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
         for rec in out_iter:
             writer.add(rec)
         writer.flush()
-        if payload.get("emit_eos") and not exhausted["flag"]:
-            # pipelined protocol: the LAST link of the (possibly chained)
-            # task closes the stream for this producer
+        if not exhausted["flag"]:
+            # EOS protocol (both scheduler modes): the LAST link of the
+            # (possibly chained) task closes the stream for this producer
             writer.finalize()
         if ack_shuffle is not None:
             # input acked only now that the output is durable downstream;
             # dying any earlier leaves it all to redeliver for the retry
             ack_shuffle()
-        resp = {"status": "ok", "message_counts": writer.message_counts,
-                "stats": stats}
+        resp = {"status": "ok", "stats": stats}
         if exhausted["flag"]:
             resp["continuation"] = {
                 "resume_offset": reader.consumed_until,

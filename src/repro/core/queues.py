@@ -24,9 +24,14 @@ SQSSim reproduces what matters for Flint's correctness story:
     sleep-spinning while their producers are still computing.
 
 ObjectStoreSim is the S3 stand-in: ranged GETs over byte blobs for input
-splits, PUT/GET for the Qubole-style object-store shuffle (paper §V), the
->6 MB payload spill (paper §III-B), and the >256 KiB record spill
-(SpillPointer messages).
+splits, PUT/GET/LIST (with multipart-aware billing) for the Lambada-style
+exchange shuffle (core.shuffle.s3), the >6 MB payload spill (paper
+§III-B), and the >256 KiB record spill (SpillPointer messages).
+
+The shuffle data plane itself — transport selection, drain protocol,
+batch framing — lives in core.shuffle; this module only simulates the
+services. pack_records/unpack_records remain here as the length-prefixed
+pickle framing that core.shuffle.batch falls back to for ragged data.
 """
 
 from __future__ import annotations
@@ -267,7 +272,12 @@ class SQSSim:
 
 
 class ObjectStoreSim:
-    """S3 stand-in: named byte blobs with ranged reads and listing."""
+    """S3 stand-in: named byte blobs with ranged reads and listing.
+
+    Billing matches the request it models: a put above the multipart
+    threshold bills as Create + UploadParts + Complete, every ``list`` is a
+    LIST request (the recurring cost of the S3-exchange shuffle's polling
+    discovery), and deletes are free but counted."""
 
     def __init__(self, ledger: CostLedger):
         self.ledger = ledger
@@ -277,7 +287,7 @@ class ObjectStoreSim:
     def put(self, key: str, data: bytes):
         with self._lock:
             self._objects[key] = bytes(data)
-        self.ledger.add_s3(len(data), put=True)
+        self.ledger.add_s3_put(len(data))
 
     def get(self, key: str, start: int = 0, end: int | None = None) -> bytes:
         with self._lock:
@@ -295,12 +305,25 @@ class ObjectStoreSim:
             return key in self._objects
 
     def list(self, prefix: str) -> list[str]:
+        self.ledger.add_s3_list()
         with self._lock:
             return sorted(k for k in self._objects if k.startswith(prefix))
 
     def delete(self, key: str):
+        self.ledger.add_s3_delete()
         with self._lock:
             self._objects.pop(key, None)
+
+    def delete_prefix(self, prefix: str) -> int:
+        """Job-scoped GC sweep: one LIST + a (free) DELETE per key."""
+        self.ledger.add_s3_list()
+        with self._lock:
+            doomed = [k for k in self._objects if k.startswith(prefix)]
+            for k in doomed:
+                del self._objects[k]
+        for _ in doomed:
+            self.ledger.add_s3_delete()
+        return len(doomed)
 
     # convenience for pickled python values (payload spill, shuffle blobs)
     def put_obj(self, key: str, value: Any):

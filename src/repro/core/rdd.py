@@ -40,19 +40,25 @@ class RDD:
     def mapPartitions(self, fn: Callable) -> "RDD":
         return Narrow(self, "mappartitions", fn)
 
-    def reduceByKey(self, fn: Callable, numPartitions: int | None = None) -> "RDD":
+    def reduceByKey(self, fn: Callable, numPartitions: int | None = None,
+                    transport: str | None = None) -> "RDD":
         return ShuffleAgg(self, fn, numPartitions or self.nparts,
-                          map_side_combine=True)
+                          map_side_combine=True, transport=transport)
 
-    def groupByKey(self, numPartitions: int | None = None) -> "RDD":
+    def groupByKey(self, numPartitions: int | None = None,
+                   transport: str | None = None) -> "RDD":
         return ShuffleAgg(self, None, numPartitions or self.nparts,
-                          map_side_combine=False)
+                          map_side_combine=False, transport=transport)
 
-    def join(self, other: "RDD", numPartitions: int | None = None) -> "RDD":
-        return Join(self, other, numPartitions or max(self.nparts, other.nparts))
+    def join(self, other: "RDD", numPartitions: int | None = None,
+             transport: str | None = None) -> "RDD":
+        return Join(self, other,
+                    numPartitions or max(self.nparts, other.nparts),
+                    transport=transport)
 
-    def repartition(self, numPartitions: int) -> "RDD":
-        return Repartition(self, numPartitions)
+    def repartition(self, numPartitions: int,
+                    transport: str | None = None) -> "RDD":
+        return Repartition(self, numPartitions, transport=transport)
 
     def union(self, other: "RDD") -> "RDD":
         return Union(self, other)
@@ -129,26 +135,33 @@ class Narrow(RDD):
 
 
 class ShuffleAgg(RDD):
-    """reduceByKey / groupByKey."""
+    """reduceByKey / groupByKey. ``transport`` is the per-shuffle backend
+    hint (core.shuffle registry name); None defers to the engine default."""
 
-    def __init__(self, parent: RDD, fn, nparts: int, *, map_side_combine: bool):
+    def __init__(self, parent: RDD, fn, nparts: int, *,
+                 map_side_combine: bool, transport: str | None = None):
         super().__init__(parent.ctx, nparts)
         self.parent = parent
         self.fn = fn
         self.map_side_combine = map_side_combine
+        self.transport = transport
 
 
 class Repartition(RDD):
-    def __init__(self, parent: RDD, nparts: int):
+    def __init__(self, parent: RDD, nparts: int,
+                 transport: str | None = None):
         super().__init__(parent.ctx, nparts)
         self.parent = parent
+        self.transport = transport
 
 
 class Join(RDD):
-    def __init__(self, left: RDD, right: RDD, nparts: int):
+    def __init__(self, left: RDD, right: RDD, nparts: int,
+                 transport: str | None = None):
         super().__init__(left.ctx, nparts)
         self.left = left
         self.right = right
+        self.transport = transport
 
 
 class Union(RDD):

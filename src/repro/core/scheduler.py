@@ -14,9 +14,20 @@ deadlock-free: a slot freed by a producer completion is re-offered to
 producer work before any consumer takes it.
 
 BARRIER (``pipeline_stages=False``, the paper's original design kept for
-A/B measurement): one stage at a time; per-queue message counts are
-aggregated after the producer stage completes and handed to consumers as
-drain expectations.
+A/B measurement): one stage at a time. Termination is the SAME EOS
+protocol as pipelined mode — producers close their streams with
+per-partition sequence totals and consumers count down the plan-time
+producer quorum. (The original post-hoc expectation-table handover died
+with the pluggable-transport refactor; both modes now share one
+termination path, barrier mode simply delays consumer launch.)
+
+Intermediate data moves over a pluggable ShuffleTransport
+(core.shuffle): per-partition SQS queues or a Lambada-style S3 object
+exchange, chosen per shuffle via the DAG-level ``transport`` hint with
+``cfg.shuffle_backend`` as the default. Queue/prefix lifecycle
+(open/release/destroy) and the job-end garbage collection of transient
+object-store keys (``_spill/``, ``_payload/``, ``_result/``,
+``_exchange/``) are driven from here.
 
 Both modes share task semantics: CONTINUATIONS re-invoked on warm
 containers (executor chaining — a chained producer only emits EOS from its
@@ -47,9 +58,13 @@ from typing import Any
 
 from repro.core.costs import CostLedger
 from repro.core.dag import ShuffleRead, StagePlan, TaskDef
-from repro.core.executors import (FlintConfig, LambdaSim, queue_name,
-                                  serialize_task)
+from repro.core.executors import FlintConfig, LambdaSim, serialize_task
 from repro.core.queues import ObjectStoreSim, SQSSim
+from repro.core.shuffle import TransportSet
+
+#: transient object-store prefixes swept by the job-end GC (the S3
+#: exchange's _exchange/ prefix is swept by its transport's gc())
+GC_PREFIXES = ("_spill/", "_payload/", "_result/")
 
 
 class StageFailure(RuntimeError):
@@ -84,7 +99,10 @@ class FlintScheduler:
         self.store = store or ObjectStoreSim(self.ledger)
         self.sqs = SQSSim(self.ledger, duplicate_prob=cfg.duplicate_prob,
                           visibility_timeout=cfg.visibility_timeout_s)
-        self.lam = LambdaSim(cfg, self.ledger, self.store, self.sqs)
+        self.transports = TransportSet(cfg, self.ledger, self.store,
+                                       self.sqs)
+        self.lam = LambdaSim(cfg, self.ledger, self.store, self.sqs,
+                             self.transports)
         self.pool = cf.ThreadPoolExecutor(max_workers=cfg.concurrency)
         # fault_plan: {(stage, index): {"fail_attempts": n} | {"straggle_s": s}
         #             | {"fail_after_records": n} | {"fail_on_link": k}}
@@ -92,62 +110,70 @@ class FlintScheduler:
         self.verbose = verbose
         self.stage_stats: list[dict] = []
         self._lock = threading.Lock()
-        self._released_queues: set[str] = set()
+        # shuffle_id -> (producer nparts, transport name); set per run()
+        self._sid_meta: dict[int, tuple[int, str]] = {}
+        self.gc_report: dict[str, int] = {}
+        self._gc_done = False
 
     # ------------------------------------------------------------------
     def run(self, stages: list[StagePlan]):
+        self._sid_meta = {
+            s.write.shuffle_id:
+                (s.write.nparts,
+                 s.write.transport or self.cfg.shuffle_backend)
+            for s in stages if s.write is not None}
+        if (self.cfg.visibility_timeout_s >= self.cfg.drain_timeout_s
+                and any(t == "sqs" for _, t in self._sid_meta.values())):
+            # the constructor guard only sees the engine default; a
+            # per-shuffle transport="sqs" hint must not sneak past it into
+            # the same unrecoverable-retry failure
+            raise ValueError(
+                f"visibility_timeout_s ({self.cfg.visibility_timeout_s}) "
+                f"must be < drain_timeout_s ({self.cfg.drain_timeout_s}) "
+                f"for shuffles routed over sqs, or consumer retries cannot "
+                f"outwait redelivery")
         if self.cfg.pipeline_stages:
             return self._run_pipelined(stages)
         return self._run_barrier(stages)
 
-    @staticmethod
-    def _queue_parts(stages: list[StagePlan]) -> dict[int, int]:
-        """shuffle_id -> number of queues (the PRODUCER's partition count,
-        not the consumer stage's task count — the two differ e.g. under
-        unions, and deleting by the wrong one leaks queues)."""
-        return {s.write.shuffle_id: s.write.nparts
-                for s in stages if s.write is not None}
+    def _transport_of(self, sid: int):
+        return self.transports.get(self._sid_meta[sid][1])
 
-    def _delete_shuffle_queues(self, sids, nparts_by_sid):
-        """Stage-end sweep — covers only the queues not already released
-        per-task (each delete is a billed control request; re-issuing
-        deletes for queues the scheduler knows are gone would skew the
-        benchmarks' request counts)."""
+    def _open_shuffle(self, write):
+        """Create the shuffle's channels before any producer launches."""
+        name = write.transport or self.cfg.shuffle_backend
+        self.transports.get(name).open(write.shuffle_id, write.nparts)
+
+    def _destroy_shuffles(self, sids):
+        """Stage-end sweep — the transport skips partitions already
+        released per-task (each release is billed; re-issuing deletes for
+        channels the scheduler knows are gone would skew the benchmarks'
+        request counts)."""
         for sid in sids:
-            for p in range(nparts_by_sid[sid]):
-                name = queue_name(sid, p)
-                if name not in self._released_queues:
-                    self._released_queues.add(name)
-                    self.sqs.delete_queue(name)
+            nparts, _ = self._sid_meta[sid]
+            self._transport_of(sid).destroy(sid, nparts)
 
-    def _release_task_queues(self, task: TaskDef):
-        """A completed consumer's partition queues are dead: delete them
+    def _release_task_partitions(self, task: TaskDef):
+        """A completed consumer's shuffle partitions are dead: release them
         now so a losing speculative duplicate (or a late retry of a task
-        that already won) aborts on QueueGone immediately instead of
-        blocking a pool thread until the drain timeout."""
+        that already won) aborts immediately (QueueGone / exchange
+        tombstone) instead of blocking a pool thread until the drain
+        timeout."""
         if isinstance(task.input, ShuffleRead):
             for sid, _ in task.input.parts:
-                name = queue_name(sid, task.input.partition)
-                if name not in self._released_queues:
-                    self._released_queues.add(name)
-                    self.sqs.delete_queue(name)
+                self._transport_of(sid).release_partition(
+                    sid, task.input.partition)
 
     # ----------------------------------------------------- barrier mode
     def _run_barrier(self, stages: list[StagePlan]):
-        # expected message counts: shuffle_id -> partition -> src -> count
-        expectations: dict[int, dict[int, dict[str, int]]] = {}
-        nparts_by_sid = self._queue_parts(stages)
         result = None
         try:
             for stage in stages:
                 if stage.write is not None:
-                    for p in range(stage.write.nparts):
-                        self.sqs.create_queue(
-                            queue_name(stage.write.shuffle_id, p))
-                result = self._run_stage(stage, expectations)
-                # queues consumed by this stage are dead — scheduler cleanup
-                self._delete_shuffle_queues(_consumed_shuffles(stage),
-                                            nparts_by_sid)
+                    self._open_shuffle(stage.write)
+                result = self._run_stage(stage)
+                # channels consumed by this stage are dead — sweep them
+                self._destroy_shuffles(_consumed_shuffles(stage))
         except BaseException:
             # same teardown as the pipelined path: a consumer blocked on a
             # queue that will never fill must not linger in the thread
@@ -158,7 +184,7 @@ class FlintScheduler:
 
     # ------------------------------------------------------------------
     def _payload_for(self, task: TaskDef, stage: StagePlan, attempt: int,
-                     expectations, extra: dict | None = None) -> dict:
+                     extra: dict | None = None) -> dict:
         extra = dict(extra or {})
         fault = self.fault_plan.get((task.stage_id, task.index), {})
         if fault.get("fail_attempts", 0) > attempt:
@@ -176,28 +202,19 @@ class FlintScheduler:
         extra.pop("_link", None)
         extra.pop("_speculative", None)
         if isinstance(task.input, ShuffleRead):
-            if self.cfg.pipeline_stages:
-                extra["n_producers"] = {
-                    str(sid): stage.producer_counts[sid]
-                    for sid, _ in task.input.parts}
-            else:
-                exp = {}
-                for sid, _ in task.input.parts:
-                    exp[str(sid)] = expectations.get(sid, {}).get(
-                        task.input.partition, {})
-                extra["expected"] = exp
-        if stage.write is not None and self.cfg.pipeline_stages:
-            extra["emit_eos"] = True
+            # EOS termination quorum, known at plan time — both modes
+            extra["n_producers"] = {
+                str(sid): stage.producer_counts[sid]
+                for sid, _ in task.input.parts}
         if stage.action == "save" or stage.save_prefix:
             extra["save_prefix"] = stage.save_prefix
         return serialize_task(task, attempt, extra)
 
-    def _run_stage(self, stage: StagePlan, expectations) -> Any:
+    def _run_stage(self, stage: StagePlan) -> Any:
         t0 = time.monotonic()
         n = len(stage.tasks)
         results: dict[int, Any] = {}
         partials: dict[int, list] = {}
-        counts: dict[int, dict[str, int]] = {}
         attempts: dict[int, int] = {i: 0 for i in range(n)}
         durations: list[float] = []
         speculated: set[int] = set()
@@ -214,7 +231,7 @@ class FlintScheduler:
 
         def launch(task: TaskDef, extra=None, speculative=False):
             payload = self._payload_for(
-                task, stage, attempts[task.index], expectations,
+                task, stage, attempts[task.index],
                 dict(extra or {}, _speculative=speculative))
             fut = self.pool.submit(self.lam.invoke, payload)
             inflight[fut] = (task.index, speculative, time.monotonic())
@@ -287,7 +304,7 @@ class FlintScheduler:
                 if "continuation" in resp:
                     # executor chaining: merge partial output, re-invoke warm
                     chained += 1
-                    self._merge_partial(resp, idx, partials, counts)
+                    self._merge_partial(resp, idx, partials)
                     cursors[idx] = resp["continuation"]
                     links[idx] = links.get(idx, 1) + 1
                     launch(stage.tasks[idx],
@@ -295,17 +312,9 @@ class FlintScheduler:
                                       _link=links[idx]))
                     continue
                 durations.append(now - started)
-                self._merge_partial(resp, idx, partials, counts)
+                self._merge_partial(resp, idx, partials)
                 results[idx] = True
-                self._release_task_queues(stage.tasks[idx])
-
-        # stage complete: fold message counts into expectations
-        if stage.write is not None:
-            exp = expectations.setdefault(stage.write.shuffle_id, {})
-            for idx, per_part in counts.items():
-                src = f"s{stage.id}t{idx}"
-                for p, c in per_part.items():
-                    exp.setdefault(int(p), {})[src] = c
+                self._release_task_partitions(stage.tasks[idx])
 
         self.stage_stats.append({
             "stage": stage.id, "tasks": n,
@@ -323,11 +332,9 @@ class FlintScheduler:
     # --------------------------------------------------- pipelined mode
     def _run_pipelined(self, stages: list[StagePlan]):
         cfg = self.cfg
-        nparts_by_sid = self._queue_parts(stages)
         for stage in stages:
             if stage.write is not None:
-                for p in range(stage.write.nparts):
-                    self.sqs.create_queue(queue_name(stage.write.shuffle_id, p))
+                self._open_shuffle(stage.write)
 
         producer_stage_of = {s.write.shuffle_id: si
                              for si, s in enumerate(stages)
@@ -339,7 +346,6 @@ class FlintScheduler:
         n_stages = len(stages)
         results: list[dict] = [{} for _ in stages]
         partials: list[dict] = [{} for _ in stages]
-        counts: list[dict] = [{} for _ in stages]
         attempts = [{i: 0 for i in range(len(s.tasks))} for s in stages]
         durations: list[list[float]] = [[] for _ in stages]
         speculated: list[set] = [set() for _ in stages]
@@ -376,7 +382,7 @@ class FlintScheduler:
                 if stage_t0[si] is None:
                     stage_t0[si] = time.monotonic()
                 payload = self._payload_for(
-                    task, stages[si], attempts[si][task.index], None,
+                    task, stages[si], attempts[si][task.index],
                     dict(extra or {}, _speculative=speculative))
                 fut = self.pool.submit(self.lam.invoke, payload)
                 inflight[fut] = (si, task.index, speculative,
@@ -420,8 +426,7 @@ class FlintScheduler:
             }
             if self.verbose:
                 print(f"[flint] stage {stage.id}: {stats_rows[si]}")
-            self._delete_shuffle_queues(_consumed_shuffles(stage),
-                                        nparts_by_sid)
+            self._destroy_shuffles(_consumed_shuffles(stage))
             if stage.action is not None or stage.write is None:
                 final_result[0] = self._stage_result(stage, partials[si])
 
@@ -482,8 +487,7 @@ class FlintScheduler:
                         # chaining: the producer has NOT emitted EOS yet —
                         # the re-invoked link (or its last successor) will
                         chained[si] += 1
-                        self._merge_partial(resp, idx, partials[si],
-                                            counts[si])
+                        self._merge_partial(resp, idx, partials[si])
                         cursors[si][idx] = resp["continuation"]
                         links[si][idx] = links[si].get(idx, 1) + 1
                         push(si, stages[si].tasks[idx],
@@ -491,9 +495,9 @@ class FlintScheduler:
                                         _link=links[si][idx]))
                         continue
                     durations[si].append(now - started)
-                    self._merge_partial(resp, idx, partials[si], counts[si])
+                    self._merge_partial(resp, idx, partials[si])
                     results[si][idx] = True
-                    self._release_task_queues(stages[si].tasks[idx])
+                    self._release_task_partitions(stages[si].tasks[idx])
                     if len(results[si]) == len(stages[si].tasks):
                         finish_stage(si, stages[si])
                 launch_ready()
@@ -521,14 +525,33 @@ class FlintScheduler:
         return None
 
     @staticmethod
-    def _merge_partial(resp, idx, partials, counts):
+    def _merge_partial(resp, idx, partials):
         if "result" in resp:
             partials.setdefault(idx, []).extend(resp["result"])
-        if "message_counts" in resp:
-            cur = counts.setdefault(idx, {})
-            for p, c in resp["message_counts"].items():
-                cur[p] = cur.get(p, 0) + c
+
+    def gc_job(self) -> dict[str, int]:
+        """Job-scoped garbage collection (idempotent): every transport
+        sweeps its channels (stray queues, the whole ``_exchange/`` tree)
+        and the transient object-store prefixes are deleted — content-
+        addressed spill keys were never reclaimed before this. Runs inside
+        ``shutdown``, i.e. on every query completion or failure; the
+        removal counts land in ``gc_report`` so benchmarks/tests can both
+        assert zero leaks and see that the GC actually had work to do."""
+        if self._gc_done:
+            return self.gc_report
+        self._gc_done = True
+        report: dict[str, int] = {}
+        for transport in self.transports.active():
+            for resource, n in transport.gc().items():
+                report[resource] = report.get(resource, 0) + n
+        for prefix in GC_PREFIXES:
+            n = self.store.delete_prefix(prefix)
+            if n:
+                report[prefix] = n
+        self.gc_report = report
+        return report
 
     def shutdown(self):
         self.sqs.close()  # release any consumer blocked on arrival
+        self.gc_job()
         self.pool.shutdown(wait=False)

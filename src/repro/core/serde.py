@@ -17,6 +17,7 @@ from __future__ import annotations
 import importlib
 import marshal
 import pickle
+import struct
 import types
 from typing import Any
 
@@ -103,6 +104,142 @@ def _unpack_function(packed: dict, memo: dict) -> types.FunctionType:
         for cell, v in zip(closure, packed["closure"]):
             cell.cell_contents = _unpack(v, memo)
     return fn
+
+
+# ------------------------------------------------------- columnar codecs
+#
+# Typed-array column codecs for the shuffle's columnar record batches
+# (core.shuffle.batch). A column is homogeneous when every element has the
+# same CONCRETE type (bool is not int, 1.0 is not 1 — the partitioner may
+# canonicalize, but the wire must round-trip values exactly). Schema
+# grammar:
+#
+#   "i"  int64        "f"  float64      "b"  bool
+#   "s"  utf-8 string (u16 length prefixes; "S" when any string is >64 KiB)
+#   "t(a,b,...)"  fixed-arity tuple of columns, recursively
+#
+# Anything else (mixed types, ints beyond int64, lists, None, ...) has no
+# schema; the batch falls back to length-prefixed pickle framing.
+
+_INT64_MIN, _INT64_MAX = -(2**63), 2**63 - 1
+_U32 = struct.Struct("<I")
+
+
+def column_schema(values: list) -> str | None:
+    """Schema of a homogeneous column, or None if the column is ragged."""
+    t = type(values[0])
+    if any(type(v) is not t for v in values):
+        return None
+    if t is int:
+        if all(_INT64_MIN <= v <= _INT64_MAX for v in values):
+            return "i"
+        return None
+    if t is float:
+        return "f"
+    if t is bool:
+        return "b"
+    if t is str:
+        return ("s" if all(len(v.encode("utf-8")) <= 0xFFFF for v in values)
+                else "S")
+    if t is tuple:
+        arity = len(values[0])
+        if arity == 0 or any(len(v) != arity for v in values):
+            return None
+        subs = []
+        for j in range(arity):
+            sub = column_schema([v[j] for v in values])
+            if sub is None:
+                return None
+            subs.append(sub)
+        return "t(%s)" % ",".join(subs)
+    return None
+
+
+def _split_tuple_schema(schema: str) -> list[str]:
+    """Top-level comma split of the "..." in "t(...)" (parens may nest)."""
+    inner = schema[2:-1]
+    subs, depth, start = [], 0, 0
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            subs.append(inner[start:i])
+            start = i + 1
+    subs.append(inner[start:])
+    return subs
+
+
+def encode_column(schema: str, values: list) -> bytes:
+    n = len(values)
+    if schema == "i":
+        return struct.pack("<%dq" % n, *values)
+    if schema == "f":
+        return struct.pack("<%dd" % n, *values)
+    if schema == "b":
+        return bytes(values)
+    if schema == "s" or schema == "S":
+        blobs = [v.encode("utf-8") for v in values]
+        fmt = "<%dH" if schema == "s" else "<%dI"
+        return struct.pack(fmt % n, *map(len, blobs)) + b"".join(blobs)
+    if schema.startswith("t("):
+        out = []
+        for j, sub in enumerate(_split_tuple_schema(schema)):
+            blob = encode_column(sub, [v[j] for v in values])
+            out.append(_U32.pack(len(blob)))
+            out.append(blob)
+        return b"".join(out)
+    raise ValueError(f"unknown column schema {schema!r}")
+
+
+def decode_column(schema: str, blob: bytes, n: int) -> list:
+    if schema == "i":
+        return list(struct.unpack("<%dq" % n, blob))
+    if schema == "f":
+        return list(struct.unpack("<%dd" % n, blob))
+    if schema == "b":
+        return [bool(b) for b in blob]
+    if schema == "s" or schema == "S":
+        width = 2 if schema == "s" else 4
+        lens = struct.unpack_from(("<%dH" if schema == "s" else "<%dI") % n,
+                                  blob)
+        off = width * n
+        out = []
+        for ln in lens:
+            out.append(blob[off:off + ln].decode("utf-8"))
+            off += ln
+        return out
+    if schema.startswith("t("):
+        cols, off = [], 0
+        for sub in _split_tuple_schema(schema):
+            (ln,) = _U32.unpack_from(blob, off)
+            off += _U32.size
+            cols.append(decode_column(sub, blob[off:off + ln], n))
+            off += ln
+        return list(zip(*cols))
+    raise ValueError(f"unknown column schema {schema!r}")
+
+
+def column_value_sizes(schema: str, values: list) -> list[int]:
+    """Exact encoded bytes per value (framing prefixes excluded) — lets the
+    batch packer split a column set under a byte cap without encoding
+    speculative chunks."""
+    if schema == "i" or schema == "f":
+        return [8] * len(values)
+    if schema == "b":
+        return [1] * len(values)
+    if schema == "s" or schema == "S":
+        width = 2 if schema == "s" else 4
+        return [width + len(v.encode("utf-8")) for v in values]
+    if schema.startswith("t("):
+        sizes = [0] * len(values)
+        for j, sub in enumerate(_split_tuple_schema(schema)):
+            for i, s in enumerate(
+                    column_value_sizes(sub, [v[j] for v in values])):
+                sizes[i] += s
+        return sizes
+    raise ValueError(f"unknown column schema {schema!r}")
 
 
 def dumps_fn(fn) -> bytes:

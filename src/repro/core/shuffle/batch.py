@@ -1,0 +1,128 @@
+"""Columnar record batches — the shuffle wire format shared by every
+transport (docs/shuffle_transports.md).
+
+Per-record pickling dominated shuffled bytes: a `((month, hour, payment),
+count)` record costs ~60 pickle bytes where its data is ~25. When a batch's
+key and value columns are homogeneous (same concrete type throughout —
+ints, floats, bools, strings, or fixed-arity tuples of those), the batch is
+framed as typed arrays instead (core.serde column codecs):
+
+    b"C" | u32 n | (u16 schema-len | schema | u32 payload-len | payload) x2
+
+Ragged data — mixed types, non-pair records, ints beyond int64, a single
+record bigger than the body cap — falls back to the length-prefixed pickle
+framing (queues.pack_records, which also handles the oversized-record
+object-store spill), tagged:
+
+    b"P" | pickle frames...
+
+Both framings are deterministic functions of the record sequence, which the
+fault-tolerance story requires: a retry or speculative twin re-packing the
+same records must re-emit byte-identical bodies so (src, seq) dedup and
+content-addressed exchange keys stay sound.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any, Callable, Iterable
+
+from repro.core import serde
+from repro.core.costs import SQS_MESSAGE_LIMIT
+from repro.core.queues import ObjectStoreSim, pack_records, unpack_records
+
+_TAG_COLUMNAR = 0x43  # "C"
+_TAG_PICKLE = 0x50    # "P"
+_N = struct.Struct("<I")
+_SLEN = struct.Struct("<H")
+# headroom for tag + count + two (schema, payload-length) headers and the
+# nested tuple sub-column prefixes; schemas are tens of bytes, the caps are
+# hundreds of KiB, so a flat reserve beats exact bookkeeping
+_BODY_RESERVE = 512
+
+
+def pack_batch(records: Iterable[Any], limit: int = SQS_MESSAGE_LIMIT,
+               spill: Callable[[bytes], str] | None = None,
+               columnar: bool = True) -> list[bytes]:
+    """Pack records into tagged batch bodies, each under ``limit`` bytes."""
+    records = records if isinstance(records, list) else list(records)
+    if columnar and records:
+        bodies = _pack_columnar(records, limit)
+        if bodies is not None:
+            return bodies
+    return [bytes([_TAG_PICKLE]) + body
+            for body in pack_records(records, limit - 1, spill)]
+
+
+def unpack_batch(body: bytes, store: ObjectStoreSim | None = None
+                 ) -> list[Any]:
+    tag = body[0]
+    if tag == _TAG_PICKLE:
+        return unpack_records(body[1:], store)
+    if tag == _TAG_COLUMNAR:
+        return _unpack_columnar(body)
+    raise ValueError(f"unknown batch tag {body[:1]!r}")
+
+
+def is_columnar(body: bytes) -> bool:
+    return bool(body) and body[0] == _TAG_COLUMNAR
+
+
+# ------------------------------------------------------------- internals
+
+
+def _pack_columnar(records: list, limit: int) -> list[bytes] | None:
+    """Columnar bodies, or None when the batch is ragged (caller falls back
+    to pickle framing)."""
+    if any(type(r) is not tuple or len(r) != 2 for r in records):
+        return None
+    keys = [r[0] for r in records]
+    vals = [r[1] for r in records]
+    kschema = serde.column_schema(keys)
+    vschema = serde.column_schema(vals)
+    if kschema is None or vschema is None:
+        return None
+    sizes = [a + b for a, b in zip(serde.column_value_sizes(kschema, keys),
+                                   serde.column_value_sizes(vschema, vals))]
+    cap = limit - _BODY_RESERVE
+    if cap <= 0 or max(sizes) > cap:
+        return None  # a single oversized record rides the spill path instead
+    bodies: list[bytes] = []
+    start, acc = 0, 0
+    for i, s in enumerate(sizes):
+        if acc + s > cap:
+            bodies.append(_encode_chunk(kschema, vschema,
+                                        keys[start:i], vals[start:i]))
+            start, acc = i, 0
+        acc += s
+    bodies.append(_encode_chunk(kschema, vschema, keys[start:], vals[start:]))
+    if any(len(b) > limit for b in bodies):
+        return None  # reserve blown (pathological schema): play it safe
+    return bodies
+
+
+def _encode_chunk(kschema: str, vschema: str, keys: list, vals: list
+                  ) -> bytes:
+    parts = [bytes([_TAG_COLUMNAR]), _N.pack(len(keys))]
+    for schema, col in ((kschema, keys), (vschema, vals)):
+        sblob = schema.encode("ascii")
+        payload = serde.encode_column(schema, col)
+        parts += [_SLEN.pack(len(sblob)), sblob, _N.pack(len(payload)),
+                  payload]
+    return b"".join(parts)
+
+
+def _unpack_columnar(body: bytes) -> list:
+    (n,) = _N.unpack_from(body, 1)
+    off = 1 + _N.size
+    cols = []
+    for _ in range(2):
+        (slen,) = _SLEN.unpack_from(body, off)
+        off += _SLEN.size
+        schema = body[off:off + slen].decode("ascii")
+        off += slen
+        (plen,) = _N.unpack_from(body, off)
+        off += _N.size
+        cols.append(serde.decode_column(schema, body[off:off + plen], n))
+        off += plen
+    return list(zip(cols[0], cols[1]))

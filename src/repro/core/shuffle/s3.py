@@ -1,0 +1,182 @@
+"""S3ExchangeTransport — a Lambada-style serverless exchange operator over
+object storage: no queues at all.
+
+Producers write one CONTENT-ADDRESSED object per packed output batch,
+
+    _exchange/{sid}/p{partition}/{src}-{seq:08d}-{sha1(body)[:12]}
+
+so a retry or speculative twin re-emitting the byte-identical batch
+overwrites idempotently instead of duplicating. End-of-stream rides the
+manifest object ``eos-{src}`` (one per partition, value = the producer's
+total sequence count there), written by the final link of a chained task —
+the consumer's EOS quorum comes from ``StagePlan.producer_counts`` exactly
+as on the queue transport.
+
+Consumers DISCOVER work by polling LIST on their partition prefix (S3 has
+no arrival notification — the recurring cost of an object-store shuffle,
+billed per LIST), GET fresh batches as they appear, and terminate on the
+manifest quorum. Reads are non-destructive, so ``ack`` is a no-op and a
+consumer that dies mid-drain recovers by simply re-listing — no visibility
+leases, no claim races.
+
+Unlike SQS's 256 KiB messages, one exchange object may be tens of MiB
+(costs.S3_EXCHANGE_BATCH_LIMIT); objects past the multipart threshold bill
+as Create + UploadParts + Complete.
+
+Fast abort for losing speculative twins: when a consumer completes,
+``release_partition`` drops a ``.released`` tombstone and deletes the
+partition's objects — a competing drain hits the tombstone on its next
+LIST (or a KeyError on an already-deleted GET) and aborts, the moral
+equivalent of QueueGone. ``gc`` removes the whole ``_exchange/`` tree at
+job end, tombstones included.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import time
+from collections import deque
+
+from repro.core.costs import S3_EXCHANGE_BATCH_LIMIT
+from repro.core.shuffle.base import (AbortedError, DrainHandle, DrainState,
+                                     ShuffleTransport)
+
+EXCHANGE_PREFIX = "_exchange/"
+_TOMBSTONE = ".released"
+
+
+def _partition_prefix(shuffle_id: int, partition: int) -> str:
+    return f"{EXCHANGE_PREFIX}{shuffle_id}/p{partition}/"
+
+
+class S3ExchangeTransport(ShuffleTransport):
+    name = "s3"
+    batch_limit = S3_EXCHANGE_BATCH_LIMIT
+
+    def __init__(self, cfg, ledger, store, sqs):
+        super().__init__(cfg, ledger, store, sqs)
+        self._released: set = set()
+
+    # ---------------------------------------------------- producer side
+    def send(self, shuffle_id, partition, src, first_seq, bodies):
+        prefix = _partition_prefix(shuffle_id, partition)
+        for i, body in enumerate(bodies):
+            digest = hashlib.sha1(body).hexdigest()[:12]
+            self.store.put(f"{prefix}{src}-{first_seq + i:08d}-{digest}",
+                           body)
+
+    def emit_eos(self, shuffle_id, nparts, src, totals):
+        for p in range(nparts):
+            self.store.put_obj(
+                f"{_partition_prefix(shuffle_id, p)}eos-{src}",
+                totals.get(p, 0))
+
+    # ---------------------------------------------------- consumer side
+    def open_drain(self, shuffle_id, partition, quorum, group=None):
+        return _S3Drain(self, _partition_prefix(shuffle_id, partition),
+                        quorum)
+
+    # ------------------------------------------------- lifecycle + cost
+    def open(self, shuffle_id, nparts):
+        pass  # prefixes are implicit — nothing to create, nothing billed
+
+    def release_partition(self, shuffle_id, partition):
+        prefix = _partition_prefix(shuffle_id, partition)
+        if prefix in self._released:
+            return
+        self._released.add(prefix)
+        tomb = prefix + _TOMBSTONE
+        self.store.put(tomb, b"")  # abort marker FIRST, then free the data
+        for key in self.store.list(prefix):
+            if key != tomb:
+                self.store.delete(key)
+
+    def destroy(self, shuffle_id, nparts):
+        # tombstones stay until gc: a loser twin that starts its LIST after
+        # the stage ended must still abort fast instead of waiting out the
+        # drain timeout
+        for p in range(nparts):
+            self.release_partition(shuffle_id, p)
+
+    def gc(self):
+        n = self.store.delete_prefix(EXCHANGE_PREFIX)
+        self._released.clear()
+        return {EXCHANGE_PREFIX: n} if n else {}
+
+    def service_cost(self):
+        return self.ledger.s3_usd
+
+
+class _S3Drain(DrainHandle):
+    """Polling-LIST discovery with exponential backoff (an early pipelined
+    consumer must not spin while its producers compute), GET per fresh
+    batch, manifest-quorum termination."""
+
+    def __init__(self, tr: S3ExchangeTransport, prefix: str, quorum: int):
+        self.tr = tr
+        self.prefix = prefix
+        self.state = DrainState(quorum)
+        self._pending: deque = deque()  # (src, seq, key) discovered, un-GET
+        self._listed: set = set()
+        self._timeout = tr.cfg.drain_timeout_s
+        self._deadline = time.monotonic() + self._timeout
+        self._backoff = 0.002
+
+    def __next__(self):
+        while True:
+            if self._pending:
+                src, seq, key = self._pending.popleft()
+                try:
+                    body = self.tr.store.get(key)
+                except KeyError:
+                    raise AbortedError(
+                        f"{key} vanished mid-drain — partition released by "
+                        f"a competing attempt") from None
+                return (src, seq, body)
+            if self.state.done():
+                raise StopIteration
+            self._poll()
+
+    def _poll(self):
+        if self.tr.sqs.closed:
+            raise AbortedError(f"s3 exchange {self.prefix}: aborted")
+        progressed = False
+        for key in self.tr.store.list(self.prefix):
+            if key in self._listed:
+                continue
+            tail = key[len(self.prefix):]
+            if tail == _TOMBSTONE:
+                raise AbortedError(
+                    f"s3 exchange {self.prefix} released — a competing "
+                    f"attempt already completed this partition")
+            self._listed.add(key)
+            if tail.startswith("eos-"):
+                try:
+                    total = self.tr.store.get_obj(key)
+                except KeyError:
+                    raise AbortedError(
+                        f"{key} vanished mid-drain — partition released"
+                    ) from None
+                progressed |= self.state.register_eos(tail[4:], total)
+            else:
+                src, seq, _digest = tail.split("-")
+                if self.state.register_data(src, int(seq)):
+                    self._pending.append((src, int(seq), key))
+                    progressed = True
+        now = time.monotonic()
+        if progressed:
+            self._deadline = now + self._timeout
+            self._backoff = 0.002
+            return
+        if self._pending or self.state.done():
+            return
+        if now > self._deadline:
+            raise TimeoutError(
+                f"s3 exchange {self.prefix} incomplete: "
+                f"{len(self.state.seen)} batches, eos "
+                f"{len(self.state.eos_total)}/{self.state.quorum}")
+        time.sleep(self._backoff)
+        self._backoff = min(self._backoff * 2, 0.1)
+
+    def ack(self):
+        pass  # reads are non-destructive; a retry recovers by re-listing

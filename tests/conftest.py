@@ -25,11 +25,13 @@ except ModuleNotFoundError:
         def example_from(self, rng):
             return self._draw(rng)
 
-    def _integers(min_value, max_value):
+    def _integers(min_value=-2**31, max_value=2**31):
         return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
-    def _floats(min_value, max_value):
-        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+    def _floats(min_value=None, max_value=None, allow_nan=True):
+        lo = -1e9 if min_value is None else min_value
+        hi = 1e9 if max_value is None else max_value
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
 
     def _sampled_from(elements):
         elements = list(elements)
@@ -38,13 +40,34 @@ except ModuleNotFoundError:
     def _booleans():
         return _Strategy(lambda rng: rng.random() < 0.5)
 
+    def _none():
+        return _Strategy(lambda rng: None)
+
+    def _text(max_size=20, **_kw):
+        alphabet = "abc XYZ09_é世"
+        return _Strategy(lambda rng: "".join(
+            rng.choice(alphabet) for _ in range(rng.randint(0, max_size))))
+
+    def _one_of(*strategies):
+        return _Strategy(
+            lambda rng: rng.choice(strategies).example_from(rng))
+
+    def _lists(elements, min_size=0, max_size=10, **_kw):
+        return _Strategy(lambda rng: [
+            elements.example_from(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    def _tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.example_from(rng)
+                                           for s in strategies))
+
     def _settings(**kwargs):
         def deco(fn):
             fn._shim_settings = dict(kwargs)
             return fn
         return deco
 
-    def _given(**strategies):
+    def _given(*arg_strategies, **strategies):
         def deco(fn):
             max_examples = getattr(fn, "_shim_settings",
                                    {}).get("max_examples", 10)
@@ -52,9 +75,10 @@ except ModuleNotFoundError:
             def wrapper(*args, **kwargs):
                 rng = random.Random(0xF11A7)
                 for _ in range(max_examples):
+                    pos = tuple(s.example_from(rng) for s in arg_strategies)
                     drawn = {name: s.example_from(rng)
                              for name, s in strategies.items()}
-                    fn(*args, **dict(kwargs, **drawn))
+                    fn(*args, *pos, **dict(kwargs, **drawn))
             # plain (*args, **kwargs) signature on purpose: pytest must not
             # mistake the strategy kwargs for fixtures
             wrapper.__name__ = fn.__name__
@@ -69,6 +93,11 @@ except ModuleNotFoundError:
     _st.floats = _floats
     _st.sampled_from = _sampled_from
     _st.booleans = _booleans
+    _st.none = _none
+    _st.text = _text
+    _st.one_of = _one_of
+    _st.lists = _lists
+    _st.tuples = _tuples
     _mod.given = _given
     _mod.settings = _settings
     _mod.strategies = _st

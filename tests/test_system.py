@@ -42,7 +42,10 @@ def test_q1_flint_equals_cluster():
     rf, rc = _q1(ctx_f), _q1(ctx_c)
     assert rf == rc and sum(v for _, v in rf) >= 1
     rep = ctx_f.cost_report()
-    assert rep["total_usd"] > 0 and rep["sqs_requests"] > 0
+    shuffle_requests = (rep["sqs_requests"]
+                        if ctx_f.config.shuffle_backend == "sqs"
+                        else rep["s3_lists"])
+    assert rep["total_usd"] > 0 and shuffle_requests > 0
 
 
 def test_end_to_end_train_and_serve(tmp_path, tiny_dense_cfg):

@@ -124,7 +124,8 @@ def test_visibility_must_undercut_drain_timeout():
     consumer gives up before its predecessor's claims expire — rejected
     up front instead of failing later with 'queue incomplete'."""
     with pytest.raises(ValueError, match="visibility_timeout_s"):
-        FlintScheduler(FlintConfig(visibility_timeout_s=30.0,
+        FlintScheduler(FlintConfig(shuffle_backend="sqs",
+                                   visibility_timeout_s=30.0,
                                    drain_timeout_s=30.0))
     FlintScheduler(FlintConfig(shuffle_backend="s3", visibility_timeout_s=30.0,
                                drain_timeout_s=30.0)).shutdown()  # s3: moot
@@ -248,20 +249,22 @@ def test_drain_stall_times_out_despite_own_redeliveries():
                                       _drain_shuffle)
     from repro.core.dag import ShuffleRead
 
-    cfg = FC(visibility_timeout_s=0.2, drain_timeout_s=1.0)
+    cfg = FC(shuffle_backend="sqs", visibility_timeout_s=0.2,
+             drain_timeout_s=1.0)
     ledger = CostLedger()
     store = ObjectStoreSim(ledger)
     sqs = SQSSim(ledger, visibility_timeout=cfg.visibility_timeout_s)
     env = LambdaSim(cfg, ledger, store, sqs)
     sqs.create_queue("shuffle8-p0")
-    for body in pack_records([(1, 1), (2, 2)]):
+    from repro.core.shuffle import pack_batch
+    for body in pack_batch([(1, 1), (2, 2)]):
         sqs.send_batch("shuffle8-p0", [Message(body, 0, "s0t0")])
     # no EOS: the producer is permanently stuck
 
     err = []
     def drain():
         try:
-            _drain_shuffle(ShuffleRead([(8, "group")], 0), env, {}, {"8": 1})
+            _drain_shuffle(ShuffleRead([(8, "group")], 0), env, {"8": 1})
         except Exception as e:  # noqa: BLE001
             err.append(e)
     t = threading.Thread(target=drain, daemon=True)
@@ -280,20 +283,22 @@ def test_consumer_retry_when_attempt_holds_messages_in_flight():
                                       _drain_shuffle)
     from repro.core.dag import ShuffleRead
 
-    cfg = FC(visibility_timeout_s=0.3, drain_timeout_s=5.0)
+    cfg = FC(shuffle_backend="sqs", visibility_timeout_s=0.3,
+             drain_timeout_s=5.0)
     ledger = CostLedger()
     store = ObjectStoreSim(ledger)
     sqs = SQSSim(ledger, visibility_timeout=cfg.visibility_timeout_s)
     env = LambdaSim(cfg, ledger, store, sqs)
     sqs.create_queue("shuffle7-p0")
-    for body in pack_records([(i, i) for i in range(50)]):
+    from repro.core.shuffle import pack_batch
+    for body in pack_batch([(i, i) for i in range(50)]):
         sqs.send_batch("shuffle7-p0", [Message(body, 0, "s0t0")])
     sqs.send_batch("shuffle7-p0", [Message(b"", 1, "s0t0", kind="eos")])
 
     read = ShuffleRead([(7, "group")], 0)
-    out1, _, _ack1 = _drain_shuffle(read, env, {}, {"7": 1})
+    out1, _, _ack1 = _drain_shuffle(read, env, {"7": 1})
     # first attempt "dies" here: _ack1 never called, messages in flight
-    out2, _, ack2 = _drain_shuffle(read, env, {}, {"7": 1})
+    out2, _, ack2 = _drain_shuffle(read, env, {"7": 1})
     assert out1[(7, "group")] == out2[(7, "group")]
     ack2()
     assert sqs.inflight_len("shuffle7-p0") == 0
@@ -379,12 +384,17 @@ def test_oversized_record_rides_shuffle_end_to_end():
     ValueError — now it spills to the object store and the consumer
     resolves the pointer."""
     big = "x" * 400_000
-    ctx = FlintContext("flint", FlintConfig(concurrency=4))
+    # the 256 KiB cap is a QUEUE property — the S3 exchange ships batches
+    # this size whole, so pin the transport the spill path exists for
+    ctx = FlintContext("flint", FlintConfig(concurrency=4,
+                                            shuffle_backend="sqs"))
     out = dict(ctx.parallelize([("big", big), ("small", "y")] * 2, 2)
                .groupByKey(2).collect())
     assert out["big"] == [big, big]
     assert out["small"] == ["y", "y"]
-    assert ctx.store.list("_spill/")  # spill actually happened
+    # spill actually happened — and the job-end GC reclaimed every key
+    assert ctx.last_scheduler.gc_report.get("_spill/", 0) > 0
+    assert not ctx.store.list("_spill/")
 
 
 # ----------------------------------------------- barrier-mode teardown
