@@ -23,7 +23,13 @@
    a reducer dying mid-drain plus a straggling reducer under 5 %
    duplicate delivery; both modes must match the fault-free run.
 
-``--quick`` runs a reduced-size pass of (1) and (2) with hard
+5. FAN-OUT A/B (docs/dag_fanout.md): a self-join and a diamond (one
+   aggregation feeding two wide consumers) with plan-time CSE on/off on
+   both transports — CSE must shrink the task count (the shared producer
+   stage runs exactly once) with identical results — plus an RDD.cache()
+   A/B where the second action replans from the materialization.
+
+``--quick`` runs a reduced-size pass of (1), (2) and (5) with hard
 assertions — the CI smoke gate for transport regressions.
 """
 
@@ -70,7 +76,33 @@ def join_query(ctx):
     return counts.join(tips, 8).collect()
 
 
+def selfjoin_query(ctx):
+    # per-hour trip counts joined with THEMSELVES: without CSE the whole
+    # source scan + aggregation lineage is planned and executed twice
+    agg = (ctx.textFile("taxi.csv", 8).map(lambda x: x.split(","))
+           .map(lambda x: (x[0][11:13], 1))
+           .reduceByKey(lambda a, b: a + b, 8))
+    return agg.join(agg, 8).collect()
+
+
+def diamond_query(ctx, cache=False):
+    # one source aggregation feeding TWO wide consumers (integer cents:
+    # float sums are arrival-order-sensitive)
+    agg = (ctx.textFile("taxi.csv", 8).map(lambda x: x.split(","))
+           .map(lambda x: (x[0][11:13], int(round(float(x[6]) * 100))))
+           .reduceByKey(lambda a, b: a + b, 8))
+    if cache:
+        agg = agg.cache()
+    c1 = (agg.map(lambda kv: (int(kv[0]) % 4, kv[1]))
+          .reduceByKey(lambda a, b: a + b, 4))
+    c2 = (agg.map(lambda kv: ("all", kv[1]))
+          .reduceByKey(lambda a, b: a + b, 2))
+    return c1.union(c2).collect()
+
+
 WORKLOADS = {"groupby": groupby_query, "join": join_query}
+
+FANOUT_WORKLOADS = {"selfjoin": selfjoin_query, "diamond": diamond_query}
 
 
 def assert_no_leaks(ctx):
@@ -238,6 +270,83 @@ def run_fault_ab(rows=None):
     return out, identical
 
 
+def run_fanout_ab(rows=None):
+    """Self-join + diamond under plan-time CSE on/off, on both serverless
+    transports (docs/dag_fanout.md). Hard gates: identical results across
+    every (transport, cse) cell, a REDUCED task count with CSE (the shared
+    producer stage executes exactly once), and zero leaked keys/queues.
+    Returns (rows, all-cells-agree)."""
+    data = taxi_csv(rows or N_ROWS, seed=13)
+    out = []
+    agreement = True
+    for workload, query in FANOUT_WORKLOADS.items():
+        answers = []
+        tasks_by_cell = {}
+        for backend in ("sqs", "s3"):
+            for cse in (False, True):
+                ctx = FlintContext(
+                    "flint",
+                    FlintConfig(concurrency=16, flush_records=2000,
+                                shuffle_backend=backend, plan_cse=cse))
+                ctx.upload("taxi.csv", data)
+                t0 = time.monotonic()
+                ans = query(ctx)
+                wall = time.monotonic() - t0
+                stats = ctx.last_scheduler.stage_stats
+                tasks = sum(s["tasks"] for s in stats)
+                tasks_by_cell[(backend, cse)] = tasks
+                rep = ctx.cost_report()
+                assert_no_leaks(ctx)
+                out.append({
+                    "workload": workload, "backend": backend,
+                    "cse": cse, "wall_s": round(wall, 4),
+                    "tasks": tasks, "stages": len(stats),
+                    "lambda_requests": rep["lambda_requests"],
+                    "total_usd": round(rep["total_usd"], 6),
+                    "subtotals": ctx.ledger.service_subtotals(),
+                    "gc": dict(ctx.last_scheduler.gc_report),
+                })
+                answers.append(sorted(ans, key=repr))
+        agreement = agreement and all(a == answers[0] for a in answers)
+        for backend in ("sqs", "s3"):
+            assert tasks_by_cell[(backend, True)] \
+                < tasks_by_cell[(backend, False)], \
+                f"{workload}/{backend}: CSE did not reduce task count " \
+                f"({tasks_by_cell[(backend, True)]} vs " \
+                f"{tasks_by_cell[(backend, False)]})"
+    return out, agreement
+
+
+def run_cache_ab(rows=None):
+    """RDD.cache() on the diamond's shared aggregation: the second action
+    must replan from the materialization (fewer invocations), return
+    identical results, and leave zero cache keys after clear_cache()."""
+    data = taxi_csv(rows or N_ROWS, seed=13)
+    ctx = FlintContext("flint", FlintConfig(concurrency=16,
+                                            flush_records=2000))
+    ctx.upload("taxi.csv", data)
+    t0 = time.monotonic()
+    first = sorted(diamond_query(ctx, cache=True), key=repr)
+    first_wall = time.monotonic() - t0
+    first_invokes = ctx.ledger.lambda_requests
+    t0 = time.monotonic()
+    second = sorted(diamond_query(ctx, cache=True), key=repr)
+    second_wall = time.monotonic() - t0
+    second_invokes = ctx.ledger.lambda_requests - first_invokes
+    assert first == second, "cache hit changed query results"
+    assert second_invokes < first_invokes, \
+        f"cache did not cut invocations ({second_invokes} vs {first_invokes})"
+    assert_no_leaks(ctx)
+    ctx.clear_cache()
+    assert not ctx.store.list("_cache/"), "cache keys leaked past clear"
+    return [
+        {"action": "first", "wall_s": round(first_wall, 4),
+         "lambda_requests": first_invokes},
+        {"action": "second", "wall_s": round(second_wall, 4),
+         "lambda_requests": second_invokes},
+    ]
+
+
 def _print_transport_rows(rows, agreement):
     print("workload,backend,wall_s,modeled_service_s,total_usd,"
           "shuffle_requests,shuffled_bytes")
@@ -269,11 +378,26 @@ def main(argv=None):
     print(f"# columnar/pickle shuffled-bytes ratio: {ratio}, "
           f"results identical: {col_identical}")
 
+    fan, fan_agreement = run_fanout_ab(rows)
+    print("workload,backend,cse,wall_s,tasks,stages,lambda_requests,"
+          "total_usd")
+    for r in fan:
+        print(f"{r['workload']},{r['backend']},{r['cse']},{r['wall_s']},"
+              f"{r['tasks']},{r['stages']},{r['lambda_requests']},"
+              f"{r['total_usd']}")
+    print(f"# fan-out cells agree: {fan_agreement}")
+    cache_rows = run_cache_ab(rows)
+    print("cache_action,wall_s,lambda_requests")
+    for r in cache_rows:
+        print(f"{r['action']},{r['wall_s']},{r['lambda_requests']}")
+
     # hard gates — make transport regressions fail loudly (CI --quick)
     assert agreement, "transports disagree on query results"
     assert col_identical, "columnar framing changed query results"
     assert ratio < 1.0, \
         f"columnar batches did not shrink shuffled bytes (ratio {ratio})"
+    assert fan_agreement, \
+        "fan-out results differ across transports / CSE on-off"
     if quick:
         print("# quick smoke passed")
         return ab, agreement

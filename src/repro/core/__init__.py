@@ -48,6 +48,10 @@ class FlintContext:
         self.partition_multiplier = 1
         self.last_scheduler = None
         self._collection_counter = 0
+        # RDD.cache() registry: lineage token -> {"nparts", "ready"}.
+        # Owned by the context (caches span actions/schedulers); the
+        # job-scoped GC keeps only keys registered here.
+        self._cache_index: dict[str, dict] = {}
 
     # -------------------------------------------------------------- data
     def upload(self, key: str, data: bytes):
@@ -73,7 +77,8 @@ class FlintContext:
         if self.backend_name == "flint":
             return FlintScheduler(self.config, self.ledger, self.store,
                                   fault_plan=self.fault_plan,
-                                  verbose=self.verbose)
+                                  verbose=self.verbose,
+                                  cache_index=self._cache_index)
         if self.backend_name == "cluster":
             return ClusterScheduler(self.config, self.ledger, self.store)
         if self.backend_name == "pyspark":
@@ -86,12 +91,23 @@ class FlintContext:
         mult = self.partition_multiplier
         for attempt in range(self.elastic_retries + 1):
             plan = build_plan(rdd, action, save_prefix,
-                              partition_multiplier=mult)
+                              partition_multiplier=mult,
+                              cse=self.config.plan_cse,
+                              cache_index=self._cache_index)
             sched = self._make_scheduler()
             self.last_scheduler = sched
             try:
-                return sched.run(plan)
+                result = sched.run(plan)
+                # materializations this action teed to _cache/ are now
+                # durable and complete — later actions may plan from them
+                self._mark_caches_ready(plan)
+                return result
             except StageFailure as e:
+                # a failed materializing action must not pin its partial
+                # _cache/ batches: drop the still-pending registrations so
+                # the job GC (scheduler shutdown, below) sweeps them; an
+                # elastic retry re-registers on the re-plan
+                self._unregister_pending_caches(plan)
                 if (e.error_type == "MemoryCapExceeded"
                         and attempt < self.elastic_retries):
                     # the paper's elasticity move: more partitions, re-run
@@ -104,6 +120,28 @@ class FlintContext:
             finally:
                 sched.shutdown()
         raise AssertionError("unreachable")
+
+    def _plan_cache_tokens(self, plan):
+        return {arg[0] for stage in plan for task in stage.tasks
+                for kind, arg in task.ops if kind == "cache"}
+
+    def _mark_caches_ready(self, plan):
+        for token in self._plan_cache_tokens(plan):
+            entry = self._cache_index.get(token)
+            if entry is not None:
+                entry["ready"] = True
+
+    def _unregister_pending_caches(self, plan):
+        for token in self._plan_cache_tokens(plan):
+            entry = self._cache_index.get(token)
+            if entry is not None and not entry.get("ready"):
+                del self._cache_index[token]
+
+    def clear_cache(self) -> int:
+        """Drop every RDD.cache() materialization (billed free DELETEs);
+        returns the number of keys removed."""
+        self._cache_index.clear()
+        return self.store.delete_prefix("_cache/")
 
     # ------------------------------------------------------------- costs
     def cost_report(self) -> dict:

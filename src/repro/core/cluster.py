@@ -20,9 +20,10 @@ from collections import defaultdict
 from typing import Any
 
 from repro.core.costs import CLUSTER_INSTANCES, CostLedger, cluster_cost
-from repro.core.dag import (CollectionInput, ShuffleRead, SourceInput,
-                            StagePlan)
-from repro.core.executors import FlintConfig, _apply_ops, _SourceReader
+from repro.core.dag import (CacheInput, CollectionInput, ShuffleRead,
+                            SourceInput, StagePlan)
+from repro.core.executors import (FlintConfig, _apply_ops, _SourceReader,
+                                  cache_partition_iter)
 from repro.core.queues import ObjectStoreSim
 
 
@@ -55,9 +56,15 @@ class ClusterScheduler:
             return iter(_SourceReader(inp, self.store, self.cfg, None))
         if isinstance(inp, CollectionInput):
             return iter(self.store.get_obj(f"{inp.key}/{inp.index}"))
+        if isinstance(inp, CacheInput):
+            return cache_partition_iter(inp, self.store)
         assert isinstance(inp, ShuffleRead)
-        if len(inp.parts) == 2:  # join
-            (sl, _), (sr, _) = inp.parts
+        if inp.self_join or len(inp.parts) == 2:  # join
+            if inp.self_join:
+                sl, _ = inp.parts[0]
+                sr = sl  # one shared shuffle feeds both sides
+            else:
+                (sl, _), (sr, _) = inp.parts
             left: dict = defaultdict(list)
             right: dict = defaultdict(list)
             for k, v in shuffles[sl][inp.partition]:
@@ -88,7 +95,7 @@ class ClusterScheduler:
             it = self._records_in(task, shuffles)
             if self.pipe_overhead:  # JVM -> Python pipe: serde per record
                 it = (pickle.loads(pickle.dumps(r)) for r in it)
-            it = _apply_ops(it, [(k, fn) for k, fn in task.ops])
+            it = _apply_ops(it, [(k, fn) for k, fn in task.ops], self.store)
             if stage.write is not None:
                 w = stage.write
                 out: dict[int, list] = defaultdict(list)

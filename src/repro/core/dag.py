@@ -6,17 +6,44 @@ plan (stages of tasks + shuffle specs); the pluggable backend
 sees stages and tasks.
 
 A TaskDef is fully self-describing: an input spec (source byte-range,
-driver collection partition, or shuffle read) plus the chain of narrow ops
-to apply. Functions are shipped with core.serde (mini-cloudpickle).
+driver collection partition, shuffle read, or cached-partition read) plus
+the chain of narrow ops to apply. Functions are shipped with core.serde
+(mini-cloudpickle).
+
+Two plan-level optimizations live here (docs/dag_fanout.md):
+
+COMMON-SUBEXPRESSION ELIMINATION: the planner fingerprints every lineage
+node (structure + serialized functions), so when the same shuffle — same
+input lineage, mode, partition count, combiner, and transport — is needed
+by more than one consumer (a self-join, a diamond where one RDD feeds two
+wide ops, a union of two derivations of one RDD), its producer stage is
+planned exactly ONCE and the shared ``ShuffleWrite`` is tagged with one
+CONSUMER GROUP per read site. Each ``ShuffleRead`` carries its group
+index; transports fan data out (or multi-read it non-destructively) per
+group, so every consumer sees the full stream independently. A self-join
+collapses further: both sides fingerprint identically, so the join reads
+a single shuffle once (``ShuffleRead.self_join``) instead of draining two
+copies of the same data.
+
+CACHE MATERIALIZATION: an RDD marked ``.cache()`` gets a per-task
+``("cache", ...)`` op that tees its computed partitions to
+content-addressed ``_cache/{token}/{nparts}/p{i}/`` object-store keys
+(columnar batches). A later ACTION whose lineage reaches the same
+fingerprint reads ``CacheInput`` partitions instead of replanning the
+upstream stages. The token is the lineage fingerprint, so caching assumes
+the same determinism the rest of the fault-tolerance story already does.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
+import pickle
 from typing import Any
 
 from repro.core import rdd as R
+from repro.core import serde
 
 _next_shuffle = itertools.count()
 
@@ -36,6 +63,15 @@ class CollectionInput:
 
 
 @dataclasses.dataclass
+class CacheInput:
+    """One materialized partition of a cached lineage: columnar batches
+    under ``_cache/{token}/{nparts}/p{index}/``."""
+    token: str
+    nparts: int
+    index: int
+
+
+@dataclasses.dataclass
 class ShuffleRead:
     """One or two (join) shuffle inputs feeding a task."""
     parts: list  # list of (shuffle_id, mode) — mode: agg|group|join|repart
@@ -44,6 +80,13 @@ class ShuffleRead:
     # shuffle_id -> transport name, mirroring the producing ShuffleWrite's
     # hint so both ends of a shuffle always agree on the backend
     transports: dict | None = None
+    # consumer-group index per ``parts`` entry (None => group 0): each read
+    # site of a CSE-shared shuffle drains its own group, so sibling
+    # consumers never steal each other's messages
+    groups: list | None = None
+    # a self-join reads ONE shared shuffle and uses the drained aggregate
+    # as both sides, instead of shipping the same data twice
+    self_join: bool = False
 
 
 @dataclasses.dataclass
@@ -56,13 +99,17 @@ class ShuffleWrite:
     # per-shuffle transport hint (core.shuffle registry name); "" defers
     # to FlintConfig.shuffle_backend — the Flock-style per-shuffle choice
     transport: str = ""
+    # number of independent consumer groups reading this shuffle (CSE fans
+    # one producer stage out to N consuming read sites); fixed by the time
+    # planning completes, before any channel opens
+    consumer_groups: int = 1
 
 
 @dataclasses.dataclass
 class TaskDef:
     stage_id: int
     index: int
-    input: Any  # SourceInput | CollectionInput | ShuffleRead
+    input: Any  # SourceInput | CollectionInput | CacheInput | ShuffleRead
     ops: list  # [(kind, fn), ...]
     write: ShuffleWrite | None  # None => result/save stage
 
@@ -82,13 +129,83 @@ class StagePlan:
     producer_counts: dict = dataclasses.field(default_factory=dict)
 
 
+# ------------------------------------------------------ lineage fingerprints
+
+
+def _fn_fingerprint(fn, memo: dict | None = None) -> bytes:
+    if fn is None:
+        return b"-"
+    try:
+        return serde.dumps_fn(fn)
+    except Exception:
+        # unserializable callable: the id() keeps it distinct from every
+        # OTHER live object, so within one plan (where the RDD graph pins
+        # the objects) CSE stays conservative. Across actions id reuse
+        # could alias a released function, so the walk is flagged
+        # unstable and cache_token refuses to content-address it.
+        if memo is not None:
+            memo["unstable"] = True
+        return f"unserializable:{id(fn)}".encode()
+
+
+def lineage_fingerprint(node, _memo: dict | None = None) -> bytes:
+    """Structural content hash of a lineage: node types, parameters, and
+    the serialized bytes of every user function. Two RDDs with equal
+    fingerprints compute the same partitions, so the planner may share
+    their shuffles — separately-constructed but identical derivations
+    merge just like reuse of one RDD object. Falls back to object
+    identity for anything it cannot serialize (no false merges)."""
+    memo = {} if _memo is None else _memo
+    got = memo.get(id(node))
+    if got is not None:
+        return got
+    if isinstance(node, R.Source):
+        parts: tuple = (b"src", node.key, node.nparts)
+    elif isinstance(node, R.ParallelCollection):
+        parts = (b"coll", node.key, node.nparts)
+    elif isinstance(node, R.Narrow):
+        parts = (b"narrow", node.kind, _fn_fingerprint(node.fn, memo),
+                 lineage_fingerprint(node.parent, memo))
+    elif isinstance(node, R.ShuffleAgg):
+        parts = (b"agg", node.map_side_combine, node.nparts,
+                 node.transport or "", _fn_fingerprint(node.fn, memo),
+                 lineage_fingerprint(node.parent, memo))
+    elif isinstance(node, R.Repartition):
+        parts = (b"repart", node.nparts, node.transport or "",
+                 lineage_fingerprint(node.parent, memo))
+    elif isinstance(node, R.Join):
+        parts = (b"join", node.nparts, node.transport or "",
+                 lineage_fingerprint(node.left, memo),
+                 lineage_fingerprint(node.right, memo))
+    elif isinstance(node, R.Union):
+        parts = (b"union", lineage_fingerprint(node.a, memo),
+                 lineage_fingerprint(node.b, memo))
+    else:
+        raise TypeError(f"unknown RDD node {type(node).__name__}")
+    digest = hashlib.sha1(pickle.dumps(parts)).digest()
+    memo[id(node)] = digest
+    return digest
+
+
+def cache_token(node) -> str | None:
+    """Content-addressed cache identity for ``RDD.cache()`` partitions,
+    or None when the lineage contains an unserializable callable — its
+    identity-based fingerprint is not stable across actions (CPython id
+    reuse could alias a different function), so such lineages simply
+    recompute instead of risking a false cache hit."""
+    memo: dict = {}
+    fp = lineage_fingerprint(node, memo)
+    if memo.get("unstable"):
+        return None
+    return fp.hex()[:24]
+
+
 class _Chain:
     """A stage under construction: per-task (input, ops)."""
 
-    def __init__(self, task_inputs, deps, producer_counts=None):
+    def __init__(self, task_inputs, producer_counts=None):
         self.task_inputs = task_inputs  # list of input specs
         self.ops_per_task = [[] for _ in task_inputs]
-        self.deps = deps  # upstream StagePlans
         self.producer_counts = dict(producer_counts or {})
 
     def add_op(self, kind, fn):
@@ -96,87 +213,170 @@ class _Chain:
             ops.append((kind, fn))
 
 
-def _visit(node, stages: list, mult: int) -> _Chain:
-    """Returns the open chain for `node`; appends completed upstream stages
-    to `stages` in topological order. ``mult`` scales wide-op partition
-    counts — the paper's elasticity answer to the executor memory cap."""
-    if isinstance(node, R.Source):
-        size = node.ctx.store.size(node.key)
-        step = max(1, -(-size // node.nparts))
-        inputs = [SourceInput(node.key, i * step, min(size, (i + 1) * step), size)
-                  for i in range(node.nparts)]
-        return _Chain(inputs, [])
-    if isinstance(node, R.ParallelCollection):
-        return _Chain([CollectionInput(node.key, i) for i in range(node.nparts)], [])
-    if isinstance(node, R.Narrow):
-        chain = _visit(node.parent, stages, mult)
-        chain.add_op(node.kind, node.fn)
+class _Planner:
+    """One build_plan invocation: carries the stage list, the CSE memo of
+    closed shuffles, and the cache registry shared with the context."""
+
+    def __init__(self, mult: int, cse: bool, cache_index: dict | None):
+        self.stages: list[StagePlan] = []
+        self.mult = mult
+        self.cse = cse
+        self.cache_index = cache_index
+        self._fps: dict[int, bytes] = {}
+        # close-site key -> (sid, n_producer_tasks, ShuffleWrite)
+        self._shared: dict[tuple, tuple] = {}
+        self._materializing: set[str] = set()
+
+    def fp(self, node) -> bytes:
+        return lineage_fingerprint(node, self._fps)
+
+    # ------------------------------------------------------------- visit
+    def visit(self, node) -> _Chain:
+        """Returns the open chain for ``node``; completed upstream stages
+        land in ``self.stages`` in topological order."""
+        token = None
+        if getattr(node, "cached", False) and self.cache_index is not None:
+            token = cache_token(node)
+            entry = self.cache_index.get(token)
+            if entry and entry.get("ready"):
+                n = entry["nparts"]
+                return _Chain([CacheInput(token, n, i)
+                               for i in range(n)])
+        chain = self._visit(node)
+        if token is not None and token not in self._materializing:
+            # first read site of this cached lineage in this plan tees its
+            # partitions to the store; later sites share the CSE'd shuffle
+            # instead of writing the same bytes twice
+            self._materializing.add(token)
+            n = len(chain.task_inputs)
+            self.cache_index[token] = {"nparts": n, "ready": False}
+            for i, ops in enumerate(chain.ops_per_task):
+                ops.append(("cache", (token, n, i)))
         return chain
-    if isinstance(node, R.Union):
-        ca = _visit(node.a, stages, mult)
-        cb = _visit(node.b, stages, mult)
-        merged = _Chain(ca.task_inputs + cb.task_inputs, ca.deps + cb.deps,
-                        {**ca.producer_counts, **cb.producer_counts})
-        merged.ops_per_task = ca.ops_per_task + cb.ops_per_task
-        return merged
-    if isinstance(node, R.ShuffleAgg):
-        mode = "agg" if node.map_side_combine else "group"
-        nparts = node.nparts * mult
-        tr = node.transport or ""
-        sid = _close_stage(node.parent, stages, mult,
-                           ShuffleWrite(next(_next_shuffle), nparts, mode,
-                                        combine_fn=node.fn, transport=tr))
-        inputs = [ShuffleRead([(sid, mode)], p, combine_fn=node.fn,
-                              transports={sid: tr})
-                  for p in range(nparts)]
-        return _Chain(inputs, [stages[-1]],
-                      {sid: len(stages[-1].tasks)})
-    if isinstance(node, R.Repartition):
-        nparts = node.nparts * mult
-        tr = node.transport or ""
-        sid = _close_stage(node.parent, stages, mult,
-                           ShuffleWrite(next(_next_shuffle), nparts,
-                                        "repart", transport=tr))
-        inputs = [ShuffleRead([(sid, "repart")], p, transports={sid: tr})
-                  for p in range(nparts)]
-        return _Chain(inputs, [stages[-1]],
-                      {sid: len(stages[-1].tasks)})
-    if isinstance(node, R.Join):
-        nparts = node.nparts * mult
-        tr = node.transport or ""
-        sid_l = _close_stage(node.left, stages, mult,
-                             ShuffleWrite(next(_next_shuffle), nparts,
-                                          "join", key_side="left",
-                                          transport=tr))
-        n_left = len(stages[-1].tasks)
-        sid_r = _close_stage(node.right, stages, mult,
-                             ShuffleWrite(next(_next_shuffle), nparts,
-                                          "join", key_side="right",
-                                          transport=tr))
-        n_right = len(stages[-1].tasks)
-        inputs = [ShuffleRead([(sid_l, "join"), (sid_r, "join")], p,
-                              transports={sid_l: tr, sid_r: tr})
-                  for p in range(nparts)]
-        return _Chain(inputs, [], {sid_l: n_left, sid_r: n_right})
-    raise TypeError(f"unknown RDD node {type(node).__name__}")
 
+    def _visit(self, node) -> _Chain:
+        if isinstance(node, R.Source):
+            # byte-range splits re-cut freely, so the elasticity
+            # multiplier scales them too — a source-rooted task past the
+            # memory cap (e.g. a cache() materialization) must shrink on
+            # the re-plan like any wide partition would
+            nparts = node.nparts * self.mult
+            size = node.ctx.store.size(node.key)
+            step = max(1, -(-size // nparts))
+            inputs = [SourceInput(node.key, i * step,
+                                  min(size, (i + 1) * step), size)
+                      for i in range(nparts)]
+            return _Chain(inputs)
+        if isinstance(node, R.ParallelCollection):
+            return _Chain([CollectionInput(node.key, i)
+                           for i in range(node.nparts)])
+        if isinstance(node, R.Narrow):
+            chain = self.visit(node.parent)
+            chain.add_op(node.kind, node.fn)
+            return chain
+        if isinstance(node, R.Union):
+            ca = self.visit(node.a)
+            cb = self.visit(node.b)
+            merged = _Chain(ca.task_inputs + cb.task_inputs,
+                            {**ca.producer_counts, **cb.producer_counts})
+            merged.ops_per_task = ca.ops_per_task + cb.ops_per_task
+            return merged
+        if isinstance(node, R.ShuffleAgg):
+            mode = "agg" if node.map_side_combine else "group"
+            nparts = node.nparts * self.mult
+            tr = node.transport or ""
+            sid, n_prod, group = self._close_shared(
+                node.parent, mode, nparts, node.fn, tr)
+            inputs = [ShuffleRead([(sid, mode)], p, combine_fn=node.fn,
+                                  transports={sid: tr}, groups=[group])
+                      for p in range(nparts)]
+            return _Chain(inputs, {sid: n_prod})
+        if isinstance(node, R.Repartition):
+            nparts = node.nparts * self.mult
+            tr = node.transport or ""
+            sid, n_prod, group = self._close_shared(
+                node.parent, "repart", nparts, None, tr)
+            inputs = [ShuffleRead([(sid, "repart")], p,
+                                  transports={sid: tr}, groups=[group])
+                      for p in range(nparts)]
+            return _Chain(inputs, {sid: n_prod})
+        if isinstance(node, R.Join):
+            nparts = node.nparts * self.mult
+            tr = node.transport or ""
+            sid_l, n_left, g_l = self._close_shared(
+                node.left, "join", nparts, None, tr, key_side="left")
+            if (self.cse and self._close_key(node.right, "join", nparts,
+                                             None, tr)
+                    == self._close_key(node.left, "join", nparts, None,
+                                       tr)):
+                # SELF-JOIN: both sides are the same lineage — one shared
+                # shuffle, drained once, used as left AND right
+                inputs = [ShuffleRead([(sid_l, "join")], p,
+                                      transports={sid_l: tr},
+                                      groups=[g_l], self_join=True)
+                          for p in range(nparts)]
+                return _Chain(inputs, {sid_l: n_left})
+            sid_r, n_right, g_r = self._close_shared(
+                node.right, "join", nparts, None, tr, key_side="right")
+            inputs = [ShuffleRead([(sid_l, "join"), (sid_r, "join")], p,
+                                  transports={sid_l: tr, sid_r: tr},
+                                  groups=[g_l, g_r])
+                      for p in range(nparts)]
+            return _Chain(inputs, {sid_l: n_left, sid_r: n_right})
+        raise TypeError(f"unknown RDD node {type(node).__name__}")
 
-def _close_stage(node, stages: list, mult: int, write: ShuffleWrite) -> int:
-    chain = _visit(node, stages, mult)
-    sid = write.shuffle_id
-    stage_id = len(stages)
-    tasks = [TaskDef(stage_id, i, inp, ops, write)
-             for i, (inp, ops) in enumerate(
-                 zip(chain.task_inputs, chain.ops_per_task))]
-    stages.append(StagePlan(stage_id, tasks, write,
-                            producer_counts=chain.producer_counts))
-    return sid
+    # ------------------------------------------------------- shuffle CSE
+    def _close_key(self, node, mode: str, nparts: int, combine,
+                   transport: str) -> tuple:
+        """What makes two shuffles interchangeable: identical input
+        lineage, mode, partition count, combiner, and transport. A join's
+        ``key_side`` is deliberately EXCLUDED — a self-join's two sides
+        carry identical data."""
+        return (self.fp(node), mode, nparts, _fn_fingerprint(combine),
+                transport)
+
+    def _close_shared(self, node, mode: str, nparts: int, combine,
+                      transport: str, key_side: str = ""
+                      ) -> tuple[int, int, int]:
+        """Close (or reuse) the producer stage for one shuffle. Returns
+        (shuffle_id, producer task count, consumer-group index for this
+        read site)."""
+        key = self._close_key(node, mode, nparts, combine, transport) \
+            if self.cse else None
+        if key is not None:
+            hit = self._shared.get(key)
+            if hit is not None:
+                sid, n_prod, write = hit
+                write.consumer_groups += 1
+                return sid, n_prod, write.consumer_groups - 1
+        write = ShuffleWrite(next(_next_shuffle), nparts, mode,
+                             combine_fn=combine, key_side=key_side,
+                             transport=transport)
+        chain = self.visit(node)
+        sid = write.shuffle_id
+        stage_id = len(self.stages)
+        tasks = [TaskDef(stage_id, i, inp, ops, write)
+                 for i, (inp, ops) in enumerate(
+                     zip(chain.task_inputs, chain.ops_per_task))]
+        self.stages.append(StagePlan(stage_id, tasks, write,
+                                     producer_counts=chain.producer_counts))
+        n_prod = len(tasks)
+        if key is not None:
+            self._shared[key] = (sid, n_prod, write)
+        return sid, n_prod, 0
 
 
 def build_plan(node, action: str, save_prefix: str | None = None,
-               partition_multiplier: int = 1) -> list[StagePlan]:
-    stages: list[StagePlan] = []
-    chain = _visit(node, stages, partition_multiplier)
+               partition_multiplier: int = 1, *, cse: bool = True,
+               cache_index: dict | None = None) -> list[StagePlan]:
+    """Physical plan for one action. ``partition_multiplier`` scales wide-op
+    partition counts — the paper's elasticity answer to the executor memory
+    cap. ``cse=False`` restores the one-consumer-per-shuffle planner (kept
+    for the fan-out A/B benchmark); ``cache_index`` is the context-owned
+    registry of materialized ``RDD.cache()`` lineages."""
+    planner = _Planner(partition_multiplier, cse, cache_index)
+    chain = planner.visit(node)
+    stages = planner.stages
     stage_id = len(stages)
     tasks = [TaskDef(stage_id, i, inp, ops, None)
              for i, (inp, ops) in enumerate(

@@ -30,6 +30,7 @@ straggler behavior deterministic in tests.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 import pickle
 import threading
@@ -38,8 +39,10 @@ import zlib
 from typing import Any
 
 from repro.core import serde
-from repro.core.costs import LAMBDA_PAYLOAD_LIMIT, CostLedger
-from repro.core.dag import CollectionInput, ShuffleRead, SourceInput, TaskDef
+from repro.core.costs import (LAMBDA_PAYLOAD_LIMIT,
+                              S3_EXCHANGE_BATCH_LIMIT, CostLedger)
+from repro.core.dag import (CacheInput, CollectionInput, ShuffleRead,
+                            SourceInput, TaskDef)
 from repro.core.queues import ObjectStoreSim, SQSSim
 from repro.core.shuffle import (TransportSet, pack_batch, queue_name,
                                 unpack_batch)
@@ -75,6 +78,11 @@ class FlintConfig:
     # their producers; consumers terminate on per-producer EOS control
     # messages. False restores barrier scheduling (A/B comparison).
     pipeline_stages: bool = True
+    # plan-time common-subexpression elimination: shared lineages
+    # (self-joins, diamonds, unions of two derivations) plan ONE producer
+    # stage with per-read-site consumer groups. False restores the
+    # one-consumer-per-shuffle planner (A/B comparison).
+    plan_cse: bool = True
     lease_safety: float = 0.8  # stop ingesting at this fraction of the lease
     concurrency: int = 80
     cold_start_s: float = 0.4
@@ -101,7 +109,10 @@ class FlintConfig:
 
 def serialize_task(task: TaskDef, attempt: int, extra: dict | None = None
                    ) -> dict:
-    ops = [(kind, serde.dumps_fn(fn)) for kind, fn in task.ops]
+    # a ("cache", (token, nparts, index)) op carries plan data, not a
+    # user function — it ships as-is
+    ops = [(kind, fn if kind == "cache" else serde.dumps_fn(fn))
+           for kind, fn in task.ops]
     inp = task.input
     if isinstance(inp, ShuffleRead) and inp.combine_fn is not None:
         inp = dataclasses.replace(inp, combine_fn=serde.dumps_fn(inp.combine_fn))
@@ -319,12 +330,14 @@ def _drain_shuffle(read: ShuffleRead, env: LambdaSim, n_producers: dict, *,
     # through the second's folds (heartbeats extend the whole group)
     claim_group: list = []
     handles = []
-    for sid, mode in read.parts:
+    groups = read.groups or [0] * len(read.parts)
+    for (sid, mode), consumer_group in zip(read.parts, groups):
         transport = env.transports.get(_read_transport_name(read, sid,
                                                             env.cfg))
         handle = transport.open_drain(sid, read.partition,
                                       int(n_producers.get(str(sid), 0)),
-                                      group=claim_group)
+                                      group=claim_group,
+                                      consumer_group=consumer_group)
         agg: Any = {} if mode in ("agg", "group", "join") else []
         for _src, _seq, body in handle:
             records = unpack_batch(body, env.store)
@@ -349,9 +362,13 @@ def _shuffle_input_iter(read: ShuffleRead, env: LambdaSim,
                         n_producers: dict, *, sort_groups: bool = False):
     data, stats, ack = _drain_shuffle(read, env, n_producers,
                                       sort_groups=sort_groups)
-    if len(read.parts) == 2:  # join
-        (sid_l, _), (sid_r, _) = read.parts
-        left, right = data[read.parts[0]], data[read.parts[1]]
+    if read.self_join or len(read.parts) == 2:  # join
+        if read.self_join:
+            # CSE collapsed both sides onto one shared shuffle: the single
+            # drained aggregate IS both the left and the right input
+            left = right = data[read.parts[0]]
+        else:
+            left, right = data[read.parts[0]], data[read.parts[1]]
         def it():
             for k, lvals in left.items():
                 rvals = right.get(k)
@@ -373,7 +390,42 @@ def _flatmap_iter(it, fn):  # immediate fn binding (no late closure capture)
         yield from fn(x)
 
 
-def _apply_ops(it, ops):
+def _cache_partition_prefix(token: str, nparts: int, index: int) -> str:
+    return f"_cache/{token}/{nparts}/p{index}/"
+
+
+def _cache_tee(it, spec, store, cap=None):
+    """The ("cache", ...) plan op: materialize this partition at the
+    cached lineage point, persist it as content-addressed columnar batches
+    (billed PUTs), and pass the records on. Sorting the FULL partition
+    first makes the pack a pure function of the record multiset, so
+    retries and speculative twins overwrite the same keys with the same
+    bytes instead of accumulating divergent copies — which is why tasks
+    carrying a cache op never chain (per-link slices would pack with
+    attempt-dependent boundaries). The materialization is executor state
+    like any other: past the memory cap the answer is elasticity."""
+    token, nparts, index = spec
+    records = sorted(it, key=_stable_order)
+    if cap is not None and len(records) > cap:
+        raise MemoryCapExceeded(
+            f"cache materialization {len(records)} records > cap {cap}")
+    if store is not None:
+        prefix = _cache_partition_prefix(token, nparts, index)
+        bodies = pack_batch(records, limit=S3_EXCHANGE_BATCH_LIMIT)
+        for seq, body in enumerate(bodies):
+            digest = hashlib.sha1(body).hexdigest()[:12]
+            store.put(f"{prefix}{seq:06d}-{digest}", body)
+    return iter(records)
+
+
+def cache_partition_iter(inp: CacheInput, store):
+    """Read one materialized cache partition back (billed LIST + GETs)."""
+    for key in store.list(_cache_partition_prefix(inp.token, inp.nparts,
+                                                  inp.index)):
+        yield from unpack_batch(store.get(key), store)
+
+
+def _apply_ops(it, ops, store=None, cap=None):
     for kind, blob in ops:
         fn = serde.loads_fn(blob) if isinstance(blob, bytes) else blob
         if kind == "map":
@@ -384,6 +436,8 @@ def _apply_ops(it, ops):
             it = _flatmap_iter(it, fn)
         elif kind == "mappartitions":
             it = fn(it)
+        elif kind == "cache":
+            it = _cache_tee(it, fn, store, cap)
         else:
             raise ValueError(f"unknown op {kind}")
     return it
@@ -496,7 +550,12 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
     src_id = f"s{payload['stage']}t{payload['index']}"
     stats: dict[str, Any] = {"records_in": 0}
     inp = payload["input"]
-    chainable = isinstance(inp, SourceInput)
+    # a task carrying a cache op never chains: the tee must see the FULL
+    # partition in one link so its content-addressed pack is deterministic
+    # across attempts (per-link slices would cut at lease-dependent
+    # boundaries and leave divergent key sets behind)
+    chainable = (isinstance(inp, SourceInput)
+                 and not any(kind == "cache" for kind, _ in payload["ops"]))
 
     ack_shuffle = None
     if isinstance(inp, SourceInput):
@@ -505,6 +564,10 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
         base_iter = iter(reader)
     elif isinstance(inp, CollectionInput):
         base_iter = iter(env.store.get_obj(f"{inp.key}/{inp.index}"))
+        reader = None
+    elif isinstance(inp, CacheInput):
+        # a cached lineage hit: the upstream stages were never planned
+        base_iter = cache_partition_iter(inp, env.store)
         reader = None
     else:
         base_iter, drain_stats, ack_shuffle = _shuffle_input_iter(
@@ -531,7 +594,8 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
             # what it actually ingested, not just the last one
             stats["records_in"] = n
 
-    out_iter = _apply_ops(metered(), payload["ops"])
+    out_iter = _apply_ops(metered(), payload["ops"], env.store,
+                          env.cfg.agg_memory_records)
 
     write = payload["write"]
     if write is not None:

@@ -9,8 +9,10 @@ stages concurrently with their producers (EOS shuffle protocol — see
 docs/eos_shuffle.md) instead of barrier-scheduling them.
 
 Supported transformations: map, filter, flatMap, mapPartitions (narrow);
-reduceByKey, groupByKey, join, repartition (wide); union. Actions:
-collect, count, take, reduce, saveAsTextFile.
+reduceByKey, groupByKey, join, repartition (wide); union; cache (lineage
+materialization). Actions: collect, count, take, reduce, saveAsTextFile.
+Shared lineages (self-joins, diamonds, unions of two derivations) are
+planned once via shuffle CSE — see docs/dag_fanout.md.
 """
 
 from __future__ import annotations
@@ -22,6 +24,11 @@ _next_id = itertools.count()
 
 
 class RDD:
+    #: set by .cache() — the planner materializes this node's partitions
+    #: to content-addressed object-store keys on first evaluation and
+    #: reads them back on later actions (docs/dag_fanout.md)
+    cached = False
+
     def __init__(self, ctx, nparts: int):
         self.ctx = ctx
         self.id = next(_next_id)
@@ -62,6 +69,16 @@ class RDD:
 
     def union(self, other: "RDD") -> "RDD":
         return Union(self, other)
+
+    def cache(self) -> "RDD":
+        """Materialize this RDD's partitions (columnar batches under
+        ``_cache/``) the first time an action evaluates them; later
+        actions on the same lineage read the materialization instead of
+        replanning upstream stages. Storage is billed through the cost
+        ledger and reclaimed by ``ctx.clear_cache()`` (stale entries by
+        the job-scoped GC)."""
+        self.cached = True
+        return self
 
     # ------------------------------------------------------------- actions
     def collect(self) -> list:

@@ -24,10 +24,14 @@ termination path, barrier mode simply delays consumer launch.)
 Intermediate data moves over a pluggable ShuffleTransport
 (core.shuffle): per-partition SQS queues or a Lambada-style S3 object
 exchange, chosen per shuffle via the DAG-level ``transport`` hint with
-``cfg.shuffle_backend`` as the default. Queue/prefix lifecycle
-(open/release/destroy) and the job-end garbage collection of transient
-object-store keys (``_spill/``, ``_payload/``, ``_result/``,
-``_exchange/``) are driven from here.
+``cfg.shuffle_backend`` as the default. A CSE-shared shuffle (one
+producer stage, N consumer groups — docs/dag_fanout.md) is released per
+(shuffle, consumer-stage): each completed consumer frees only its own
+group's channels, and the shuffle is destroyed once EVERY consuming
+stage has drained. Queue/prefix lifecycle (open/release/destroy) and the
+job-end garbage collection of transient object-store keys (``_spill/``,
+``_payload/``, ``_result/``, ``_exchange/``, stale ``_cache/``) are
+driven from here.
 
 Both modes share task semantics: CONTINUATIONS re-invoked on warm
 containers (executor chaining — a chained producer only emits EOS from its
@@ -84,7 +88,8 @@ def _consumed_shuffles(stage: StagePlan) -> set[int]:
 class FlintScheduler:
     def __init__(self, cfg: FlintConfig, ledger: CostLedger | None = None,
                  store: ObjectStoreSim | None = None, *,
-                 fault_plan: dict | None = None, verbose: bool = False):
+                 fault_plan: dict | None = None, verbose: bool = False,
+                 cache_index: dict | None = None):
         if (cfg.shuffle_backend == "sqs"
                 and cfg.visibility_timeout_s >= cfg.drain_timeout_s):
             # otherwise a retried consumer times out waiting for its dead
@@ -112,6 +117,15 @@ class FlintScheduler:
         self._lock = threading.Lock()
         # shuffle_id -> (producer nparts, transport name); set per run()
         self._sid_meta: dict[int, tuple[int, str]] = {}
+        # shuffle_id -> {consuming stage indices} / {finished consumers}:
+        # a CSE-shared shuffle is only destroyed once EVERY consuming
+        # stage has drained its group (per-(shuffle, consumer-stage) GC)
+        self._sid_consumers: dict[int, set] = {}
+        self._sid_drained: dict[int, set] = {}
+        # context-owned RDD.cache() registry: tokens listed here survive
+        # the job-scoped GC (they feed later actions); anything else
+        # under _cache/ is stale and swept
+        self._cache_index = cache_index
         self.gc_report: dict[str, int] = {}
         self._gc_done = False
 
@@ -122,6 +136,11 @@ class FlintScheduler:
                 (s.write.nparts,
                  s.write.transport or self.cfg.shuffle_backend)
             for s in stages if s.write is not None}
+        self._sid_consumers = {}
+        for si, stage in enumerate(stages):
+            for sid in _consumed_shuffles(stage):
+                self._sid_consumers.setdefault(sid, set()).add(si)
+        self._sid_drained = {sid: set() for sid in self._sid_consumers}
         if (self.cfg.visibility_timeout_s >= self.cfg.drain_timeout_s
                 and any(t == "sqs" for _, t in self._sid_meta.values())):
             # the constructor guard only sees the engine default; a
@@ -142,38 +161,53 @@ class FlintScheduler:
     def _open_shuffle(self, write):
         """Create the shuffle's channels before any producer launches."""
         name = write.transport or self.cfg.shuffle_backend
-        self.transports.get(name).open(write.shuffle_id, write.nparts)
+        self.transports.get(name).open(write.shuffle_id, write.nparts,
+                                       groups=write.consumer_groups)
 
     def _destroy_shuffles(self, sids):
-        """Stage-end sweep — the transport skips partitions already
-        released per-task (each release is billed; re-issuing deletes for
-        channels the scheduler knows are gone would skew the benchmarks'
-        request counts)."""
+        """All-consumers-done sweep — the transport skips partitions
+        already released per-task (each release is billed; re-issuing
+        deletes for channels the scheduler knows are gone would skew the
+        benchmarks' request counts)."""
         for sid in sids:
             nparts, _ = self._sid_meta[sid]
             self._transport_of(sid).destroy(sid, nparts)
 
+    def _consumer_stage_done(self, si: int, stage: StagePlan):
+        """Per-(shuffle, consumer-stage) GC: record that stage ``si``
+        drained its groups; destroy only the shuffles whose EVERY
+        consuming stage has now finished — a CSE-shared shuffle must stay
+        alive for its remaining consumer groups."""
+        dead = []
+        for sid in _consumed_shuffles(stage):
+            drained = self._sid_drained[sid]
+            drained.add(si)
+            if drained >= self._sid_consumers[sid]:
+                dead.append(sid)
+        self._destroy_shuffles(dead)
+
     def _release_task_partitions(self, task: TaskDef):
-        """A completed consumer's shuffle partitions are dead: release them
-        now so a losing speculative duplicate (or a late retry of a task
-        that already won) aborts immediately (QueueGone / exchange
-        tombstone) instead of blocking a pool thread until the drain
-        timeout."""
+        """A completed consumer's shuffle partitions are dead FOR ITS
+        GROUP: release them now so a losing speculative duplicate (or a
+        late retry of a task that already won) aborts immediately
+        (QueueGone / exchange tombstone) instead of blocking a pool thread
+        until the drain timeout. Sibling consumer groups keep draining."""
         if isinstance(task.input, ShuffleRead):
-            for sid, _ in task.input.parts:
+            groups = task.input.groups or [0] * len(task.input.parts)
+            for (sid, _), g in zip(task.input.parts, groups):
                 self._transport_of(sid).release_partition(
-                    sid, task.input.partition)
+                    sid, task.input.partition, consumer_group=g)
 
     # ----------------------------------------------------- barrier mode
     def _run_barrier(self, stages: list[StagePlan]):
         result = None
         try:
-            for stage in stages:
+            for si, stage in enumerate(stages):
                 if stage.write is not None:
                     self._open_shuffle(stage.write)
                 result = self._run_stage(stage)
-                # channels consumed by this stage are dead — sweep them
-                self._destroy_shuffles(_consumed_shuffles(stage))
+                # channels whose last consumer just finished are dead
+                self._consumer_stage_done(si, stage)
         except BaseException:
             # same teardown as the pipelined path: a consumer blocked on a
             # queue that will never fill must not linger in the thread
@@ -426,7 +460,7 @@ class FlintScheduler:
             }
             if self.verbose:
                 print(f"[flint] stage {stage.id}: {stats_rows[si]}")
-            self._destroy_shuffles(_consumed_shuffles(stage))
+            self._consumer_stage_done(si, stage)
             if stage.action is not None or stage.write is None:
                 final_result[0] = self._stage_result(stage, partials[si])
 
@@ -548,6 +582,18 @@ class FlintScheduler:
             n = self.store.delete_prefix(prefix)
             if n:
                 report[prefix] = n
+        # RDD.cache() materializations outlive the job on purpose (they
+        # feed later actions) — but only while their token is registered;
+        # stale content (cleared caches, elastic re-plans that changed the
+        # partition count) is swept here like any other transient key
+        live = {f"_cache/{t}/{e['nparts']}/"
+                for t, e in (self._cache_index or {}).items()}
+        stale = [k for k in self.store.list("_cache/")
+                 if not any(k.startswith(p) for p in live)]
+        for k in stale:
+            self.store.delete(k)
+        if stale:
+            report["_cache/"] = len(stale)
         self.gc_report = report
         return report
 

@@ -42,12 +42,24 @@ def _pack(value: Any, memo: dict):
     return value
 
 
+def _referenced_names(code: types.CodeType) -> set:
+    """Global names referenced by ``code`` INCLUDING its nested code
+    objects — a comprehension or generator expression compiles to its own
+    code object, and a global called from inside one (``sum(f(x) for x in
+    v)``) appears only in the nested co_names."""
+    names = set(code.co_names)
+    for const in code.co_consts:
+        if isinstance(const, types.CodeType):
+            names |= _referenced_names(const)
+    return names
+
+
 def _pack_function(fn: types.FunctionType, memo: dict) -> dict:
     uid = len(memo)
     memo[id(fn)] = uid
     code = fn.__code__
     globs = {}
-    for name in code.co_names:
+    for name in sorted(_referenced_names(code)):
         if name in fn.__globals__:
             g = fn.__globals__[name]
             if isinstance(g, (types.FunctionType, types.ModuleType)):

@@ -6,8 +6,11 @@ operator over S3 objects scales better for analytical volumes, and Flock
 that the transport should be a per-shuffle decision. Everything above this
 interface (executors, scheduler, DAG planner) speaks only the contract:
 
-  * ``open(sid, nparts)``        — scheduler-side channel setup, before any
-                                   producer launches;
+  * ``open(sid, nparts, groups)``— scheduler-side channel setup, before any
+                                   producer launches; ``groups`` is the
+                                   plan-time CONSUMER-GROUP count (CSE fans
+                                   one producer stage out to N read sites,
+                                   each draining the full stream);
   * ``send(...)`` / ``emit_eos`` — producer-side: ship packed record-batch
                                    bodies, then close the stream with the
                                    per-partition sequence totals (EOS quorum
@@ -140,22 +143,31 @@ class ShuffleTransport:
 
     # ---------------------------------------------------- consumer side
     def open_drain(self, shuffle_id: int, partition: int, quorum: int,
-                   group: list | None = None) -> DrainHandle:
+                   group: list | None = None,
+                   consumer_group: int = 0) -> DrainHandle:
         """``group`` is the task-scoped claim group: a join task drains two
         shuffles and transports with leases (SQS visibility) must keep the
-        first drain's claims alive while the second drains."""
+        first drain's claims alive while the second drains.
+        ``consumer_group`` selects which fan-out copy of the stream this
+        drain consumes — sibling groups are fully independent (their own
+        dedup, their own claims/recovery, their own release)."""
         raise NotImplementedError
 
     # ------------------------------------------------- lifecycle + cost
-    def open(self, shuffle_id: int, nparts: int):
-        """Create channels before any producer of this shuffle launches."""
+    def open(self, shuffle_id: int, nparts: int, groups: int = 1):
+        """Create channels before any producer of this shuffle launches.
+        ``groups`` consumer groups will each drain the full stream."""
 
-    def release_partition(self, shuffle_id: int, partition: int):
-        """A consumer completed this partition: free its channel and make
-        any competing drain abort fast (idempotent)."""
+    def release_partition(self, shuffle_id: int, partition: int,
+                          consumer_group: int = 0):
+        """A consumer completed this partition for its group: free that
+        group's channel and make any competing drain OF THE SAME GROUP
+        abort fast (idempotent). Sibling groups must stay drainable —
+        the shuffle's data is only reclaimed once every group released."""
 
     def destroy(self, shuffle_id: int, nparts: int):
-        """Stage-end sweep of whatever ``release_partition`` didn't cover."""
+        """All-consumer-stages-done sweep (every group) of whatever
+        ``release_partition`` didn't cover."""
 
     def gc(self) -> dict[str, int]:
         """Job-end cleanup; returns {resource: count} actually removed."""

@@ -12,28 +12,34 @@ total sequence count there), written by the final link of a chained task —
 the consumer's EOS quorum comes from ``StagePlan.producer_counts`` exactly
 as on the queue transport.
 
-Consumers DISCOVER work by polling LIST on their partition prefix (S3 has
-no arrival notification — the recurring cost of an object-store shuffle,
-billed per LIST), GET fresh batches as they appear, and terminate on the
-manifest quorum. Reads are non-destructive, so ``ack`` is a no-op and a
+Consumers DISCOVER work by polling LIST (S3 has no arrival notification —
+the recurring cost of an object-store shuffle, billed per LIST), GET fresh
+batches as they appear, and terminate on the manifest quorum. Discovery is
+BATCHED at the shuffle level: all of a shuffle's drains share one
+``_SidIndex`` that LISTs ``_exchange/{sid}/`` once and buckets the result
+per partition, so a 16-partition fan-in costs ~one LIST per poll interval
+instead of sixteen. Reads are non-destructive, so ``ack`` is a no-op and a
 consumer that dies mid-drain recovers by simply re-listing — no visibility
 leases, no claim races.
 
+MULTI-CONSUMER fan-out (docs/dag_fanout.md) is where an object exchange
+shines: the batch objects are written ONCE and every consumer group reads
+them non-destructively — no per-group copies, unlike the queue transport.
+Only the release protocol is per group: ``release_partition`` drops a
+``.released-g{g}`` tombstone (aborting that group's losing twins on their
+next poll, the moral equivalent of QueueGone) and the partition's data
+objects are deleted only once EVERY group has tombstoned it.
+
 Unlike SQS's 256 KiB messages, one exchange object may be tens of MiB
 (costs.S3_EXCHANGE_BATCH_LIMIT); objects past the multipart threshold bill
-as Create + UploadParts + Complete.
-
-Fast abort for losing speculative twins: when a consumer completes,
-``release_partition`` drops a ``.released`` tombstone and deletes the
-partition's objects — a competing drain hits the tombstone on its next
-LIST (or a KeyError on an already-deleted GET) and aborts, the moral
-equivalent of QueueGone. ``gc`` removes the whole ``_exchange/`` tree at
-job end, tombstones included.
+as Create + UploadParts + Complete. ``gc`` removes the whole
+``_exchange/`` tree at job end, tombstones included.
 """
 
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
 from collections import deque
 
@@ -42,11 +48,30 @@ from repro.core.shuffle.base import (AbortedError, DrainHandle, DrainState,
                                      ShuffleTransport)
 
 EXCHANGE_PREFIX = "_exchange/"
-_TOMBSTONE = ".released"
+_TOMBSTONE = ".released-g"
+
+
+def _shuffle_prefix(shuffle_id: int) -> str:
+    return f"{EXCHANGE_PREFIX}{shuffle_id}/"
 
 
 def _partition_prefix(shuffle_id: int, partition: int) -> str:
-    return f"{EXCHANGE_PREFIX}{shuffle_id}/p{partition}/"
+    return f"{_shuffle_prefix(shuffle_id)}p{partition}/"
+
+
+class _SidIndex:
+    """Shared discovery state for one shuffle: a single LIST of
+    ``_exchange/{sid}/`` feeds every partition's drain (and every consumer
+    group — the keys are the same objects). The interval between LISTs
+    backs off while nothing new appears and snaps back on fresh keys, so
+    idle polling stays cheap without adding arrival latency."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.known: set[str] = set()
+        self.by_partition: dict[int, list[str]] = {}
+        self.last_list = float("-inf")
+        self.interval = 0.0
 
 
 class S3ExchangeTransport(ShuffleTransport):
@@ -55,7 +80,10 @@ class S3ExchangeTransport(ShuffleTransport):
 
     def __init__(self, cfg, ledger, store, sqs):
         super().__init__(cfg, ledger, store, sqs)
-        self._released: set = set()
+        self._released: set = set()  # (sid, partition, group) tombstoned
+        self._groups: dict[int, int] = {}  # sid -> consumer-group count
+        self._index: dict[int, _SidIndex] = {}
+        self._index_lock = threading.Lock()
 
     # ---------------------------------------------------- producer side
     def send(self, shuffle_id, partition, src, first_seq, bodies):
@@ -72,35 +100,83 @@ class S3ExchangeTransport(ShuffleTransport):
                 totals.get(p, 0))
 
     # ---------------------------------------------------- consumer side
-    def open_drain(self, shuffle_id, partition, quorum, group=None):
-        return _S3Drain(self, _partition_prefix(shuffle_id, partition),
-                        quorum)
+    def open_drain(self, shuffle_id, partition, quorum, group=None,
+                   consumer_group=0):
+        return _S3Drain(self, shuffle_id, partition, quorum, consumer_group)
+
+    def _sid_index(self, shuffle_id: int) -> _SidIndex:
+        with self._index_lock:
+            idx = self._index.get(shuffle_id)
+            if idx is None:
+                idx = self._index[shuffle_id] = _SidIndex()
+            return idx
+
+    def discover(self, shuffle_id: int):
+        """One shared, rate-limited LIST of the whole shuffle prefix;
+        fresh keys are bucketed per partition for every drain to consume.
+        This is the batched-discovery path: N partitions' (and G groups')
+        drains cost ONE LIST per poll interval, not N."""
+        idx = self._sid_index(shuffle_id)
+        with idx.lock:
+            now = time.monotonic()
+            if now - idx.last_list < idx.interval:
+                return
+            idx.last_list = now
+            prefix = _shuffle_prefix(shuffle_id)
+            fresh = [k for k in self.store.list(prefix)
+                     if k not in idx.known]
+            if fresh:
+                # snap back to the FLOOR, not zero: during active
+                # production nearly every LIST finds something fresh, and
+                # a zero interval would let every drain re-LIST on its own
+                # poll — exactly the per-partition request storm batching
+                # is meant to end
+                idx.interval = 0.002
+                for key in fresh:
+                    idx.known.add(key)
+                    tail = key[len(prefix):]  # "p{n}/..."
+                    p = int(tail[1:tail.index("/")])
+                    idx.by_partition.setdefault(p, []).append(key)
+            else:
+                idx.interval = min(max(idx.interval * 2, 0.002), 0.05)
+
+    def partition_keys(self, shuffle_id: int, partition: int) -> list[str]:
+        idx = self._sid_index(shuffle_id)
+        with idx.lock:
+            return list(idx.by_partition.get(partition, ()))
 
     # ------------------------------------------------- lifecycle + cost
-    def open(self, shuffle_id, nparts):
-        pass  # prefixes are implicit — nothing to create, nothing billed
+    def open(self, shuffle_id, nparts, groups=1):
+        self._groups[shuffle_id] = groups
+        self._sid_index(shuffle_id)  # prefixes are implicit; index is not
 
-    def release_partition(self, shuffle_id, partition):
-        prefix = _partition_prefix(shuffle_id, partition)
-        if prefix in self._released:
+    def release_partition(self, shuffle_id, partition, consumer_group=0):
+        key = (shuffle_id, partition, consumer_group)
+        if key in self._released:
             return
-        self._released.add(prefix)
-        tomb = prefix + _TOMBSTONE
-        self.store.put(tomb, b"")  # abort marker FIRST, then free the data
-        for key in self.store.list(prefix):
-            if key != tomb:
-                self.store.delete(key)
+        self._released.add(key)
+        prefix = _partition_prefix(shuffle_id, partition)
+        # abort marker for THIS group's competing drains first
+        self.store.put(f"{prefix}{_TOMBSTONE}{consumer_group}", b"")
+        groups = self._groups.get(shuffle_id, 1)
+        if all((shuffle_id, partition, g) in self._released
+               for g in range(groups)):
+            # every consumer group drained this partition: the data is
+            # dead (tombstones stay until gc so late losers still abort)
+            for obj in self.store.list(prefix):
+                if _TOMBSTONE not in obj:
+                    self.store.delete(obj)
 
     def destroy(self, shuffle_id, nparts):
-        # tombstones stay until gc: a loser twin that starts its LIST after
-        # the stage ended must still abort fast instead of waiting out the
-        # drain timeout
         for p in range(nparts):
-            self.release_partition(shuffle_id, p)
+            for g in range(self._groups.get(shuffle_id, 1)):
+                self.release_partition(shuffle_id, p, g)
 
     def gc(self):
         n = self.store.delete_prefix(EXCHANGE_PREFIX)
         self._released.clear()
+        with self._index_lock:
+            self._index.clear()
         return {EXCHANGE_PREFIX: n} if n else {}
 
     def service_cost(self):
@@ -108,16 +184,22 @@ class S3ExchangeTransport(ShuffleTransport):
 
 
 class _S3Drain(DrainHandle):
-    """Polling-LIST discovery with exponential backoff (an early pipelined
-    consumer must not spin while its producers compute), GET per fresh
-    batch, manifest-quorum termination."""
+    """Shared-LIST discovery with per-drain exponential backoff (an early
+    pipelined consumer must not spin while its producers compute), GET per
+    fresh batch, manifest-quorum termination. The drain keeps a cursor
+    into its partition's shared key bucket, so work discovered by ANY
+    drain of this shuffle is visible to all of them."""
 
-    def __init__(self, tr: S3ExchangeTransport, prefix: str, quorum: int):
+    def __init__(self, tr: S3ExchangeTransport, shuffle_id: int,
+                 partition: int, quorum: int, consumer_group: int):
         self.tr = tr
-        self.prefix = prefix
+        self.sid = shuffle_id
+        self.partition = partition
+        self.consumer_group = consumer_group
+        self.prefix = _partition_prefix(shuffle_id, partition)
         self.state = DrainState(quorum)
         self._pending: deque = deque()  # (src, seq, key) discovered, un-GET
-        self._listed: set = set()
+        self._cursor = 0  # position in the shared partition bucket
         self._timeout = tr.cfg.drain_timeout_s
         self._deadline = time.monotonic() + self._timeout
         self._backoff = 0.002
@@ -140,16 +222,18 @@ class _S3Drain(DrainHandle):
     def _poll(self):
         if self.tr.sqs.closed:
             raise AbortedError(f"s3 exchange {self.prefix}: aborted")
+        self.tr.discover(self.sid)
+        bucket = self.tr.partition_keys(self.sid, self.partition)
         progressed = False
-        for key in self.tr.store.list(self.prefix):
-            if key in self._listed:
-                continue
+        for key in bucket[self._cursor:]:
             tail = key[len(self.prefix):]
-            if tail == _TOMBSTONE:
-                raise AbortedError(
-                    f"s3 exchange {self.prefix} released — a competing "
-                    f"attempt already completed this partition")
-            self._listed.add(key)
+            if tail.startswith(_TOMBSTONE):
+                if int(tail[len(_TOMBSTONE):]) == self.consumer_group:
+                    raise AbortedError(
+                        f"s3 exchange {self.prefix} released for group "
+                        f"{self.consumer_group} — a competing attempt "
+                        f"already completed this partition")
+                continue  # a sibling group's release is not ours
             if tail.startswith("eos-"):
                 try:
                     total = self.tr.store.get_obj(key)
@@ -163,6 +247,7 @@ class _S3Drain(DrainHandle):
                 if self.state.register_data(src, int(seq)):
                     self._pending.append((src, int(seq), key))
                     progressed = True
+        self._cursor = len(bucket)
         now = time.monotonic()
         if progressed:
             self._deadline = now + self._timeout

@@ -3,6 +3,15 @@ contract, semantics preserved exactly: per-partition queues, batched sends
 under the 256 KiB / 10-message caps, visibility-timeout receives with
 ack-after-fold (docs/eos_shuffle.md), per-producer EOS control messages,
 and QueueGone-based fast abort for losing speculative twins.
+
+MULTI-CONSUMER fan-out (docs/dag_fanout.md): queues are destructive, so a
+CSE-shared shuffle with N consumer groups materializes N per-partition
+queue SETS (``shuffle{sid}-g{g}-p{p}``) and every producer send/EOS fans
+out to all of them at emit time. Each group then keeps the full
+single-consumer story independently: its own (src, seq) dedup, its own
+visibility-claim recovery, its own byte-identical re-emission absorption,
+and its own QueueGone release — one group's completion or death never
+touches a sibling's stream.
 """
 
 from __future__ import annotations
@@ -16,8 +25,8 @@ from repro.core.shuffle.base import (AbortedError, DrainHandle, DrainState,
                                      ShuffleTransport)
 
 
-def queue_name(shuffle_id: int, partition: int) -> str:
-    return f"shuffle{shuffle_id}-p{partition}"
+def queue_name(shuffle_id: int, partition: int, group: int = 0) -> str:
+    return f"shuffle{shuffle_id}-g{group}-p{partition}"
 
 
 class SQSTransport(ShuffleTransport):
@@ -28,49 +37,72 @@ class SQSTransport(ShuffleTransport):
         super().__init__(cfg, ledger, store, sqs)
         self._live: set = set()      # queues created and not yet deleted
         self._released: set = set()  # deleted (each delete bills — once)
+        self._groups: dict[int, int] = {}  # sid -> consumer-group count
 
     # ---------------------------------------------------- producer side
     def send(self, shuffle_id, partition, src, first_seq, bodies):
-        name = queue_name(shuffle_id, partition)
-        batch: list[Message] = []
+        names = [queue_name(shuffle_id, partition, g)
+                 for g in range(self._groups.get(shuffle_id, 1))]
+        batch: list[tuple] = []
+
+        def flush(batch):
+            # fan out to every consumer group's queue set; each send is a
+            # real (billed) request — queues cannot be read twice. Every
+            # queue gets its OWN Message objects: the sim enqueues caller
+            # objects directly and Message.receipt is a mutable
+            # per-receive slot, so sharing one object across queues would
+            # let concurrent sibling-group receives clobber each other's
+            # receipt handles
+            for name in names:
+                self.sqs.send_batch(name, [Message(body, seq, src)
+                                           for body, seq in batch])
+
         for i, body in enumerate(bodies):
-            batch.append(Message(body, first_seq + i, src))
+            batch.append((body, first_seq + i))
             if len(batch) == SQS_BATCH_MESSAGES:
-                self.sqs.send_batch(name, batch)
+                flush(batch)
                 batch = []
         if batch:
-            self.sqs.send_batch(name, batch)
+            flush(batch)
 
     def emit_eos(self, shuffle_id, nparts, src, totals):
-        for p in range(nparts):
-            self.sqs.send_batch(queue_name(shuffle_id, p),
-                                [eos_message(src, totals.get(p, 0))])
+        for g in range(self._groups.get(shuffle_id, 1)):
+            for p in range(nparts):
+                self.sqs.send_batch(queue_name(shuffle_id, p, g),
+                                    [eos_message(src, totals.get(p, 0))])
 
     # ---------------------------------------------------- consumer side
-    def open_drain(self, shuffle_id, partition, quorum, group=None):
-        return _SQSDrain(self, queue_name(shuffle_id, partition), quorum,
-                         group)
+    def open_drain(self, shuffle_id, partition, quorum, group=None,
+                   consumer_group=0):
+        return _SQSDrain(self,
+                         queue_name(shuffle_id, partition, consumer_group),
+                         quorum, group)
 
     # ------------------------------------------------- lifecycle + cost
-    def open(self, shuffle_id, nparts):
-        for p in range(nparts):
-            name = queue_name(shuffle_id, p)
-            self._live.add(name)
-            self.sqs.create_queue(name)
+    def open(self, shuffle_id, nparts, groups=1):
+        self._groups[shuffle_id] = groups
+        for g in range(groups):
+            for p in range(nparts):
+                name = queue_name(shuffle_id, p, g)
+                self._live.add(name)
+                self.sqs.create_queue(name)
 
-    def release_partition(self, shuffle_id, partition):
-        """Delete the queue so a losing speculative duplicate (or a late
-        retry of a task that already won) aborts on QueueGone immediately
-        instead of blocking a pool thread until the drain timeout."""
-        name = queue_name(shuffle_id, partition)
+    def release_partition(self, shuffle_id, partition, consumer_group=0):
+        """Delete this GROUP's queue so a losing speculative duplicate (or
+        a late retry of a task that already won) aborts on QueueGone
+        immediately instead of blocking a pool thread until the drain
+        timeout. Sibling groups' queues stay — their consumers may still
+        be draining."""
+        name = queue_name(shuffle_id, partition, consumer_group)
         if name not in self._released:
             self._released.add(name)
             self._live.discard(name)
             self.sqs.delete_queue(name)
 
     def destroy(self, shuffle_id, nparts):
-        for p in range(nparts):
-            self.release_partition(shuffle_id, p)
+        for g in range(self._groups.get(shuffle_id, 1)):
+            for p in range(nparts):
+                self.release_partition(shuffle_id, p, g)
 
     def gc(self):
         """Queues normally die with their consuming stage; after an abort

@@ -1,0 +1,672 @@
+"""Multi-consumer shuffle DAGs (docs/dag_fanout.md).
+
+1. PROPERTY-BASED RANDOM-DAG EQUIVALENCE: hypothesis-generated DAGs mixing
+   narrow ops with reduceByKey / groupByKey / join / union / repartition
+   over SHARED sub-lineages (diamonds, self-joins, unions of two
+   derivations), executed across the full matrix — pipelined/barrier x
+   SQS/S3 x columnar on/off — and checked against a plain-Python reference
+   evaluator. Every case also asserts the PLAN-LEVEL invariant: shared
+   lineage plans exactly one producer stage (the stage count equals the
+   count of distinct shuffle close-sites + the action stage), and that the
+   run leaks nothing.
+
+2. Deterministic plan-shape tests for CSE (self-join collapse, diamond,
+   union of derivations, transport hints blocking a merge, cse=False).
+
+3. FAULT INJECTION on fan-out: one consumer group's drain dies mid-shuffle
+   and recovers via redelivery (SQS) / re-listing (S3) while the sibling
+   group completes untouched; a straggling group member's speculative twin
+   loses and aborts via its OWN group's release; zero-leak gc_report after
+   every case.
+
+4. RDD.cache(): second-action reuse, billing through the ledger, stale
+   sweep by the job GC, clear_cache, and the cluster backend.
+"""
+
+import operator
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import FlintConfig, FlintContext, build_plan
+from repro.core.dag import CacheInput, ShuffleRead
+
+ADD = operator.add
+
+TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/")
+
+
+def assert_no_leaks(ctx):
+    for prefix in TRANSIENT_PREFIXES:
+        assert not ctx.store.list(prefix), f"leaked {prefix} keys"
+    assert ctx.last_scheduler.sqs._queues == {}, "queues leaked"
+
+
+# ---------------------------------------------------------------- the DAG
+# A Spec is a tiny lineage description that can be built BOTH into an RDD
+# graph (sharing spec objects => sharing RDD nodes) and evaluated by the
+# plain-Python reference below. ``vtype`` tracks the value column's type so
+# the generator only applies reduceByKey where + is commutative (ints).
+
+
+class Spec:
+    __slots__ = ("op", "kids", "fn", "nparts", "idx", "vtype")
+
+    def __init__(self, op, kids=(), fn=None, nparts=None, idx=None,
+                 vtype="int"):
+        self.op = op
+        self.kids = list(kids)
+        self.fn = fn
+        self.nparts = nparts
+        self.idx = idx
+        self.vtype = vtype
+
+
+def _weight(v):
+    """Deterministic, order-independent int view of any value shape."""
+    if isinstance(v, (list, tuple)):
+        return sum(_weight(x) for x in v) + len(v)
+    return v
+
+
+def m_norm(kv):
+    return (kv[0], _weight(kv[1]) % 97)
+
+
+def m_shift(kv):
+    return ((kv[0] + 1) % 5, kv[1])
+
+
+def f_even_key(kv):
+    return kv[0] % 2 == 0
+
+
+def fm_echo(kv):
+    return [kv, ((kv[0] + 2) % 5, kv[1])]
+
+
+def _normed(spec):
+    if spec.vtype == "int":
+        return spec
+    return Spec("map", [spec], fn=m_norm, vtype="int")
+
+
+def gen_case(seed: int):
+    """Random datasets + a random DAG over them, with deliberate sharing:
+    operands are drawn from the whole pool, so earlier nodes (including
+    wide ones) frequently feed several consumers."""
+    rng = random.Random(seed)
+    datasets = [[(rng.randrange(5), rng.randrange(1, 9))
+                 for _ in range(rng.randint(5, 12))]
+                for _ in range(rng.randint(1, 2))]
+    pool = [Spec("data", idx=i, nparts=rng.randint(1, 3))
+            for i in range(len(datasets))]
+    for _ in range(rng.randint(2, 5)):
+        op = rng.choice(["map", "filter", "flatmap", "rbk", "rbk", "gbk",
+                         "join", "union", "repart"])
+        a = rng.choice(pool)
+        if op == "map":
+            fn = rng.choice([m_norm, m_shift])
+            spec = Spec("map", [a], fn=fn,
+                        vtype="int" if fn is m_norm else a.vtype)
+        elif op == "filter":
+            spec = Spec("filter", [a], fn=f_even_key, vtype=a.vtype)
+        elif op == "flatmap":
+            spec = Spec("flatmap", [a], fn=fm_echo, vtype=a.vtype)
+        elif op == "rbk":
+            spec = Spec("rbk", [_normed(a)], fn=ADD,
+                        nparts=rng.randint(1, 3), vtype="int")
+        elif op == "gbk":
+            spec = Spec("gbk", [a], nparts=rng.randint(1, 3), vtype="list")
+        elif op == "repart":
+            spec = Spec("repart", [a], nparts=rng.randint(1, 3),
+                        vtype=a.vtype)
+        elif op == "join":
+            b = rng.choice(pool)  # b may BE a: a genuine self-join
+            spec = Spec("join", [a, b], nparts=rng.randint(1, 3),
+                        vtype="pair")
+        else:  # union
+            b = rng.choice(pool)
+            if a.vtype != b.vtype:
+                a, b = _normed(a), _normed(b)
+            spec = Spec("union", [a, b], vtype=a.vtype)
+        pool.append(spec)
+    return datasets, pool[-1]
+
+
+# ------------------------------------------------- engine + reference eval
+
+
+def build_rdd(spec, ctx, datasets, memo):
+    got = memo.get(id(spec))
+    if got is not None:
+        return got
+    k = [build_rdd(s, ctx, datasets, memo) for s in spec.kids]
+    if spec.op == "data":
+        r = ctx.parallelize(datasets[spec.idx], spec.nparts)
+    elif spec.op == "map":
+        r = k[0].map(spec.fn)
+    elif spec.op == "filter":
+        r = k[0].filter(spec.fn)
+    elif spec.op == "flatmap":
+        r = k[0].flatMap(spec.fn)
+    elif spec.op == "rbk":
+        r = k[0].reduceByKey(spec.fn, spec.nparts)
+    elif spec.op == "gbk":
+        r = k[0].groupByKey(spec.nparts)
+    elif spec.op == "repart":
+        r = k[0].repartition(spec.nparts)
+    elif spec.op == "join":
+        r = k[0].join(k[1], spec.nparts)
+    else:
+        r = k[0].union(k[1])
+    memo[id(spec)] = r
+    return r
+
+
+def ref_eval(spec, datasets, memo):
+    """Plain-Python reference semantics; shared specs evaluate once."""
+    got = memo.get(id(spec))
+    if got is not None:
+        return got
+    k = [ref_eval(s, datasets, memo) for s in spec.kids]
+    if spec.op == "data":
+        out = list(datasets[spec.idx])
+    elif spec.op == "map":
+        out = [spec.fn(r) for r in k[0]]
+    elif spec.op == "filter":
+        out = [r for r in k[0] if spec.fn(r)]
+    elif spec.op == "flatmap":
+        out = [x for r in k[0] for x in spec.fn(r)]
+    elif spec.op == "rbk":
+        agg = {}
+        for key, v in k[0]:
+            agg[key] = spec.fn(agg[key], v) if key in agg else v
+        out = list(agg.items())
+    elif spec.op == "gbk":
+        agg = {}
+        for key, v in k[0]:
+            agg.setdefault(key, []).append(v)
+        out = list(agg.items())
+    elif spec.op == "repart":
+        out = list(k[0])
+    elif spec.op == "join":
+        left, right = {}, {}
+        for key, v in k[0]:
+            left.setdefault(key, []).append(v)
+        for key, v in k[1]:
+            right.setdefault(key, []).append(v)
+        out = [(key, (lv, rv)) for key in left if key in right
+               for lv in left[key] for rv in right[key]]
+    else:  # union
+        out = list(k[0]) + list(k[1])
+    memo[id(spec)] = out
+    return out
+
+
+def _norm_value(x):
+    """Group value-lists are unordered — canonicalize recursively."""
+    if isinstance(x, list):
+        return sorted((_norm_value(v) for v in x), key=repr)
+    if isinstance(x, tuple):
+        return tuple(_norm_value(v) for v in x)
+    return x
+
+
+def canon(results):
+    return sorted(repr(_norm_value(r)) for r in results)
+
+
+# --------------------------------------------- the plan-level expectation
+
+
+def spec_fp(spec, memo):
+    """Mirror of the planner's lineage fingerprint at spec level: data
+    nodes by identity (each becomes its own parallelize key), derived
+    nodes structurally."""
+    got = memo.get(id(spec))
+    if got is not None:
+        return got
+    if spec.op == "data":
+        fp = ("data", id(spec))
+    else:
+        fp = (spec.op, id(spec.fn) if spec.fn else None, spec.nparts,
+              tuple(spec_fp(s, memo) for s in spec.kids))
+    memo[id(spec)] = fp
+    return fp
+
+
+def expected_stage_count(root) -> int:
+    """Number of stages a CSE plan must produce: one per DISTINCT shuffle
+    close-site (shared lineages close once; a self-join's two identical
+    sides close once) plus the action stage."""
+    sites = set()
+    fpm: dict = {}
+    seen: set = set()
+
+    def walk(s):
+        if id(s) in seen:
+            return
+        seen.add(id(s))
+        for kid in s.kids:
+            walk(kid)
+        if s.op in ("rbk", "gbk", "repart"):
+            mode = {"rbk": "agg", "gbk": "group", "repart": "repart"}[s.op]
+            sites.add((spec_fp(s.kids[0], fpm), mode, s.nparts,
+                       id(s.fn) if s.fn else None))
+        elif s.op == "join":
+            for side in s.kids:
+                sites.add((spec_fp(side, fpm), "join", s.nparts, None))
+
+    walk(root)
+    return len(sites) + 1
+
+
+# ------------------------------------------------------------- the matrix
+
+MATRIX = [(pipelined, backend, columnar)
+          for pipelined in (True, False)
+          for backend in ("sqs", "s3")
+          for columnar in (True, False)]
+
+
+def run_engine_case(seed, pipelined, backend, columnar):
+    datasets, root = gen_case(seed)
+    expect = canon(ref_eval(root, datasets, {}))
+    ctx = FlintContext("flint",
+                       FlintConfig(concurrency=6, shuffle_backend=backend,
+                                   pipeline_stages=pipelined,
+                                   columnar_batches=columnar))
+    rdd = build_rdd(root, ctx, datasets, {})
+    plan = build_plan(rdd, "collect")
+    assert len(plan) == expected_stage_count(root), \
+        "shared lineage did not plan exactly one producer stage"
+    got = canon(rdd.collect())
+    assert got == expect, f"seed {seed}: engine != reference"
+    assert_no_leaks(ctx)
+
+
+def _make_cell_test(pipelined, backend, columnar):
+    """>= 100 generated DAGs per matrix cell, identical to the reference
+    evaluator, one producer stage per shared lineage, zero leaks. (One
+    generated test per cell: the hypothesis shim's wrapper hides the
+    signature pytest.mark.parametrize would need.)"""
+    @given(seed=st.integers(min_value=0, max_value=10**9))
+    @settings(max_examples=100, deadline=None)
+    def test(seed):
+        run_engine_case(seed, pipelined, backend, columnar)
+    test.__name__ = (f"test_random_dag_equivalence_"
+                     f"{'pipelined' if pipelined else 'barrier'}_{backend}_"
+                     f"{'columnar' if columnar else 'pickle'}")
+    test.__qualname__ = test.__name__
+    return test
+
+
+for _cell in MATRIX:
+    _cell_test = _make_cell_test(*_cell)
+    globals()[_cell_test.__name__] = _cell_test
+del _cell, _cell_test
+
+
+# ------------------------------------------------- deterministic plan shape
+
+
+def _ctx(backend="sqs", **kw):
+    return FlintContext("flint", FlintConfig(concurrency=8,
+                                             shuffle_backend=backend, **kw))
+
+
+def test_self_join_plans_one_producer_and_one_drain():
+    ctx = _ctx()
+    agg = (ctx.parallelize([(i % 3, i) for i in range(12)], 2)
+           .reduceByKey(ADD, 3))
+    plan = build_plan(agg.join(agg, 3), "collect")
+    # without CSE: 2 collection stages + 2 agg-read stages + final = 5
+    assert len(plan) == 3
+    read = plan[-1].tasks[0].input
+    assert isinstance(read, ShuffleRead) and read.self_join
+    assert len(read.parts) == 1
+    # the shared join shuffle has ONE consumer group (one drain per task)
+    assert plan[1].write.consumer_groups == 1
+
+
+def test_self_join_executes_and_matches_plain_join():
+    ctx = _ctx()
+    agg = (ctx.parallelize([(i % 3, i) for i in range(12)], 2)
+           .reduceByKey(ADD, 3))
+    assert sorted(agg.join(agg, 3).collect()) == \
+        [(0, (18, 18)), (1, (22, 22)), (2, (26, 26))]
+    assert_no_leaks(ctx)
+
+
+def test_diamond_plans_single_producer_with_two_groups():
+    ctx = _ctx()
+    agg = (ctx.parallelize([(i % 4, 1) for i in range(20)], 2)
+           .reduceByKey(ADD, 2))
+    c1 = agg.map(lambda kv: (kv[0] % 2, kv[1])).reduceByKey(ADD, 2)
+    c2 = agg.map(lambda kv: (0, kv[1])).reduceByKey(ADD, 2)
+    plan = build_plan(c1.union(c2), "collect")
+    # producer + two consumer stages + final (without CSE: two producers)
+    assert len(plan) == 4
+    assert plan[0].write.consumer_groups == 2
+    groups = sorted(t.input.groups[0] for s in plan[1:3] for t in s.tasks
+                    if isinstance(t.input, ShuffleRead)
+                    and t.input.parts[0][0] == plan[0].write.shuffle_id)
+    assert set(groups) == {0, 1}
+
+
+def test_union_of_two_derivations_shares_one_producer():
+    ctx = _ctx()
+    agg = (ctx.parallelize([(i % 3, 1) for i in range(9)], 2)
+           .reduceByKey(ADD, 2))
+    u = (agg.map(lambda kv: (kv[0], kv[1] * 10))
+         .union(agg.map(lambda kv: (kv[0], kv[1] * 100))))
+    plan = build_plan(u, "collect")
+    assert len(plan) == 2  # one shared producer + the merged final stage
+    assert plan[0].write.consumer_groups == 2
+    # the two derivations' tasks drain DIFFERENT groups of the same sid
+    per_group: dict = {}
+    for t in plan[1].tasks:
+        per_group.setdefault(t.input.groups[0], set()).add(t.input.partition)
+    assert set(per_group) == {0, 1}
+    out = sorted(u.collect())
+    assert out == [(0, 30), (0, 300), (1, 30), (1, 300), (2, 30), (2, 300)]
+    assert_no_leaks(ctx)
+
+
+def test_different_transport_hints_do_not_merge():
+    ctx = _ctx()
+    base = ctx.parallelize([(i % 3, 1) for i in range(9)], 2)
+    a = base.reduceByKey(ADD, 2, transport="sqs")
+    b = base.reduceByKey(ADD, 2, transport="s3")
+    plan = build_plan(a.union(b), "collect")
+    writes = [s.write for s in plan if s.write is not None]
+    assert len(writes) == 2  # different backends => different shuffles
+    assert {w.transport for w in writes} == {"sqs", "s3"}
+
+
+def test_cse_off_restores_per_consumer_producers():
+    ctx = _ctx(plan_cse=False)
+    agg = (ctx.parallelize([(i % 3, i) for i in range(12)], 2)
+           .reduceByKey(ADD, 3))
+    plan = build_plan(agg.join(agg, 3), "collect", cse=False)
+    assert len(plan) == 5
+    assert all(s.write.consumer_groups == 1
+               for s in plan if s.write is not None)
+    assert sorted(agg.join(agg, 3).collect()) == \
+        [(0, (18, 18)), (1, (22, 22)), (2, (26, 26))]
+    assert_no_leaks(ctx)
+
+
+def test_structurally_identical_lineages_merge_without_object_sharing():
+    """CSE is content-addressed: two separately-CONSTRUCTED but identical
+    derivations (same function objects, same partition counts) share one
+    producer stage, even though no RDD object is reused."""
+    ctx = _ctx()
+    base = ctx.parallelize([(i % 3, 1) for i in range(9)], 2)
+    a = base.map(m_norm).reduceByKey(ADD, 2)
+    b = base.map(m_norm).reduceByKey(ADD, 2)  # a fresh, identical lineage
+    plan = build_plan(a.join(b, 2), "collect")
+    # base+map+rbk closes once; the join's two sides fingerprint equal ->
+    # self-join collapse: producer, agg stage, final
+    assert len(plan) == 3
+    res = sorted(a.join(b, 2).collect())
+    assert res == [(0, (3, 3)), (1, (3, 3)), (2, (3, 3))]
+    assert_no_leaks(ctx)
+
+
+# --------------------------------------------------------- fault injection
+
+
+DIAMOND_DATA = [(i % 8, 1) for i in range(24)]
+
+
+def diamond(ctx):
+    agg = ctx.parallelize(DIAMOND_DATA, 3).reduceByKey(ADD, 4)
+    c1 = agg.map(lambda kv: (kv[0] % 2, kv[1])).reduceByKey(ADD, 2)
+    c2 = agg.map(lambda kv: (0, kv[1] * 10)).reduceByKey(ADD, 2)
+    return c1.union(c2)
+
+
+DIAMOND_EXPECT = [(0, 12), (0, 240), (1, 12)]
+
+
+def _shuffle_partition_of(key, nparts):
+    """Mirror of the engine's stable partitioner, to aim faults at a task
+    that is guaranteed to fold records before dying."""
+    import pickle
+    import zlib
+    return zlib.crc32(pickle.dumps(key, protocol=pickle.HIGHEST_PROTOCOL)) \
+        % nparts
+
+
+#: an agg partition holding >= 2 of the 8 diamond keys (stage-1 task index)
+FAT_AGG_PARTITION = next(
+    p for p in range(4)
+    if sum(_shuffle_partition_of(k, 4) == p for k in range(8)) >= 2)
+
+
+@pytest.mark.parametrize("backend", ["sqs", "s3"])
+@pytest.mark.parametrize("pipelined", [True, False])
+def test_one_groups_consumer_dies_sibling_group_unaffected(backend,
+                                                           pipelined):
+    """A consumer task of group 0 dies mid-drain (after folding records);
+    its retry recovers via redelivery (SQS) / re-listing (S3). The sibling
+    group's stage — draining the SAME shared shuffle — completes
+    untouched, and results match the fault-free run."""
+    cfg = dict(concurrency=8, shuffle_backend=backend,
+               pipeline_stages=pipelined, visibility_timeout_s=0.5,
+               drain_timeout_s=8.0)
+    clean_ctx = FlintContext("flint", FlintConfig(**cfg))
+    clean = sorted(diamond(clean_ctx).collect())
+    assert clean == DIAMOND_EXPECT
+    # stage 1 is the first consumer stage of the shared agg shuffle
+    faulty = FlintContext(
+        "flint", FlintConfig(**cfg),
+        fault_plan={(1, FAT_AGG_PARTITION): {"fail_after_records": 1}},
+        elastic_retries=0)
+    assert sorted(diamond(faulty).collect()) == clean
+    stats = {s["stage"]: s for s in faulty.last_scheduler.stage_stats}
+    assert stats[1]["attempts"] > stats[1]["tasks"]  # the retry happened
+    assert stats[2]["attempts"] == stats[2]["tasks"]  # sibling untouched
+    assert_no_leaks(faulty)
+    assert faulty.last_scheduler.gc_report is not None
+
+
+@pytest.mark.parametrize("backend", ["sqs", "s3"])
+def test_straggling_group_member_speculation_loser_aborts_per_group(
+        backend):
+    """A straggler in ONE consumer group draws a speculative twin; the
+    loser aborts via its own group's release (QueueGone / group tombstone)
+    while the sibling group and the winner are unaffected."""
+    ctx = FlintContext(
+        "flint",
+        FlintConfig(concurrency=12, shuffle_backend=backend,
+                    visibility_timeout_s=0.5, drain_timeout_s=8.0,
+                    speculation_factor=2.0, speculation_min_done=2),
+        fault_plan={(1, 1): {"straggle_s": 0.6}}, elastic_retries=0)
+    assert sorted(diamond(ctx).collect()) == DIAMOND_EXPECT
+    stats = {s["stage"]: s for s in ctx.last_scheduler.stage_stats}
+    assert stats[1]["speculated"] >= 1
+    assert_no_leaks(ctx)
+
+
+@pytest.mark.parametrize("backend", ["sqs", "s3"])
+def test_fanout_under_duplicate_delivery(backend):
+    """5% duplicated deliveries: per-group dedup keeps every group's fold
+    exact."""
+    ctx = FlintContext("flint",
+                       FlintConfig(concurrency=8, shuffle_backend=backend,
+                                   duplicate_prob=0.05,
+                                   visibility_timeout_s=0.5,
+                                   drain_timeout_s=8.0))
+    assert sorted(diamond(ctx).collect()) == DIAMOND_EXPECT
+    assert_no_leaks(ctx)
+
+
+# ------------------------------------------------------------- RDD.cache()
+
+
+def test_cache_reuses_materialization_on_second_action():
+    ctx = _ctx()
+    agg = (ctx.parallelize([(i % 5, 1) for i in range(50)], 4)
+           .reduceByKey(ADD, 2).cache())
+    r1 = sorted(agg.collect())
+    first_invokes = ctx.ledger.lambda_requests
+    assert ctx.store.list("_cache/")  # materialized (billed PUTs)
+    r2 = sorted(agg.collect())
+    second_invokes = ctx.ledger.lambda_requests - first_invokes
+    assert r1 == r2 == [(k, 10) for k in range(5)]
+    # cache hit plans ONLY the action stage: 2 tasks vs 4 + 2
+    assert second_invokes < first_invokes
+    plan = build_plan(agg, "collect", cache_index=ctx._cache_index)
+    assert len(plan) == 1
+    assert_no_leaks(ctx)
+
+
+def test_cached_rdd_extends_into_downstream_lineage():
+    ctx = _ctx()
+    agg = (ctx.parallelize([(i % 5, 1) for i in range(50)], 4)
+           .reduceByKey(ADD, 2).cache())
+    assert sorted(agg.collect()) == [(k, 10) for k in range(5)]
+    out = sorted(agg.map(lambda kv: (kv[0] % 2, kv[1]))
+                 .reduceByKey(ADD, 2).collect())
+    assert out == [(0, 30), (1, 20)]
+    assert_no_leaks(ctx)
+
+
+def test_cache_survives_job_gc_until_cleared():
+    ctx = _ctx()
+    agg = (ctx.parallelize([(i, 1) for i in range(10)], 2)
+           .reduceByKey(ADD, 2).cache())
+    agg.collect()
+    # the job GC ran at action end (scheduler shutdown) and kept the cache
+    assert ctx.store.list("_cache/")
+    n = ctx.clear_cache()
+    assert n > 0 and not ctx.store.list("_cache/")
+    # after clearing, the lineage simply recomputes
+    assert sorted(agg.collect()) == [(i, 1) for i in range(10)]
+
+
+def test_stale_cache_keys_are_swept_by_job_gc():
+    ctx = _ctx()
+    ctx.store.put("_cache/deadbeef/2/p0/000000-feedface", b"stale")
+    (ctx.parallelize([(1, 1)], 1).reduceByKey(ADD, 1).collect())
+    assert not ctx.store.list("_cache/deadbeef/")
+    assert ctx.last_scheduler.gc_report.get("_cache/") == 1
+
+
+@pytest.mark.parametrize("backend", ["sqs", "s3"])
+def test_cache_and_cse_compose(backend):
+    """A cached diamond: first action materializes the shared producer
+    once (CSE), second action replans from the cache."""
+    ctx = _ctx(backend)
+    agg = (ctx.parallelize(DIAMOND_DATA, 3).reduceByKey(ADD, 4).cache())
+    c1 = agg.map(lambda kv: (kv[0] % 2, kv[1])).reduceByKey(ADD, 2)
+    first = sorted(c1.collect())
+    second_plan = build_plan(c1, "collect", cache_index=ctx._cache_index)
+    # cache hit: agg's producer stage is gone; only c1's shuffle remains
+    assert len(second_plan) == 2
+    assert sorted(c1.collect()) == first == [(0, 12), (1, 12)]
+    assert_no_leaks(ctx)
+
+
+def test_cache_op_disables_chaining_for_deterministic_keys():
+    """A task carrying a cache op must not chain: per-link slices would
+    pack with lease-dependent boundaries, leaving divergent key sets for
+    retries/twins to collide with. The op wins over the chaining hook."""
+    ctx = _ctx(max_records_per_invoke=10, flush_records=5)
+    ctx.upload("nums.txt", "\n".join(str(i % 7) for i in range(60)).encode())
+    src = (ctx.textFile("nums.txt", 2)
+           .map(lambda s: (int(s), 1)).cache())
+    out = sorted(src.reduceByKey(ADD, 2).collect())
+    assert out == [(k, 60 // 7 + (1 if k < 60 % 7 else 0)) for k in range(7)]
+    assert ctx.last_scheduler.stage_stats[0]["chained"] == 0
+    # and the second action plans from the materialization, not the source
+    plan = build_plan(src.reduceByKey(ADD, 2), "collect",
+                      cache_index=ctx._cache_index)
+    assert isinstance(plan[0].tasks[0].input, CacheInput)
+    assert sorted(src.reduceByKey(ADD, 2).collect()) == out
+
+
+def test_cache_materialization_respects_memory_cap():
+    """The cache tee is executor state like any other materialization:
+    past agg_memory_records it raises MemoryCapExceeded and the context
+    answers with elasticity (more partitions, smaller tees)."""
+    data = [(i, 1) for i in range(32)]
+    ctx = FlintContext("flint",
+                       FlintConfig(concurrency=8, agg_memory_records=20),
+                       elastic_retries=2)
+    cached = (ctx.parallelize(data, 2).reduceByKey(ADD, 4)
+              .flatMap(lambda kv: [kv] * 4).cache())
+    out = sorted(cached.collect())
+    assert out == sorted([(i, 1) for i in range(32)] * 4)
+    assert ctx.partition_multiplier > 1  # elasticity actually fired
+    assert_no_leaks(ctx)
+
+
+def test_source_rooted_cache_shrinks_via_source_resplit():
+    """Elasticity reaches source-rooted materializations too: byte-range
+    splits re-cut under the partition multiplier, so a cache() directly
+    on a textFile lineage recovers from the memory cap instead of
+    re-running an identical doomed plan."""
+    ctx = FlintContext("flint",
+                       FlintConfig(concurrency=8, agg_memory_records=60),
+                       elastic_retries=2)
+    ctx.upload("lines.txt",
+               "\n".join(str(i % 9) for i in range(100)).encode())
+    cached = (ctx.textFile("lines.txt", 1)
+              .map(lambda s: (int(s), 1)).cache())
+    out = sorted(cached.reduceByKey(ADD, 2).collect())
+    assert out == [(k, 100 // 9 + (1 if k < 100 % 9 else 0))
+                   for k in range(9)]
+    assert ctx.partition_multiplier > 1  # the re-split actually happened
+    assert_no_leaks(ctx)
+
+
+def test_failed_materializing_action_unpins_cache_keys():
+    """A terminal StageFailure mid-materialization unregisters the
+    pending token, so the job GC sweeps the partial _cache/ batches
+    instead of treating them as live forever."""
+    from repro.core import StageFailure
+    ctx = FlintContext("flint", FlintConfig(concurrency=8),
+                       fault_plan={(0, 0): {"fail_attempts": 10}},
+                       elastic_retries=0)
+    cached = (ctx.parallelize([(i % 3, 1) for i in range(12)], 2)
+              .map(lambda kv: kv).cache())
+    with pytest.raises(StageFailure):
+        cached.reduceByKey(ADD, 2).collect()
+    assert ctx._cache_index == {}
+    assert not ctx.store.list("_cache/"), "partial cache batches leaked"
+
+
+def test_unserializable_fn_lineage_recomputes_instead_of_caching():
+    """A lineage whose fingerprint rests on object identity (an
+    unserializable callable) must not be content-addressed: id reuse
+    across actions could serve the wrong materialization. Such a cache()
+    is a no-op — the lineage recomputes."""
+    import threading
+    lock = threading.Lock()  # unpicklable closure freight
+
+    def fn(kv, _l=lock):
+        return (kv[0], kv[1] * 2)
+
+    ctx = FlintContext("cluster", FlintConfig())  # cluster ships fns raw
+    cached = ctx.parallelize([(1, 2), (2, 3)], 1).map(fn).cache()
+    assert sorted(cached.collect()) == [(1, 4), (2, 6)]
+    assert ctx._cache_index == {} and not ctx.store.list("_cache/")
+    assert sorted(cached.collect()) == [(1, 4), (2, 6)]
+
+
+def test_cache_on_cluster_backend():
+    ctx = FlintContext("cluster", FlintConfig())
+    agg = (ctx.parallelize([(i % 3, 1) for i in range(12)], 2)
+           .reduceByKey(ADD, 2).cache())
+    r1 = sorted(agg.collect())
+    r2 = sorted(agg.collect())
+    assert r1 == r2 == [(0, 4), (1, 4), (2, 4)]
+    assert ctx.store.list("_cache/")
+    ctx.clear_cache()
+    assert not ctx.store.list("_cache/")

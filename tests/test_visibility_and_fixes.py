@@ -255,10 +255,11 @@ def test_drain_stall_times_out_despite_own_redeliveries():
     store = ObjectStoreSim(ledger)
     sqs = SQSSim(ledger, visibility_timeout=cfg.visibility_timeout_s)
     env = LambdaSim(cfg, ledger, store, sqs)
-    sqs.create_queue("shuffle8-p0")
-    from repro.core.shuffle import pack_batch
+    from repro.core.shuffle import pack_batch, queue_name
+    q8 = queue_name(8, 0)
+    sqs.create_queue(q8)
     for body in pack_batch([(1, 1), (2, 2)]):
-        sqs.send_batch("shuffle8-p0", [Message(body, 0, "s0t0")])
+        sqs.send_batch(q8, [Message(body, 0, "s0t0")])
     # no EOS: the producer is permanently stuck
 
     err = []
@@ -289,11 +290,12 @@ def test_consumer_retry_when_attempt_holds_messages_in_flight():
     store = ObjectStoreSim(ledger)
     sqs = SQSSim(ledger, visibility_timeout=cfg.visibility_timeout_s)
     env = LambdaSim(cfg, ledger, store, sqs)
-    sqs.create_queue("shuffle7-p0")
-    from repro.core.shuffle import pack_batch
+    from repro.core.shuffle import pack_batch, queue_name
+    q7 = queue_name(7, 0)
+    sqs.create_queue(q7)
     for body in pack_batch([(i, i) for i in range(50)]):
-        sqs.send_batch("shuffle7-p0", [Message(body, 0, "s0t0")])
-    sqs.send_batch("shuffle7-p0", [Message(b"", 1, "s0t0", kind="eos")])
+        sqs.send_batch(q7, [Message(body, 0, "s0t0")])
+    sqs.send_batch(q7, [Message(b"", 1, "s0t0", kind="eos")])
 
     read = ShuffleRead([(7, "group")], 0)
     out1, _, _ack1 = _drain_shuffle(read, env, {"7": 1})
@@ -301,7 +303,7 @@ def test_consumer_retry_when_attempt_holds_messages_in_flight():
     out2, _, ack2 = _drain_shuffle(read, env, {"7": 1})
     assert out1[(7, "group")] == out2[(7, "group")]
     ack2()
-    assert sqs.inflight_len("shuffle7-p0") == 0
+    assert sqs.inflight_len(q7) == 0
 
 
 # --------------------------------------------------- serde regressions
@@ -343,6 +345,22 @@ def test_serde_self_referential_closure():
 
     g = serde.loads_fn(serde.dumps_fn(make()))
     assert g(5) == 5
+
+
+def _module_weight(v):
+    # module-level on purpose: the recursive reference is a GLOBAL, and it
+    # appears only inside the generator expression's nested code object
+    if isinstance(v, (list, tuple)):
+        return sum(_module_weight(x) for x in v) + len(v)
+    return v
+
+
+def test_serde_captures_globals_referenced_inside_comprehensions():
+    """A global called only from a comprehension/genexpr lives in the
+    NESTED code object's co_names; packing must walk nested code or the
+    shipped function dies with NameError."""
+    g = serde.loads_fn(serde.dumps_fn(_module_weight))
+    assert g([1, [2, 3]]) == 1 + (2 + 3 + 2) + 2
 
 
 def test_serde_recursive_fn_runs_on_executor():
