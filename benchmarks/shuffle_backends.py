@@ -29,7 +29,14 @@
    stage runs exactly once) with identical results — plus an RDD.cache()
    A/B where the second action replans from the materialization.
 
-``--quick`` runs a reduced-size pass of (1), (2) and (5) with hard
+6. SQL OPTIMIZER A/B (docs/dataframe.md): two taxi analytics queries on
+   the structured DataFrame surface (filter+project+groupBy, and
+   join+agg), run optimized vs ``optimize=False`` on both transports.
+   Hard gates: identical results across every (backend, optimized) cell,
+   the optimized plan shuffles STRICTLY fewer bytes than the naive
+   lowering on both queries, and zero leaked keys/queues.
+
+``--quick`` runs a reduced-size pass of (1), (2), (5) and (6) with hard
 assertions — the CI smoke gate for transport regressions.
 """
 
@@ -41,6 +48,7 @@ import time
 
 from repro.core import FlintConfig, FlintContext
 from repro.data.synthetic import taxi_csv
+from repro.sql import Schema, col, count_, lit, sum_
 
 SQS_OP_LATENCY = 0.010
 S3_PUT_LATENCY = 0.030
@@ -103,6 +111,49 @@ def diamond_query(ctx, cache=False):
 WORKLOADS = {"groupby": groupby_query, "join": join_query}
 
 FANOUT_WORKLOADS = {"selfjoin": selfjoin_query, "diamond": diamond_query}
+
+# ------------------------------------------------ SQL (DataFrame) surface
+
+TAXI_SCHEMA = Schema([
+    ("pickup", "str"), ("dropoff", "str"), ("dropoff_lon", "float"),
+    ("dropoff_lat", "float"), ("trip_miles", "float"),
+    ("payment_type", "str"), ("tip", "float"), ("total", "float"),
+    ("precip", "float"), ("color", "str"),
+])
+
+
+def sql_filter_groupby_query(ctx, optimize=True):
+    """Per-hour credit-card tip totals: filter + computed columns +
+    groupBy/agg. Optimized: predicate pushdown, projection pruning into
+    the scan (3 of 10 columns parsed), map-side combine."""
+    df = ctx.read_csv("taxi.csv", TAXI_SCHEMA, 8)
+    q = (df.where(col("payment_type") == lit("credit"))
+           .withColumn("hour", col("pickup").substr(12, 2))
+           .withColumn("tip_cents", (col("tip") * lit(100.0)).cast("int"))
+           .groupBy("hour")
+           .agg(sum_(col("tip_cents")).alias("tips"),
+                count_().alias("n")))
+    return q.collect(optimize=optimize)
+
+
+def sql_join_agg_query(ctx, optimize=True):
+    """Per-hour trip counts joined with per-hour credit tips: two
+    aggregations + a join (three shuffles). Integer cents keep float
+    sums arrival-order-independent."""
+    df = ctx.read_csv("taxi.csv", TAXI_SCHEMA, 8)
+    hour = col("pickup").substr(12, 2)
+    trips = (df.withColumn("hour", hour)
+               .groupBy("hour").agg(count_().alias("trips")))
+    tips = (df.where(col("payment_type") == lit("credit"))
+              .withColumn("hour", hour)
+              .withColumn("tip_cents",
+                          (col("tip") * lit(100.0)).cast("int"))
+              .groupBy("hour").agg(sum_(col("tip_cents")).alias("tips")))
+    return trips.join(tips, on="hour").collect(optimize=optimize)
+
+
+SQL_WORKLOADS = {"sql_filter_groupby": sql_filter_groupby_query,
+                 "sql_join_agg": sql_join_agg_query}
 
 
 def assert_no_leaks(ctx):
@@ -347,6 +398,51 @@ def run_cache_ab(rows=None):
     ]
 
 
+def run_sql_ab(rows=None):
+    """DataFrame queries, optimized vs naive lowering, on both serverless
+    transports. Hard gates: identical results across every cell, a STRICT
+    shuffled-bytes reduction from the optimizer on both queries and both
+    backends, and zero leaks. Returns (rows, all-cells-agree)."""
+    data = taxi_csv(rows or N_ROWS, seed=13)
+    out = []
+    agreement = True
+    for workload, query in SQL_WORKLOADS.items():
+        answers = []
+        shuffled_by_cell = {}
+        for backend in ("sqs", "s3"):
+            for optimized in (False, True):
+                ctx = FlintContext(
+                    "flint",
+                    FlintConfig(concurrency=16, flush_records=2000,
+                                shuffle_backend=backend))
+                ctx.upload("taxi.csv", data)
+                uploaded = ctx.ledger.bytes_to_s3
+                t0 = time.monotonic()
+                ans = query(ctx, optimize=optimized)
+                wall = time.monotonic() - t0
+                rep = ctx.cost_report()
+                shuffled = (rep["bytes_to_sqs"] if backend == "sqs"
+                            else rep["bytes_to_s3"] - uploaded)
+                shuffled_by_cell[(backend, optimized)] = shuffled
+                assert_no_leaks(ctx)
+                out.append({
+                    "workload": workload, "backend": backend,
+                    "optimized": optimized, "wall_s": round(wall, 4),
+                    "shuffled_bytes": shuffled,
+                    "lambda_requests": rep["lambda_requests"],
+                    "total_usd": round(rep["total_usd"], 6),
+                })
+                answers.append(sorted(ans))
+        agreement = agreement and all(a == answers[0] for a in answers)
+        for backend in ("sqs", "s3"):
+            opt = shuffled_by_cell[(backend, True)]
+            raw = shuffled_by_cell[(backend, False)]
+            assert opt < raw, \
+                f"{workload}/{backend}: optimizer did not shrink " \
+                f"shuffled bytes ({opt} vs {raw})"
+    return out, agreement
+
+
 def _print_transport_rows(rows, agreement):
     print("workload,backend,wall_s,modeled_service_s,total_usd,"
           "shuffle_requests,shuffled_bytes")
@@ -391,6 +487,15 @@ def main(argv=None):
     for r in cache_rows:
         print(f"{r['action']},{r['wall_s']},{r['lambda_requests']}")
 
+    sql_rows, sql_agreement = run_sql_ab(rows)
+    print("workload,backend,optimized,wall_s,shuffled_bytes,"
+          "lambda_requests,total_usd")
+    for r in sql_rows:
+        print(f"{r['workload']},{r['backend']},{r['optimized']},"
+              f"{r['wall_s']},{r['shuffled_bytes']},"
+              f"{r['lambda_requests']},{r['total_usd']}")
+    print(f"# sql optimized/naive cells agree: {sql_agreement}")
+
     # hard gates — make transport regressions fail loudly (CI --quick)
     assert agreement, "transports disagree on query results"
     assert col_identical, "columnar framing changed query results"
@@ -398,6 +503,8 @@ def main(argv=None):
         f"columnar batches did not shrink shuffled bytes (ratio {ratio})"
     assert fan_agreement, \
         "fan-out results differ across transports / CSE on-off"
+    assert sql_agreement, \
+        "sql results differ across transports / optimize on-off"
     if quick:
         print("# quick smoke passed")
         return ab, agreement

@@ -1,6 +1,7 @@
 """Flint core — serverless analytics engine (the paper's contribution).
 
-Public API mirrors the PySpark surface the paper targets:
+Public API mirrors the PySpark surface the paper targets, on BOTH the RDD
+and the structured DataFrame surfaces:
 
     from repro.core import FlintContext
     ctx = FlintContext()                      # serverless backend
@@ -12,6 +13,21 @@ Public API mirrors the PySpark surface the paper targets:
               .reduceByKey(lambda a, b: a + b, 30)
               .collect())
     print(ctx.cost_report())                  # pure pay-as-you-go USD
+
+    from repro.sql import Schema, col, lit, sum_, count_
+    df = ctx.read_csv("taxi.csv", Schema([("pickup", "str"), ...]), 32)
+    rows = (df.where(col("payment_type") == lit("credit"))
+              .withColumn("hour", col("pickup").substr(12, 2))
+              .groupBy("hour")
+              .agg(sum_(col("tip")).alias("tips"), count_().alias("n"))
+              .collect())
+    print(df.explain())                       # optimized logical plan
+
+The DataFrame surface (docs/dataframe.md) carries schemas through a
+logical plan, optimizes it (projection pruning, predicate/limit pushdown,
+map-side-combine selection, cost-model transport choice), and lowers onto
+the same RDD lineage — scheduler, EOS shuffle, transports, CSE and
+cache() all apply unchanged.
 
 Backends: "flint" (Lambda+SQS simulation, pay-per-use), "cluster"
 (provisioned Spark, per-second billing), "pyspark" (cluster + the
@@ -60,6 +76,13 @@ class FlintContext:
     def textFile(self, key: str, numPartitions: int = 8) -> RDD:
         return Source(self, key, numPartitions)
 
+    def read_csv(self, key: str, schema, numPartitions: int = 8):
+        """Structured entry point: a DataFrame over a CSV object in the
+        store, with a declared schema (repro.sql.Schema or a list of
+        (name, dtype) pairs) — see docs/dataframe.md."""
+        from repro.sql import DataFrame  # lazy: sql imports core
+        return DataFrame.from_csv(self, key, schema, numPartitions)
+
     def parallelize(self, data: list, numPartitions: int = 8) -> RDD:
         key = f"_collections/{self._collection_counter}"
         self._collection_counter += 1
@@ -87,13 +110,16 @@ class FlintContext:
         raise ValueError(f"unknown backend {self.backend_name!r}")
 
     def run_action(self, rdd: RDD, action: str,
-                   save_prefix: str | None = None) -> Any:
+                   save_prefix: str | None = None,
+                   limit: int | None = None) -> Any:
         mult = self.partition_multiplier
         for attempt in range(self.elastic_retries + 1):
             plan = build_plan(rdd, action, save_prefix,
                               partition_multiplier=mult,
                               cse=self.config.plan_cse,
-                              cache_index=self._cache_index)
+                              cache_index=self._cache_index,
+                              default_transport=self.config.shuffle_backend,
+                              limit=limit)
             sched = self._make_scheduler()
             self.last_scheduler = sched
             try:

@@ -134,6 +134,8 @@ class ClusterScheduler:
             out: list = []
             for i in range(len(stage.tasks)):
                 out.extend(partials.get(i, []))
+                if stage.limit is not None and len(out) >= stage.limit:
+                    return out[:stage.limit]  # take(n) merge short-circuit
             return sum(out) if stage.action == "sum" else out
         if stage.action == "save":
             return [f"{stage.save_prefix}/part-{i:05d}"

@@ -47,6 +47,43 @@ S3_EXCHANGE_BATCH_LIMIT = 64 * 2**20
 M4_2XLARGE_HOURLY = 0.40
 CLUSTER_INSTANCES = 11  # 1 driver + 10 workers (paper's Databricks cluster)
 
+# ---------------------------------------------- adaptive transport choice
+#
+# Plan-time defaults for estimating how many bytes a shuffle will move
+# (the planner has no statistics beyond source object sizes, so these are
+# the textbook selectivity constants):
+EST_FILTER_SELECTIVITY = 0.5   # each filter() halves the stream
+EST_AGG_OUTPUT_FACTOR = 0.3    # aggregation output vs its input
+
+
+def shuffle_transport_costs(est_bytes: float, n_producers: int,
+                            nparts: int) -> dict:
+    """Modeled USD for moving ``est_bytes`` of shuffle data through each
+    transport, from the same price constants the ledger bills with.
+
+    SQS bills every 64 KiB chunk on BOTH sides (send + receive) plus one
+    send/receive pair per (producer, partition) channel for EOS control
+    messages. The S3 exchange writes roughly one object per channel (plus
+    one manifest per producer), reads each object once, and pays a few
+    LISTs per partition for discovery — so its cost is per-REQUEST, not
+    per-byte, which is exactly why large shuffles want it (Lambada §4)
+    and tiny ones do not."""
+    channels = max(1, n_producers * nparts)
+    sqs_chunks = est_bytes / SQS_BILLING_CHUNK + channels  # data + EOS
+    sqs = 2 * sqs_chunks * SQS_PER_REQUEST  # send + receive
+    s3 = ((channels + n_producers) * S3_PER_PUT
+          + channels * S3_PER_GET
+          + 2 * nparts * S3_PER_LIST)
+    return {"sqs": sqs, "s3": s3}
+
+
+def pick_shuffle_transport(est_bytes: float, n_producers: int,
+                           nparts: int) -> str:
+    """The planner's per-shuffle choice when no hint or engine override
+    pins one (FlintConfig.shuffle_backend == "auto")."""
+    costs = shuffle_transport_costs(est_bytes, n_producers, nparts)
+    return "s3" if costs["s3"] < costs["sqs"] else "sqs"
+
 
 def cluster_cost(wall_seconds: float, instances: int = CLUSTER_INSTANCES) -> float:
     """Per-second billing of a provisioned cluster — accrues while idle,

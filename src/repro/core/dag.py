@@ -42,6 +42,7 @@ import itertools
 import pickle
 from typing import Any
 
+from repro.core import costs
 from repro.core import rdd as R
 from repro.core import serde
 
@@ -103,6 +104,10 @@ class ShuffleWrite:
     # one producer stage out to N consuming read sites); fixed by the time
     # planning completes, before any channel opens
     consumer_groups: int = 1
+    # declared (key, value) column schemas for this shuffle's typed
+    # columnar batches (serde schema grammar); None => per-batch sniffing.
+    # The SQL lowering sets this — it knows row types at plan time.
+    batch_schema: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -121,6 +126,10 @@ class StagePlan:
     write: ShuffleWrite | None
     action: str | None = None  # set on the final stage
     save_prefix: str | None = None
+    # RDD.take(n) / DataFrame.limit(n): the action merge stops consuming
+    # partition results once this many records have accumulated (each
+    # partition also carries a per-task "limit" op capping evaluation)
+    limit: int | None = None
     # shuffle_id -> number of producer TASKS feeding it. Known at plan time
     # (it is just the producing stage's task count), which is what lets the
     # scheduler hand consumers an EOS quorum up front and launch them
@@ -217,18 +226,100 @@ class _Planner:
     """One build_plan invocation: carries the stage list, the CSE memo of
     closed shuffles, and the cache registry shared with the context."""
 
-    def __init__(self, mult: int, cse: bool, cache_index: dict | None):
+    def __init__(self, mult: int, cse: bool, cache_index: dict | None,
+                 default_transport: str = ""):
         self.stages: list[StagePlan] = []
         self.mult = mult
         self.cse = cse
         self.cache_index = cache_index
+        self.default_transport = default_transport
         self._fps: dict[int, bytes] = {}
         # close-site key -> (sid, n_producer_tasks, ShuffleWrite)
         self._shared: dict[tuple, tuple] = {}
         self._materializing: set[str] = set()
+        self._est_memo: dict[int, float] = {}
 
     def fp(self, node) -> bytes:
         return lineage_fingerprint(node, self._fps)
+
+    # ------------------------------------------ adaptive transport choice
+    def _cache_entry(self, node) -> dict | None:
+        if not getattr(node, "cached", False) or self.cache_index is None:
+            return None
+        entry = self.cache_index.get(cache_token(node))
+        return entry if entry and entry.get("ready") else None
+
+    def _est_bytes(self, node) -> float:
+        """Planner-side shuffle-volume estimate: source object sizes
+        scaled by textbook selectivity constants, or the ACTUAL stored
+        batch sizes when the lineage is a ready cache() materialization.
+        Drives the cost-model transport choice — it only has to land on
+        the right side of the SQS/S3 crossover, not be exact."""
+        got = self._est_memo.get(id(node))
+        if got is not None:
+            return got
+        entry = self._cache_entry(node)
+        if entry is not None:
+            token = cache_token(node)
+            val = float(node.ctx.store.prefix_bytes(
+                f"_cache/{token}/{entry['nparts']}/"))
+        elif isinstance(node, R.Source):
+            val = float(node.ctx.store.size(node.key))
+        elif isinstance(node, R.ParallelCollection):
+            val = float(sum(node.ctx.store.size(f"{node.key}/{i}")
+                            for i in range(node.nparts)))
+        elif isinstance(node, R.Narrow):
+            factor = (costs.EST_FILTER_SELECTIVITY
+                      if node.kind == "filter" else 1.0)
+            val = self._est_bytes(node.parent) * factor
+        elif isinstance(node, R.ShuffleAgg):
+            val = self._est_bytes(node.parent) * costs.EST_AGG_OUTPUT_FACTOR
+        elif isinstance(node, R.Repartition):
+            val = self._est_bytes(node.parent)
+        elif isinstance(node, R.Join):
+            val = self._est_bytes(node.left) + self._est_bytes(node.right)
+        elif isinstance(node, R.Union):
+            val = self._est_bytes(node.a) + self._est_bytes(node.b)
+        else:
+            raise TypeError(f"unknown RDD node {type(node).__name__}")
+        self._est_memo[id(node)] = val
+        return val
+
+    def _est_producers(self, node) -> int:
+        """Approximate producer TASK count for a shuffle fed by ``node`` —
+        per-channel object/request overheads scale with it."""
+        entry = self._cache_entry(node)
+        if entry is not None:
+            return entry["nparts"]
+        if isinstance(node, R.Source):
+            return node.nparts * self.mult
+        if isinstance(node, R.ParallelCollection):
+            return node.nparts
+        if isinstance(node, R.Narrow):
+            return self._est_producers(node.parent)
+        if isinstance(node, R.Union):
+            return (self._est_producers(node.a)
+                    + self._est_producers(node.b))
+        return node.nparts * self.mult  # wide op: its own partition count
+
+    def _auto_transport(self, parent, nparts: int) -> str:
+        """Cost-model SQS-vs-S3 choice for one shuffle (engine default
+        "auto", no per-shuffle hint). Falls back to the paper's SQS when
+        the lineage offers no size information."""
+        try:
+            est = self._est_bytes(parent)
+        except Exception:
+            return "sqs"
+        return costs.pick_shuffle_transport(est,
+                                            self._est_producers(parent),
+                                            nparts)
+
+    def _transport_for(self, node_hint: str | None, parent,
+                       nparts: int) -> str:
+        tr = node_hint or ""
+        if not tr and self.default_transport == "auto":
+            tr = self._auto_transport(parent, nparts)
+        return tr
 
     # ------------------------------------------------------------- visit
     def visit(self, node) -> _Chain:
@@ -284,16 +375,17 @@ class _Planner:
         if isinstance(node, R.ShuffleAgg):
             mode = "agg" if node.map_side_combine else "group"
             nparts = node.nparts * self.mult
-            tr = node.transport or ""
+            tr = self._transport_for(node.transport, node.parent, nparts)
             sid, n_prod, group = self._close_shared(
-                node.parent, mode, nparts, node.fn, tr)
+                node.parent, mode, nparts, node.fn, tr,
+                batch_schema=node.batch_schema)
             inputs = [ShuffleRead([(sid, mode)], p, combine_fn=node.fn,
                                   transports={sid: tr}, groups=[group])
                       for p in range(nparts)]
             return _Chain(inputs, {sid: n_prod})
         if isinstance(node, R.Repartition):
             nparts = node.nparts * self.mult
-            tr = node.transport or ""
+            tr = self._transport_for(node.transport, node.parent, nparts)
             sid, n_prod, group = self._close_shared(
                 node.parent, "repart", nparts, None, tr)
             inputs = [ShuffleRead([(sid, "repart")], p,
@@ -302,24 +394,30 @@ class _Planner:
             return _Chain(inputs, {sid: n_prod})
         if isinstance(node, R.Join):
             nparts = node.nparts * self.mult
-            tr = node.transport or ""
+            tr_l = self._transport_for(node.transport, node.left, nparts)
+            tr_r = self._transport_for(node.transport, node.right, nparts)
+            schemas = node.batch_schemas or (None, None, None)
+            bs_l = (schemas[0], schemas[1]) if schemas[0] else None
+            bs_r = (schemas[0], schemas[2]) if schemas[0] else None
             sid_l, n_left, g_l = self._close_shared(
-                node.left, "join", nparts, None, tr, key_side="left")
+                node.left, "join", nparts, None, tr_l, key_side="left",
+                batch_schema=bs_l)
             if (self.cse and self._close_key(node.right, "join", nparts,
-                                             None, tr)
+                                             None, tr_r, bs_r)
                     == self._close_key(node.left, "join", nparts, None,
-                                       tr)):
+                                       tr_l, bs_l)):
                 # SELF-JOIN: both sides are the same lineage — one shared
                 # shuffle, drained once, used as left AND right
                 inputs = [ShuffleRead([(sid_l, "join")], p,
-                                      transports={sid_l: tr},
+                                      transports={sid_l: tr_l},
                                       groups=[g_l], self_join=True)
                           for p in range(nparts)]
                 return _Chain(inputs, {sid_l: n_left})
             sid_r, n_right, g_r = self._close_shared(
-                node.right, "join", nparts, None, tr, key_side="right")
+                node.right, "join", nparts, None, tr_r, key_side="right",
+                batch_schema=bs_r)
             inputs = [ShuffleRead([(sid_l, "join"), (sid_r, "join")], p,
-                                  transports={sid_l: tr, sid_r: tr},
+                                  transports={sid_l: tr_l, sid_r: tr_r},
                                   groups=[g_l, g_r])
                       for p in range(nparts)]
             return _Chain(inputs, {sid_l: n_left, sid_r: n_right})
@@ -327,21 +425,24 @@ class _Planner:
 
     # ------------------------------------------------------- shuffle CSE
     def _close_key(self, node, mode: str, nparts: int, combine,
-                   transport: str) -> tuple:
+                   transport: str, batch_schema: tuple | None = None
+                   ) -> tuple:
         """What makes two shuffles interchangeable: identical input
-        lineage, mode, partition count, combiner, and transport. A join's
-        ``key_side`` is deliberately EXCLUDED — a self-join's two sides
-        carry identical data."""
+        lineage, mode, partition count, combiner, transport, and declared
+        batch schema. A join's ``key_side`` is deliberately EXCLUDED — a
+        self-join's two sides carry identical data."""
         return (self.fp(node), mode, nparts, _fn_fingerprint(combine),
-                transport)
+                transport, batch_schema)
 
     def _close_shared(self, node, mode: str, nparts: int, combine,
-                      transport: str, key_side: str = ""
+                      transport: str, key_side: str = "",
+                      batch_schema: tuple | None = None
                       ) -> tuple[int, int, int]:
         """Close (or reuse) the producer stage for one shuffle. Returns
         (shuffle_id, producer task count, consumer-group index for this
         read site)."""
-        key = self._close_key(node, mode, nparts, combine, transport) \
+        key = self._close_key(node, mode, nparts, combine, transport,
+                              batch_schema) \
             if self.cse else None
         if key is not None:
             hit = self._shared.get(key)
@@ -351,7 +452,8 @@ class _Planner:
                 return sid, n_prod, write.consumer_groups - 1
         write = ShuffleWrite(next(_next_shuffle), nparts, mode,
                              combine_fn=combine, key_side=key_side,
-                             transport=transport)
+                             transport=transport,
+                             batch_schema=batch_schema)
         chain = self.visit(node)
         sid = write.shuffle_id
         stage_id = len(self.stages)
@@ -366,15 +468,31 @@ class _Planner:
         return sid, n_prod, 0
 
 
+def estimate_lineage_bytes(node, cache_index: dict | None = None) -> float:
+    """Standalone shuffle-volume estimate for an RDD lineage (the SQL
+    optimizer prices toDF sources with it; the planner uses the same walk
+    internally for "auto" transport resolution)."""
+    return _Planner(1, True, cache_index)._est_bytes(node)
+
+
 def build_plan(node, action: str, save_prefix: str | None = None,
                partition_multiplier: int = 1, *, cse: bool = True,
-               cache_index: dict | None = None) -> list[StagePlan]:
+               cache_index: dict | None = None,
+               default_transport: str = "",
+               limit: int | None = None) -> list[StagePlan]:
     """Physical plan for one action. ``partition_multiplier`` scales wide-op
     partition counts — the paper's elasticity answer to the executor memory
     cap. ``cse=False`` restores the one-consumer-per-shuffle planner (kept
     for the fan-out A/B benchmark); ``cache_index`` is the context-owned
-    registry of materialized ``RDD.cache()`` lineages."""
-    planner = _Planner(partition_multiplier, cse, cache_index)
+    registry of materialized ``RDD.cache()`` lineages.
+
+    ``default_transport="auto"`` makes the planner resolve every unhinted
+    shuffle to SQS or the S3 exchange via the cost model (estimated volume
+    x the ledger's price constants); any other value leaves unhinted
+    shuffles to the runtime fallback (FlintConfig.shuffle_backend).
+    ``limit`` caps the action merge (RDD.take / DataFrame.limit)."""
+    planner = _Planner(partition_multiplier, cse, cache_index,
+                       default_transport)
     chain = planner.visit(node)
     stages = planner.stages
     stage_id = len(stages)
@@ -382,6 +500,6 @@ def build_plan(node, action: str, save_prefix: str | None = None,
              for i, (inp, ops) in enumerate(
                  zip(chain.task_inputs, chain.ops_per_task))]
     stages.append(StagePlan(stage_id, tasks, None, action=action,
-                            save_prefix=save_prefix,
+                            save_prefix=save_prefix, limit=limit,
                             producer_counts=chain.producer_counts))
     return stages

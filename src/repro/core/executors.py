@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import os
 import pickle
 import threading
@@ -63,13 +64,15 @@ class MemoryCapExceeded(RuntimeError):
 class FlintConfig:
     memory_mb: int = 3008
     time_limit_s: float = 300.0
-    # default intermediate-data transport: "sqs" (the paper's choice) or
-    # "s3" (the Lambada-style object exchange); any ShuffleWrite.transport
-    # hint overrides it per shuffle. The env var lets CI run the whole
+    # default intermediate-data transport: "auto" lets the planner pick
+    # SQS or the Lambada-style S3 exchange PER SHUFFLE from estimated
+    # volume and the cost model (docs/dataframe.md); "sqs" (the paper's
+    # choice) or "s3" pin one engine-wide. A ShuffleWrite.transport hint
+    # overrides either, per shuffle. The env var lets CI run the whole
     # tier-1 suite under each backend without touching test code.
     shuffle_backend: str = dataclasses.field(
         default_factory=lambda: os.environ.get("FLINT_SHUFFLE_BACKEND",
-                                               "sqs"))
+                                               "auto"))
     # frame shuffle batches as typed key/value columns where the data is
     # homogeneous (shuffle.batch); False forces per-record pickle framing
     # everywhere (the pre-columnar wire format, kept for A/B measurement)
@@ -103,15 +106,24 @@ class FlintConfig:
     duplicate_prob: float = 0.0  # SQS at-least-once duplication rate
     chunk_fetch_bytes: int = 4 * 2**20
 
+    @property
+    def fallback_backend(self) -> str:
+        """Concrete transport for shuffles whose plan carries no resolved
+        hint. The planner resolves "auto" per shuffle at plan time; this
+        runtime fallback only fires for hand-built plans, where it keeps
+        the paper's SQS default."""
+        return "sqs" if self.shuffle_backend == "auto" \
+            else self.shuffle_backend
+
 
 # --------------------------------------------------------------- payloads
 
 
 def serialize_task(task: TaskDef, attempt: int, extra: dict | None = None
                    ) -> dict:
-    # a ("cache", (token, nparts, index)) op carries plan data, not a
-    # user function — it ships as-is
-    ops = [(kind, fn if kind == "cache" else serde.dumps_fn(fn))
+    # a ("cache", (token, nparts, index)) or ("limit", n) op carries plan
+    # data, not a user function — it ships as-is
+    ops = [(kind, fn if kind in ("cache", "limit") else serde.dumps_fn(fn))
            for kind, fn in task.ops]
     inp = task.input
     if isinstance(inp, ShuffleRead) and inp.combine_fn is not None:
@@ -284,7 +296,7 @@ def _read_transport_name(read: ShuffleRead, sid: int, cfg: FlintConfig
                          ) -> str:
     """The per-shuffle transport hint recorded at plan time, falling back
     to the engine default."""
-    return (read.transports or {}).get(sid) or cfg.shuffle_backend
+    return (read.transports or {}).get(sid) or cfg.fallback_backend
 
 
 def _drain_shuffle(read: ShuffleRead, env: LambdaSim, n_producers: dict, *,
@@ -438,6 +450,10 @@ def _apply_ops(it, ops, store=None, cap=None):
             it = fn(it)
         elif kind == "cache":
             it = _cache_tee(it, fn, store, cap)
+        elif kind == "limit":
+            # RDD.take / DataFrame.limit: stop pulling from upstream —
+            # and therefore stop READING the source — after fn records
+            it = itertools.islice(it, fn)
         else:
             raise ValueError(f"unknown op {kind}")
     return it
@@ -475,7 +491,7 @@ class _ShuffleWriter:
 
     def _transport(self):
         return self.env.transports.get(self.write.transport
-                                       or self.env.cfg.shuffle_backend)
+                                       or self.env.cfg.fallback_backend)
 
     def _partition_of(self, key) -> int:
         # stable across interpreter runs / PYTHONHASHSEED — a retried or
@@ -515,7 +531,8 @@ class _ShuffleWriter:
                 continue
             bodies = pack_batch(records, limit=transport.batch_limit,
                                 spill=transport.spill,
-                                columnar=self.env.cfg.columnar_batches)
+                                columnar=self.env.cfg.columnar_batches,
+                                schema=self.write.batch_schema)
             seq = self.seq.get(p, 0)
             transport.send(self.write.shuffle_id, p, self.src, seq, bodies)
             self.seq[p] = seq + len(bodies)

@@ -309,6 +309,15 @@ class ObjectStoreSim:
         with self._lock:
             return sorted(k for k in self._objects if k.startswith(prefix))
 
+    def prefix_bytes(self, prefix: str) -> int:
+        """Total stored bytes under a prefix, unbilled: object sizes are
+        metadata a real driver already holds (LIST responses carry them,
+        and the driver wrote these keys' registry itself) — the planner's
+        cost model reads them like any other client-side bookkeeping."""
+        with self._lock:
+            return sum(len(v) for k, v in self._objects.items()
+                       if k.startswith(prefix))
+
     def delete(self, key: str):
         self.ledger.add_s3_delete()
         with self._lock:

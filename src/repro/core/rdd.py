@@ -13,6 +13,12 @@ reduceByKey, groupByKey, join, repartition (wide); union; cache (lineage
 materialization). Actions: collect, count, take, reduce, saveAsTextFile.
 Shared lineages (self-joins, diamonds, unions of two derivations) are
 planned once via shuffle CSE — see docs/dag_fanout.md.
+
+``toDF(schema)`` lifts an RDD of tuples onto the structured DataFrame
+surface (repro.sql, docs/dataframe.md), whose optimizer lowers back onto
+this lineage API. Wide ops accept a ``batch_schema`` declaring the typed
+columnar wire format at plan time — the SQL lowering knows its row types,
+so its shuffles skip per-batch type sniffing.
 """
 
 from __future__ import annotations
@@ -48,20 +54,25 @@ class RDD:
         return Narrow(self, "mappartitions", fn)
 
     def reduceByKey(self, fn: Callable, numPartitions: int | None = None,
-                    transport: str | None = None) -> "RDD":
+                    transport: str | None = None,
+                    batch_schema: tuple | None = None) -> "RDD":
         return ShuffleAgg(self, fn, numPartitions or self.nparts,
-                          map_side_combine=True, transport=transport)
+                          map_side_combine=True, transport=transport,
+                          batch_schema=batch_schema)
 
     def groupByKey(self, numPartitions: int | None = None,
-                   transport: str | None = None) -> "RDD":
+                   transport: str | None = None,
+                   batch_schema: tuple | None = None) -> "RDD":
         return ShuffleAgg(self, None, numPartitions or self.nparts,
-                          map_side_combine=False, transport=transport)
+                          map_side_combine=False, transport=transport,
+                          batch_schema=batch_schema)
 
     def join(self, other: "RDD", numPartitions: int | None = None,
-             transport: str | None = None) -> "RDD":
+             transport: str | None = None,
+             batch_schemas: tuple | None = None) -> "RDD":
         return Join(self, other,
                     numPartitions or max(self.nparts, other.nparts),
-                    transport=transport)
+                    transport=transport, batch_schemas=batch_schemas)
 
     def repartition(self, numPartitions: int,
                     transport: str | None = None) -> "RDD":
@@ -80,6 +91,13 @@ class RDD:
         self.cached = True
         return self
 
+    def toDF(self, schema) -> "Any":
+        """Lift an RDD whose records are tuples matching ``schema`` (a
+        repro.sql Schema or a list of (name, dtype) pairs) onto the
+        DataFrame surface — see docs/dataframe.md."""
+        from repro.sql import DataFrame  # lazy: sql imports core
+        return DataFrame.from_rdd(self, schema)
+
     # ------------------------------------------------------------- actions
     def collect(self) -> list:
         return self.ctx.run_action(self, "collect")
@@ -97,7 +115,14 @@ class RDD:
         return out
 
     def take(self, n: int) -> list:
-        return self.collect()[:n]  # prototype semantics: no partial eval
+        """First n records in partition order. Plans a per-partition
+        ``limit`` op (each partition stops evaluating — and a source task
+        stops READING — after its first n records) and short-circuits the
+        action merge at n, instead of the old full collect()."""
+        if n <= 0:
+            return []
+        return self.ctx.run_action(Narrow(self, "limit", n), "collect",
+                                   limit=n)
 
     def saveAsTextFile(self, key_prefix: str):
         return self.ctx.run_action(self, "save", save_prefix=key_prefix)
@@ -153,15 +178,20 @@ class Narrow(RDD):
 
 class ShuffleAgg(RDD):
     """reduceByKey / groupByKey. ``transport`` is the per-shuffle backend
-    hint (core.shuffle registry name); None defers to the engine default."""
+    hint (core.shuffle registry name); None defers to the engine default
+    (which may be the planner's cost-model choice — docs/dataframe.md).
+    ``batch_schema`` is an optional declared (key, value) column-schema
+    pair for the shuffle's typed columnar batches."""
 
     def __init__(self, parent: RDD, fn, nparts: int, *,
-                 map_side_combine: bool, transport: str | None = None):
+                 map_side_combine: bool, transport: str | None = None,
+                 batch_schema: tuple | None = None):
         super().__init__(parent.ctx, nparts)
         self.parent = parent
         self.fn = fn
         self.map_side_combine = map_side_combine
         self.transport = transport
+        self.batch_schema = batch_schema
 
 
 class Repartition(RDD):
@@ -173,12 +203,17 @@ class Repartition(RDD):
 
 
 class Join(RDD):
+    """``batch_schemas`` declares (key-schema, left-value-schema,
+    right-value-schema) for the two side shuffles' columnar batches."""
+
     def __init__(self, left: RDD, right: RDD, nparts: int,
-                 transport: str | None = None):
+                 transport: str | None = None,
+                 batch_schemas: tuple | None = None):
         super().__init__(left.ctx, nparts)
         self.left = left
         self.right = right
         self.transport = transport
+        self.batch_schemas = batch_schemas
 
 
 class Union(RDD):

@@ -90,7 +90,7 @@ class FlintScheduler:
                  store: ObjectStoreSim | None = None, *,
                  fault_plan: dict | None = None, verbose: bool = False,
                  cache_index: dict | None = None):
-        if (cfg.shuffle_backend == "sqs"
+        if (cfg.shuffle_backend in ("sqs", "auto")
                 and cfg.visibility_timeout_s >= cfg.drain_timeout_s):
             # otherwise a retried consumer times out waiting for its dead
             # predecessor's claims to expire — and fails with a confusing
@@ -134,7 +134,7 @@ class FlintScheduler:
         self._sid_meta = {
             s.write.shuffle_id:
                 (s.write.nparts,
-                 s.write.transport or self.cfg.shuffle_backend)
+                 s.write.transport or self.cfg.fallback_backend)
             for s in stages if s.write is not None}
         self._sid_consumers = {}
         for si, stage in enumerate(stages):
@@ -160,7 +160,7 @@ class FlintScheduler:
 
     def _open_shuffle(self, write):
         """Create the shuffle's channels before any producer launches."""
-        name = write.transport or self.cfg.shuffle_backend
+        name = write.transport or self.cfg.fallback_backend
         self.transports.get(name).open(write.shuffle_id, write.nparts,
                                        groups=write.consumer_groups)
 
@@ -553,6 +553,10 @@ class FlintScheduler:
             out = []
             for i in range(n):
                 out.extend(partials.get(i, []))
+                if stage.limit is not None and len(out) >= stage.limit:
+                    # take(n): the merge short-circuits — later
+                    # partitions' results are never consumed
+                    return out[:stage.limit]
             return sum(out) if stage.action == "sum" else out
         if stage.action == "save":
             return [f"{stage.save_prefix}/part-{i:05d}" for i in range(n)]

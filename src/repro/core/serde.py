@@ -8,8 +8,12 @@ defaults, closure cells, and the referenced globals (recursively for
 function-valued globals; by name for modules). Self- and mutually-
 recursive functions are handled with a memo: a function re-encountered
 while it is still being packed becomes a reference node, resolved back to
-the (partially built) function object at unpack time. Scope is
-intentionally bounded: anything else must already be picklable.
+the (partially built) function object at unpack time. Closure cells and
+globals holding CONTAINERS of functions (a list of compiled column
+expressions, a dict of named handlers) are walked recursively — the SQL
+layer's expression compiler closes over exactly those. Containers must be
+acyclic. Scope is intentionally bounded: anything else must already be
+picklable.
 """
 
 from __future__ import annotations
@@ -24,6 +28,7 @@ from typing import Any
 _FN_TAG = "__flint_fn__"
 _MOD_TAG = "__flint_mod__"
 _REF_TAG = "__flint_fnref__"
+_SEQ_TAG = "__flint_seq__"  # list/tuple/dict carrying packed functions
 
 
 def _pack_cell(value, memo: dict):
@@ -39,6 +44,37 @@ def _pack(value: Any, memo: dict):
             # to the ancestor already being packed
             return {_REF_TAG: memo[id(value)]}
         return _pack_function(value, memo)
+    # EXACT list/tuple/dict only: a subclass (namedtuple, OrderedDict)
+    # rebuilt from items would lose its type on the executor — those keep
+    # the pre-existing pickle-by-value path. A container already on the
+    # walk stack is CYCLIC: functions inside one can't be packed, so it
+    # is left as-is for pickle (which handles cycles), same as before
+    # containers were walked at all.
+    if type(value) in (list, tuple):
+        stack = memo.setdefault("_container_stack", set())
+        if id(value) in stack:
+            return value
+        stack.add(id(value))
+        try:
+            packed = [_pack(v, memo) for v in value]
+        finally:
+            stack.discard(id(value))
+        if any(p is not v for p, v in zip(packed, value)):
+            kind = "list" if type(value) is list else "tuple"
+            return {_SEQ_TAG: kind, "items": packed}
+        return value
+    if type(value) is dict and _SEQ_TAG not in value:
+        stack = memo.setdefault("_container_stack", set())
+        if id(value) in stack:
+            return value
+        stack.add(id(value))
+        try:
+            vals = {k: _pack(v, memo) for k, v in value.items()}
+        finally:
+            stack.discard(id(value))
+        if any(vals[k] is not value[k] for k in value):
+            return {_SEQ_TAG: "dict", "items": list(vals.items())}
+        return value
     return value
 
 
@@ -65,6 +101,10 @@ def _pack_function(fn: types.FunctionType, memo: dict) -> dict:
             if isinstance(g, (types.FunctionType, types.ModuleType)):
                 globs[name] = _pack(g, memo)
             else:
+                packed = _pack(g, memo)  # containers of functions walk too
+                if packed is not g:
+                    globs[name] = packed
+                    continue
                 try:
                     pickle.dumps(g)
                     globs[name] = g
@@ -93,6 +133,12 @@ def _unpack(value: Any, memo: dict):
             return memo[value[_REF_TAG]]  # ancestor registered before descent
         if _MOD_TAG in value:
             return importlib.import_module(value[_MOD_TAG])
+        if _SEQ_TAG in value:
+            kind = value[_SEQ_TAG]
+            if kind == "dict":
+                return {k: _unpack(v, memo) for k, v in value["items"]}
+            items = [_unpack(v, memo) for v in value["items"]]
+            return items if kind == "list" else tuple(items)
     return value
 
 
@@ -129,9 +175,13 @@ def _unpack_function(packed: dict, memo: dict) -> types.FunctionType:
 #   "i"  int64        "f"  float64      "b"  bool
 #   "s"  utf-8 string (u16 length prefixes; "S" when any string is >64 KiB)
 #   "t(a,b,...)"  fixed-arity tuple of columns, recursively
+#   "l(a)"  ragged lists with a homogeneous element type (u32 per-value
+#           lengths + one flattened element column); "l()" when every list
+#           in the column is empty. groupByKey value-lists re-shuffled
+#           downstream ride this instead of falling back to pickle framing.
 #
-# Anything else (mixed types, ints beyond int64, lists, None, ...) has no
-# schema; the batch falls back to length-prefixed pickle framing.
+# Anything else (mixed types, ints beyond int64, None, ...) has no schema;
+# the batch falls back to length-prefixed pickle framing.
 
 _INT64_MIN, _INT64_MAX = -(2**63), 2**63 - 1
 _U32 = struct.Struct("<I")
@@ -164,7 +214,51 @@ def column_schema(values: list) -> str | None:
                 return None
             subs.append(sub)
         return "t(%s)" % ",".join(subs)
+    if t is list:
+        flat = [x for v in values for x in v]
+        if not flat:
+            return "l()"  # all-empty: lengths alone reconstruct
+        sub = column_schema(flat)
+        if sub is None:
+            return None
+        return "l(%s)" % sub
     return None
+
+
+def column_conforms(schema: str, values: list) -> bool:
+    """Cheap exact-type check of a column against a DECLARED schema.
+    struct.pack would silently coerce (int -> float64, bool -> int64), so
+    a declared-schema encode must verify concrete types first — the wire
+    round-trips values exactly or not at all (mismatch => the caller
+    falls back to sniffing)."""
+    if schema == "i":
+        return all(type(v) is int and _INT64_MIN <= v <= _INT64_MAX
+                   for v in values)
+    if schema == "f":
+        return all(type(v) is float for v in values)
+    if schema == "b":
+        return all(type(v) is bool for v in values)
+    if schema == "s":
+        return all(type(v) is str and len(v.encode("utf-8")) <= 0xFFFF
+                   for v in values)
+    if schema == "S":
+        return all(type(v) is str for v in values)
+    if schema.startswith("t("):
+        subs = _split_tuple_schema(schema)
+        if not all(type(v) is tuple and len(v) == len(subs)
+                   for v in values):
+            return False
+        return all(column_conforms(sub, [v[j] for v in values])
+                   for j, sub in enumerate(subs))
+    if schema.startswith("l("):
+        if not all(type(v) is list for v in values):
+            return False
+        sub = schema[2:-1]
+        flat = [x for v in values for x in v]
+        if not sub:
+            return not flat  # "l()" declares all-empty lists
+        return column_conforms(sub, flat)
+    return False
 
 
 def _split_tuple_schema(schema: str) -> list[str]:
@@ -202,6 +296,13 @@ def encode_column(schema: str, values: list) -> bytes:
             out.append(_U32.pack(len(blob)))
             out.append(blob)
         return b"".join(out)
+    if schema.startswith("l("):
+        lengths = struct.pack("<%dI" % n, *map(len, values))
+        sub = schema[2:-1]
+        if not sub:  # "l()": every list is empty
+            return lengths
+        flat = [x for v in values for x in v]
+        return lengths + encode_column(sub, flat)
     raise ValueError(f"unknown column schema {schema!r}")
 
 
@@ -230,6 +331,16 @@ def decode_column(schema: str, blob: bytes, n: int) -> list:
             cols.append(decode_column(sub, blob[off:off + ln], n))
             off += ln
         return list(zip(*cols))
+    if schema.startswith("l("):
+        lengths = struct.unpack_from("<%dI" % n, blob)
+        sub = schema[2:-1]
+        flat = (decode_column(sub, blob[4 * n:], sum(lengths))
+                if sub else [])
+        out, off = [], 0
+        for ln in lengths:
+            out.append(flat[off:off + ln])
+            off += ln
+        return out
     raise ValueError(f"unknown column schema {schema!r}")
 
 
@@ -251,6 +362,13 @@ def column_value_sizes(schema: str, values: list) -> list[int]:
                     column_value_sizes(sub, [v[j] for v in values])):
                 sizes[i] += s
         return sizes
+    if schema.startswith("l("):
+        sub = schema[2:-1]
+        if not sub:
+            return [4] * len(values)
+        flat_sizes = iter(column_value_sizes(
+            sub, [x for v in values for x in v]))
+        return [4 + sum(next(flat_sizes) for _ in v) for v in values]
     raise ValueError(f"unknown column schema {schema!r}")
 
 

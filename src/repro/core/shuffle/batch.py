@@ -43,10 +43,24 @@ _BODY_RESERVE = 512
 
 def pack_batch(records: Iterable[Any], limit: int = SQS_MESSAGE_LIMIT,
                spill: Callable[[bytes], str] | None = None,
-               columnar: bool = True) -> list[bytes]:
-    """Pack records into tagged batch bodies, each under ``limit`` bytes."""
+               columnar: bool = True,
+               schema: tuple[str, str] | None = None) -> list[bytes]:
+    """Pack records into tagged batch bodies, each under ``limit`` bytes.
+
+    ``schema`` is an optional DECLARED (key-schema, value-schema) pair —
+    the SQL layer knows its row types at plan time, so its shuffles skip
+    the per-batch type sniffing entirely. Records that violate the
+    declaration (e.g. a sum outgrowing int64) quietly fall back to the
+    sniffing path, which itself falls back to pickle framing."""
     records = records if isinstance(records, list) else list(records)
     if columnar and records:
+        if schema is not None:
+            try:
+                bodies = _pack_columnar(records, limit, declared=schema)
+            except Exception:
+                bodies = None  # declaration violated: sniff instead
+            if bodies is not None:
+                return bodies
         bodies = _pack_columnar(records, limit)
         if bodies is not None:
             return bodies
@@ -71,15 +85,30 @@ def is_columnar(body: bytes) -> bool:
 # ------------------------------------------------------------- internals
 
 
-def _pack_columnar(records: list, limit: int) -> list[bytes] | None:
+def _pack_columnar(records: list, limit: int,
+                   declared: tuple[str, str] | None = None
+                   ) -> list[bytes] | None:
     """Columnar bodies, or None when the batch is ragged (caller falls back
-    to pickle framing)."""
+    to pickle framing). With ``declared`` the schemas come from the plan
+    instead of sniffing the batch; a mismatch surfaces as an exception the
+    caller treats as a fallback signal."""
     if any(type(r) is not tuple or len(r) != 2 for r in records):
         return None
     keys = [r[0] for r in records]
     vals = [r[1] for r in records]
-    kschema = serde.column_schema(keys)
-    vschema = serde.column_schema(vals)
+    if declared is not None:
+        kschema, vschema = declared
+        if kschema is None or vschema is None:
+            return None
+        # exact-type conformance, not just encodability: struct.pack
+        # would silently coerce int -> float64 / bool -> int64, breaking
+        # the round-trip-exactly invariant the sniffing path guarantees
+        if not (serde.column_conforms(kschema, keys)
+                and serde.column_conforms(vschema, vals)):
+            return None
+    else:
+        kschema = serde.column_schema(keys)
+        vschema = serde.column_schema(vals)
     if kschema is None or vschema is None:
         return None
     sizes = [a + b for a, b in zip(serde.column_value_sizes(kschema, keys),

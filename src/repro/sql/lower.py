@@ -1,0 +1,282 @@
+"""Lower a logical plan onto the RDD lineage.
+
+Everything below the root Sort/Limit chain becomes plain RDD operators —
+so the DAG planner, CSE, cache(), the EOS shuffle protocol and both
+transports apply to DataFrame queries unchanged. Because the plan carries
+schemas, every emitted wide op declares its (key, value) columnar batch
+schema (rdd.batch_schema) — executors pack typed columns without per-batch
+type sniffing.
+
+Node -> lineage:
+
+    Scan       textFile(key).map(parse-and-cast of the PRUNED columns)
+    RddScan    the RDD itself (rows are tuples matching the schema)
+    Project    map(compiled row function)
+    Filter     filter(compiled predicate)
+    Aggregate  partial (map-side combine): map(row -> (keys, partials))
+                 .reduceByKey(slot-wise merge) .map(finalize)
+               full: map(row -> (keys, row)).groupByKey().map(aggregate)
+    Join       map both sides to (key-tuple, rest-tuple), rdd.join,
+               map to key + left-rest + right-rest
+    Sort/Limit root-only FINAL operators: Limit directly above the engine
+               plan becomes a per-partition "limit" op plus the action-
+               merge short-circuit (RDD.take's machinery); Limit(Sort(X))
+               adds a per-partition top-n; the driver applies the total
+               order / final truncation to the collected rows.
+"""
+
+from __future__ import annotations
+
+import operator
+
+from repro.core import rdd as R
+from repro.sql import plan as P
+from repro.sql.expr import CASTS, Schema, dtype_serde_char
+
+_SLOT_MERGE = {"sum": operator.add, "min": min, "max": max}
+
+
+def _one(row):
+    return 1
+
+
+def _identity_partition(it):
+    return it
+
+
+def sort_rows(rows: list, bound_keys: list) -> None:
+    """In-place multi-key sort: stable passes applied innermost-last."""
+    for fn, asc in reversed(bound_keys):
+        rows.sort(key=fn, reverse=not asc)
+
+
+def _topn_fn(n: int, bound_keys: list):
+    def topn(it):
+        rows = list(it)
+        sort_rows(rows, bound_keys)
+        return iter(rows[:n])
+    return topn
+
+
+def _tuple_schema(schema: Schema, names) -> str | None:
+    return schema.serde_tuple(names)
+
+
+# ----------------------------------------------------------- entry point
+
+
+def lower(plan: P.Plan, ctx):
+    """Returns (rdd, merge_limit, driver_ops): run the rdd through
+    ``ctx.run_action(..., limit=merge_limit)``, then apply ``driver_ops``
+    (("sort", bound_keys) / ("limit", n), in order) to the rows."""
+    steps = []
+    node = plan
+    while isinstance(node, (P.Sort, P.Limit)):
+        steps.append(node)
+        node = node.child
+    rdd = _lower_engine(node, ctx)
+    inner_schema = node.schema()
+    merge_limit = None
+    if steps and isinstance(steps[-1], P.Limit):
+        # the INNERMOST step caps the engine result: per-partition limit
+        # op + action-merge short-circuit (same machinery as RDD.take)
+        merge_limit = steps[-1].n
+        rdd = R.Narrow(rdd, "limit", merge_limit)
+    if (len(steps) == 2 and isinstance(steps[0], P.Limit)
+            and isinstance(steps[1], P.Sort)):
+        # Limit(Sort(X)) — top-n: each partition forwards only its n best
+        bound = [(e.bind(inner_schema), asc) for e, asc in steps[1].keys]
+        rdd = rdd.mapPartitions(_topn_fn(steps[0].n, bound))
+    driver_ops = []
+    for s in reversed(steps):  # innermost first
+        if isinstance(s, P.Limit):
+            driver_ops.append(("limit", s.n))
+        else:
+            driver_ops.append(("sort",
+                               [(e.bind(inner_schema), asc)
+                                for e, asc in s.keys]))
+    return rdd, merge_limit, driver_ops
+
+
+def apply_driver_ops(rows: list, driver_ops: list) -> list:
+    for op in driver_ops:
+        if op[0] == "limit":
+            rows = rows[:op[1]]
+        else:
+            sort_rows(rows, op[1])
+    return rows
+
+
+# ------------------------------------------------------- engine lowering
+
+
+def _lower_engine(node: P.Plan, ctx) -> R.RDD:
+    if isinstance(node, P.Scan):
+        return _lower_scan(node, ctx)
+    if isinstance(node, P.RddScan):
+        return node.rdd
+    if isinstance(node, P.Project):
+        base = node.child.schema()
+        fns = [e.bind(base) for _, e in node.cols]
+        child = _lower_engine(node.child, ctx)
+        return child.map(lambda row: tuple(f(row) for f in fns))
+    if isinstance(node, P.Filter):
+        pred = node.pred.bind(node.child.schema())
+        return _lower_engine(node.child, ctx).filter(pred)
+    if isinstance(node, P.Aggregate):
+        return _lower_aggregate(node, ctx)
+    if isinstance(node, P.Join):
+        return _lower_join(node, ctx)
+    if isinstance(node, P.Cached):
+        inner = _lower_engine(node.child, ctx)
+        if isinstance(node.child, P.RddScan):
+            # never flip the cached flag on the USER'S RDD object — wrap
+            # it so the mark lives on lineage this lowering owns
+            inner = inner.mapPartitions(_identity_partition)
+        return inner.cache()
+    if isinstance(node, (P.Sort, P.Limit)):
+        raise ValueError("Sort/Limit are final operators; they can only "
+                         "appear at the plan root (orderBy/limit last)")
+    raise TypeError(f"unknown plan node {type(node).__name__}")
+
+
+def _lower_scan(node: P.Scan, ctx) -> R.RDD:
+    full = node.full_schema
+    sel = node.schema().names
+    idx = [full.index(n) for n in sel]
+    casters = [CASTS[full.dtype_of(n)] for n in sel]
+
+    def parse(line):
+        parts = line.split(",")
+        return tuple(c(parts[i]) for c, i in zip(casters, idx))
+
+    return ctx.textFile(node.key, node.nparts).map(parse)
+
+
+def _key_value_fn(key_idx: list, rest_idx: list):
+    def fn(row):
+        return (tuple(row[i] for i in key_idx),
+                tuple(row[j] for j in rest_idx))
+    return fn
+
+
+def _lower_join(node: P.Join, ctx) -> R.RDD:
+    ls, rs = node.left.schema(), node.right.schema()
+    lrest, rrest = node.rest_names(node.left), node.rest_names(node.right)
+    lmap = _key_value_fn([ls.index(n) for n in node.on],
+                         [ls.index(n) for n in lrest])
+    rmap = _key_value_fn([rs.index(n) for n in node.on],
+                         [rs.index(n) for n in rrest])
+    left = _lower_engine(node.left, ctx).map(lmap)
+    right = _lower_engine(node.right, ctx).map(rmap)
+    schemas = (_tuple_schema(ls, node.on),
+               _tuple_schema(ls, lrest), _tuple_schema(rs, rrest))
+    joined = left.join(right, node.nparts, transport=node.transport,
+                       batch_schemas=schemas)
+    return joined.map(lambda kv: kv[0] + kv[1][0] + kv[1][1])
+
+
+def _lower_aggregate(node: P.Aggregate, ctx) -> R.RDD:
+    base = node.child.schema()
+    out_schema = node.schema()
+    child = _lower_engine(node.child, ctx)
+    kfs = [e.bind(base) for _, e in node.keys]
+    kschema = _tuple_schema(out_schema, [n for n, _ in node.keys])
+
+    def keyer(row):
+        return tuple(k(row) for k in kfs)
+
+    if node.partial:
+        return _lower_partial(node, child, base, keyer, kschema)
+    return _lower_full(node, child, base, keyer, kschema)
+
+
+def _lower_partial(node: P.Aggregate, child: R.RDD, base: Schema,
+                   keyer, kschema: str | None) -> R.RDD:
+    """Map-side-combine lowering: rows fold into per-key PARTIAL tuples
+    before they ever reach the wire; reduceByKey merges slot-wise with
+    associative ops (sum/min/max — avg rides as (sum, count))."""
+    slot_ops: list = []
+    inits: list = []
+    layout: list = []  # (op, first slot, slot count) per aggregate
+    vchars: list = []
+    for name, a in node.aggs:
+        off = len(slot_ops)
+        arg = a.child.bind(base) if a.child is not None else None
+        argc = (dtype_serde_char(a.child.dtype(base))
+                if a.child is not None else "i")
+        if a.op == "count":
+            slot_ops.append("sum")
+            inits.append(_one)
+            vchars.append("i")
+        elif a.op == "avg":
+            slot_ops += ["sum", "sum"]
+            inits += [arg, _one]
+            vchars += [argc, "i"]
+        else:  # sum / min / max
+            slot_ops.append(a.op)
+            inits.append(arg)
+            vchars.append(argc)
+        layout.append((a.op, off, len(slot_ops) - off))
+
+    def mapper(row):
+        return (keyer(row), tuple(f(row) for f in inits))
+
+    def merge(a, b):
+        return tuple(_SLOT_MERGE[op](x, y)
+                     for op, x, y in zip(slot_ops, a, b))
+
+    def finalize(kv):
+        key, vals = kv
+        out = []
+        for op, off, _width in layout:
+            if op == "avg":
+                out.append(vals[off] / vals[off + 1])
+            else:
+                out.append(vals[off])
+        return key + tuple(out)
+
+    vschema = "t(%s)" % ",".join(vchars) if vchars else None
+    agged = child.map(mapper).reduceByKey(
+        merge, node.nparts or child.nparts, transport=node.transport,
+        batch_schema=(kschema, vschema) if kschema else None)
+    return agged.map(finalize)
+
+
+def _lower_full(node: P.Aggregate, child: R.RDD, base: Schema,
+                keyer, kschema: str | None) -> R.RDD:
+    """groupByKey lowering (collect_list, or optimize=False): full rows
+    ship to the reducers; aggregates evaluate over each group."""
+    aggfns = []
+    for name, a in node.aggs:
+        arg = a.child.bind(base) if a.child is not None else None
+        aggfns.append(_group_agg_fn(a.op, arg))
+
+    def mapper(row):
+        return (keyer(row), row)
+
+    def finalize(kv):
+        key, rows = kv
+        return key + tuple(f(rows) for f in aggfns)
+
+    vschema = _tuple_schema(base, base.names)
+    grouped = child.map(mapper).groupByKey(
+        node.nparts or child.nparts, transport=node.transport,
+        batch_schema=(kschema, vschema) if kschema else None)
+    return grouped.map(finalize)
+
+
+def _group_agg_fn(op: str, arg):
+    if op == "count":
+        return len
+    if op == "sum":
+        return lambda rows: sum(arg(r) for r in rows)
+    if op == "avg":
+        return lambda rows: sum(arg(r) for r in rows) / len(rows)
+    if op == "min":
+        return lambda rows: min(arg(r) for r in rows)
+    if op == "max":
+        return lambda rows: max(arg(r) for r in rows)
+    if op == "collect_list":
+        return lambda rows: [arg(r) for r in rows]
+    raise ValueError(f"unknown aggregate {op}")

@@ -1,0 +1,317 @@
+"""Logical plan for the DataFrame surface.
+
+A query is a tree of relational operators over a schema-carrying source
+(CSV scan or an RDD of tuples). ``explain_str`` renders the tree the way
+the golden plan-shape tests pin it — one node per line, two-space
+indents, child after parent:
+
+    Limit[5]
+      Sort[tips desc]
+        Aggregate[keys=[hour], aggs=[tips:=sum(tip)], combine=map_side]
+          Project[hour:=substr(pickup, 12, 2), tip]
+            Filter[(payment_type = 'credit')]
+              Scan[taxi.csv, cols=[pickup, payment_type, tip], parts=8]
+
+The optimizer (repro.sql.optimizer) rewrites this tree; the lowering
+(repro.sql.lower) turns it into the existing RDD lineage. ``orderBy`` and
+``limit`` are FINAL operators: the engine is unordered, so Sort/Limit
+live only at the plan root where the lowering can split them between a
+per-partition op and a driver-side finish.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+from repro.sql.expr import Col, Expr, Schema
+
+
+class Plan:
+    _schema: Schema | None = None
+
+    def children(self) -> list:
+        raise NotImplementedError
+
+    def with_children(self, kids: list) -> "Plan":
+        raise NotImplementedError
+
+    def _compute_schema(self) -> Schema:
+        raise NotImplementedError
+
+    def schema(self) -> Schema:
+        if self._schema is None:
+            self._schema = self._compute_schema()
+        return self._schema
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return explain_str(self)
+
+
+def explain_str(plan: Plan) -> str:
+    lines: list[str] = []
+
+    def walk(node: Plan, depth: int):
+        lines.append("  " * depth + node.describe())
+        for c in node.children():
+            walk(c, depth + 1)
+
+    walk(plan, 0)
+    return "\n".join(lines)
+
+
+def _fmt_named(pairs: Iterable) -> str:
+    """name for a plain column passthrough, name:=expr otherwise."""
+    out = []
+    for name, e in pairs:
+        if isinstance(e, Col) and e.name == name:
+            out.append(name)
+        else:  # computed column or aggregate — both print name:=sql
+            out.append(f"{name}:={e.sql()}")
+    return ", ".join(out)
+
+
+class Scan(Plan):
+    """CSV object in the store. ``columns`` is the pruned projection the
+    optimizer pushes into the scan — only these fields are parsed/cast."""
+
+    def __init__(self, key: str, full_schema: Schema, nparts: int,
+                 columns: tuple | None = None):
+        self.key = key
+        self.full_schema = full_schema
+        self.nparts = nparts
+        self.columns = tuple(columns) if columns is not None else None
+
+    def children(self):
+        return []
+
+    def with_children(self, kids):
+        return self
+
+    def _compute_schema(self):
+        if self.columns is None:
+            return self.full_schema
+        return self.full_schema.select(self.columns)
+
+    def describe(self):
+        return (f"Scan[{self.key}, "
+                f"cols=[{', '.join(self.schema().names)}], "
+                f"parts={self.nparts}]")
+
+
+class RddScan(Plan):
+    """An RDD of tuples lifted by ``rdd.toDF(schema)``."""
+
+    def __init__(self, rdd, schema: Schema):
+        self.rdd = rdd
+        self.rdd_schema = schema
+
+    def children(self):
+        return []
+
+    def with_children(self, kids):
+        return self
+
+    def _compute_schema(self):
+        return self.rdd_schema
+
+    def describe(self):
+        return (f"RddScan[cols=[{', '.join(self.rdd_schema.names)}], "
+                f"parts={self.rdd.nparts}]")
+
+
+class Project(Plan):
+    def __init__(self, child: Plan, cols: Iterable):
+        self.child = child
+        self.cols = tuple(cols)  # ((name, Expr), ...)
+
+    def children(self):
+        return [self.child]
+
+    def with_children(self, kids):
+        return Project(kids[0], self.cols)
+
+    def _compute_schema(self):
+        base = self.child.schema()
+        return Schema((n, e.dtype(base)) for n, e in self.cols)
+
+    def describe(self):
+        return f"Project[{_fmt_named(self.cols)}]"
+
+
+class Filter(Plan):
+    def __init__(self, child: Plan, pred: Expr):
+        self.child = child
+        self.pred = pred
+
+    def children(self):
+        return [self.child]
+
+    def with_children(self, kids):
+        return Filter(kids[0], self.pred)
+
+    def _compute_schema(self):
+        base = self.child.schema()
+        if self.pred.dtype(base) != "bool":
+            raise TypeError(f"filter predicate {self.pred.sql()} is not "
+                            f"boolean")
+        return base
+
+    def describe(self):
+        return f"Filter[{self.pred.sql()}]"
+
+
+class Aggregate(Plan):
+    """groupBy().agg(). ``partial`` (map-side combine, the reduceByKey
+    lowering) and ``transport`` are chosen by the optimizer."""
+
+    def __init__(self, child: Plan, keys: Iterable, aggs: Iterable,
+                 nparts: int | None = None, partial: bool = False,
+                 transport: str | None = None):
+        self.child = child
+        self.keys = tuple(keys)  # ((name, Expr), ...)
+        self.aggs = tuple(aggs)  # ((name, AggExpr), ...)
+        self.nparts = nparts
+        self.partial = partial
+        self.transport = transport
+
+    def children(self):
+        return [self.child]
+
+    def with_children(self, kids):
+        return Aggregate(kids[0], self.keys, self.aggs, self.nparts,
+                         self.partial, self.transport)
+
+    def _compute_schema(self):
+        base = self.child.schema()
+        fields = [(n, e.dtype(base)) for n, e in self.keys]
+        fields += [(n, a.dtype(base)) for n, a in self.aggs]
+        return Schema(fields)
+
+    def describe(self):
+        parts = [f"keys=[{_fmt_named(self.keys)}]",
+                 f"aggs=[{_fmt_named(self.aggs)}]",
+                 f"combine={'map_side' if self.partial else 'none'}"]
+        if self.transport:
+            parts.append(f"transport={self.transport}")
+        return f"Aggregate[{', '.join(parts)}]"
+
+
+class Join(Plan):
+    """Inner equi-join on shared column names. Output: the key columns,
+    then the left side's remaining columns, then the right side's."""
+
+    def __init__(self, left: Plan, right: Plan, on: Iterable[str],
+                 nparts: int | None = None, how: str = "inner",
+                 transport: str | None = None):
+        self.left = left
+        self.right = right
+        self.on = tuple(on)
+        self.nparts = nparts
+        self.how = how
+        self.transport = transport
+
+    def children(self):
+        return [self.left, self.right]
+
+    def with_children(self, kids):
+        return Join(kids[0], kids[1], self.on, self.nparts, self.how,
+                    self.transport)
+
+    def rest_names(self, side: Plan) -> tuple:
+        return tuple(n for n in side.schema().names if n not in self.on)
+
+    def _compute_schema(self):
+        ls, rs = self.left.schema(), self.right.schema()
+        for n in self.on:
+            if ls.dtype_of(n) != rs.dtype_of(n):
+                raise TypeError(
+                    f"join key {n!r} dtypes differ: "
+                    f"{ls.dtype_of(n)} vs {rs.dtype_of(n)}")
+        lrest = self.rest_names(self.left)
+        rrest = self.rest_names(self.right)
+        clash = set(lrest) & set(rrest)
+        if clash:
+            raise ValueError(f"join sides share non-key columns "
+                             f"{sorted(clash)}; rename before joining")
+        fields = [(n, ls.dtype_of(n)) for n in self.on]
+        fields += [(n, ls.dtype_of(n)) for n in lrest]
+        fields += [(n, rs.dtype_of(n)) for n in rrest]
+        return Schema(fields)
+
+    def describe(self):
+        parts = [f"on=[{', '.join(self.on)}]", f"how={self.how}"]
+        if self.transport:
+            parts.append(f"transport={self.transport}")
+        return f"Join[{', '.join(parts)}]"
+
+
+class Cached(Plan):
+    """DataFrame.cache(): materialize THIS subtree's lowered lineage
+    (RDD.cache underneath) on first evaluation; every query derived from
+    the cached frame replans from the one materialization. The node is an
+    OPTIMIZER BARRIER — pushing filters/pruning below it would specialize
+    the materialization per derived query and no two queries would ever
+    share it."""
+
+    def __init__(self, child: Plan):
+        self.child = child
+
+    def children(self):
+        return [self.child]
+
+    def with_children(self, kids):
+        return Cached(kids[0])
+
+    def _compute_schema(self):
+        return self.child.schema()
+
+    def describe(self):
+        return "Cached[]"
+
+
+class Sort(Plan):
+    """Total order over the full result — a FINAL operator; the engine
+    stays unordered and the driver applies the order (with a
+    per-partition top-n when a Limit sits directly above)."""
+
+    def __init__(self, child: Plan, keys: Iterable):
+        self.child = child
+        self.keys = tuple(keys)  # ((Expr, ascending), ...)
+
+    def children(self):
+        return [self.child]
+
+    def with_children(self, kids):
+        return Sort(kids[0], self.keys)
+
+    def _compute_schema(self):
+        base = self.child.schema()
+        for e, _ in self.keys:
+            e.dtype(base)  # validate references
+        return base
+
+    def describe(self):
+        keys = ", ".join(f"{e.sql()} {'asc' if asc else 'desc'}"
+                         for e, asc in self.keys)
+        return f"Sort[{keys}]"
+
+
+class Limit(Plan):
+    def __init__(self, child: Plan, n: int):
+        self.child = child
+        self.n = n
+
+    def children(self):
+        return [self.child]
+
+    def with_children(self, kids):
+        return Limit(kids[0], self.n)
+
+    def _compute_schema(self):
+        return self.child.schema()
+
+    def describe(self):
+        return f"Limit[{self.n}]"

@@ -70,7 +70,7 @@ def test_pack_batch_is_deterministic():
     [("a", 1), ("b", "two")],          # ragged value column
     [(1, 1), (1.0, 2)],                # int vs float keys
     [(1, 1), (True, 2)],               # int vs bool keys
-    [("k", [1, 2])],                   # list values have no schema
+    [("k", [1, "two"])],               # mixed-element lists have no schema
     [("k", None)],                     # NoneType has no schema
     [(("a", 1), 1), (("a", 1, 2), 2)],  # mixed tuple arity
     [(2**70, 1)],                      # beyond int64
@@ -164,6 +164,66 @@ def test_column_codec_roundtrip_property(values):
     schema = serde.column_schema(values)
     if schema is None:
         return  # ragged — the batch layer falls back, nothing to check
+    blob = serde.encode_column(schema, values)
+    assert serde.decode_column(schema, blob, len(values)) == values
+    sizes = serde.column_value_sizes(schema, values)
+    assert len(sizes) == len(values)
+
+
+# ----------------------------------------------------- list-typed columns
+
+
+def test_list_values_use_columnar_framing():
+    """groupByKey output re-shuffled downstream: (key, value-list) records
+    now frame as typed columns (the "l(...)" codec) instead of falling
+    back to pickle."""
+    records = [(i % 4, [j * 3 for j in range(i % 5)]) for i in range(200)]
+    bodies, out = roundtrip(records)
+    assert all(is_columnar(b) for b in bodies)
+    assert out == records
+
+
+def test_declared_schema_skips_sniffing_and_survives_violation():
+    """A plan-declared (key, value) schema packs without per-batch type
+    sniffing; records violating the declaration (int64 overflow) fall
+    back safely and still round-trip."""
+    records = [((i,), (i, float(i))) for i in range(50)]
+    bodies, out = roundtrip(records, schema=("t(i)", "t(i,f)"))
+    assert all(is_columnar(b) for b in bodies)
+    assert out == records
+    # identical to what sniffing would produce: same wire bytes
+    assert pack_batch(records) == pack_batch(records,
+                                             schema=("t(i)", "t(i,f)"))
+    overflow = [((1,), (2**70, 0.0))]
+    bodies, out = roundtrip(overflow, schema=("t(i)", "t(i,f)"))
+    assert out == overflow  # fallback path, still exact
+
+
+@given(st.lists(st.tuples(
+    st.integers(min_value=0, max_value=9),
+    st.lists(st.one_of(st.integers(min_value=-2**31, max_value=2**31),
+                       st.text(max_size=6)), max_size=6)),
+    min_size=1, max_size=40))
+@settings(max_examples=120, deadline=None)
+def test_ragged_list_roundtrip_property(records):
+    """Property: ragged lists (mixed lengths, empty lists, int or str
+    elements, mixed across records) always round-trip exactly — columnar
+    when the flattened elements are homogeneous, pickle fallback when
+    not."""
+    bodies, out = roundtrip(records)
+    assert out == records
+    assert [type(v) for _, v in out] == [list] * len(records)
+
+
+@given(st.lists(st.lists(st.lists(st.integers(min_value=0, max_value=99),
+                                  max_size=4), max_size=3),
+                min_size=1, max_size=20))
+@settings(max_examples=60, deadline=None)
+def test_nested_list_column_codec_property(values):
+    schema = serde.column_schema(values)
+    if schema is None:
+        return
+    assert schema in ("l()", "l(l())", "l(l(i))")
     blob = serde.encode_column(schema, values)
     assert serde.decode_column(schema, blob, len(values)) == values
     sizes = serde.column_value_sizes(schema, values)

@@ -241,7 +241,6 @@ def test_pipelined_cost_report_still_pay_as_you_go():
     wordcount(ctx)
     rep = ctx.cost_report()
     assert rep["lambda_requests"] >= 7
-    shuffle_requests = (rep["sqs_requests"]
-                        if ctx.config.shuffle_backend == "sqs"
-                        else rep["s3_lists"])
+    # "auto" default: the planner resolves the transport per shuffle
+    shuffle_requests = rep["sqs_requests"] + rep["s3_lists"]
     assert shuffle_requests > 0 and rep["total_usd"] > 0

@@ -1,0 +1,248 @@
+"""Golden plan-shape tests for the DataFrame optimizer.
+
+Each rule gets a deterministic before/after `explain()` comparison:
+predicate pushdown through Project / below Join / below Aggregate (and
+the cases that must BLOCK it — non-deterministic expressions, predicates
+on aggregate outputs), projection pruning into the scan and below
+shuffles, limit combining, partial-aggregation selection, and the
+cost-model transport choice. Golden strings pin the exact tree;
+regressions in rule order or formatting fail loudly.
+"""
+
+import textwrap
+
+import pytest
+
+from repro.core import FlintConfig, FlintContext
+from repro.sql import (Schema, col, collect_list, count_, lit, max_, min_,
+                       sum_, udf)
+
+TAXI = Schema([
+    ("pickup", "str"), ("dropoff", "str"), ("dropoff_lon", "float"),
+    ("dropoff_lat", "float"), ("trip_miles", "float"),
+    ("payment_type", "str"), ("tip", "float"), ("total", "float"),
+    ("precip", "float"), ("color", "str"),
+])
+
+CSV_ROW = "2015-01-02 03:04:00,2015-01-02 04:04:00,-74.0,40.7,1.5,credit,1.25,7.0,0.0,yellow\n"
+
+
+def _ctx(**kw):
+    # goldens pin the "auto" transport choice; keep them independent of
+    # the CI matrix's FLINT_SHUFFLE_BACKEND env default
+    kw.setdefault("shuffle_backend", "auto")
+    ctx = FlintContext("flint", FlintConfig(concurrency=4, **kw))
+    ctx.upload("taxi.csv", (CSV_ROW * 50).encode())
+    return ctx
+
+
+def golden(text: str) -> str:
+    return textwrap.dedent(text).strip()
+
+
+# -------------------------------------------------- pushdown + pruning
+
+
+def test_filter_pushes_through_project_and_prunes_scan():
+    df = _ctx().read_csv("taxi.csv", TAXI, 4)
+    q = (df.withColumn("hour", col("pickup").substr(12, 2))
+           .withColumn("tip_cents", (col("tip") * lit(100.0)).cast("int"))
+           .where(col("payment_type") == lit("credit"))
+           .groupBy("hour")
+           .agg(sum_(col("tip_cents")).alias("tips"),
+                count_().alias("n")))
+    assert q.explain() == golden("""
+        Aggregate[keys=[hour], aggs=[tips:=sum(tip_cents), n:=count(*)], combine=map_side, transport=sqs]
+          Project[hour:=substr(pickup, 12, 2), tip_cents:=cast((tip * 100.0) as int)]
+            Filter[(payment_type = 'credit')]
+              Scan[taxi.csv, cols=[pickup, payment_type, tip], parts=4]
+    """)
+    # the raw plan keeps the user's op order and the full scan
+    assert q.explain(optimize=False) == golden("""
+        Aggregate[keys=[hour], aggs=[tips:=sum(tip_cents), n:=count(*)], combine=none]
+          Filter[(payment_type = 'credit')]
+            Project[pickup, dropoff, dropoff_lon, dropoff_lat, trip_miles, payment_type, tip, total, precip, color, hour, tip_cents:=cast((tip * 100.0) as int)]
+              Project[pickup, dropoff, dropoff_lon, dropoff_lat, trip_miles, payment_type, tip, total, precip, color, hour:=substr(pickup, 12, 2)]
+                Scan[taxi.csv, cols=[pickup, dropoff, dropoff_lon, dropoff_lat, trip_miles, payment_type, tip, total, precip, color], parts=4]
+    """)
+
+
+def test_filter_splits_below_join_by_side():
+    ctx = _ctx()
+    left = (ctx.parallelize([(1, "x", 2)], 2)
+            .toDF([("k", "int"), ("ls", "str"), ("lv", "int")]))
+    right = (ctx.parallelize([(1, 5)], 2)
+             .toDF([("k", "int"), ("rv", "int")]))
+    q = (left.join(right, on="k")
+         .where((col("lv") > lit(1)) & (col("rv") < lit(9))
+                & (col("k") != lit(0))))
+    # lv-conjunct -> left, rv-conjunct -> right, key-only conjunct -> BOTH
+    # (ls stays: it is part of the join's output)
+    assert q.explain() == golden("""
+        Join[on=[k], how=inner, transport=sqs]
+          Filter[((lv > 1) and (k != 0))]
+            RddScan[cols=[k, ls, lv], parts=2]
+          Filter[((rv < 9) and (k != 0))]
+            RddScan[cols=[k, rv], parts=2]
+    """)
+    # selecting away ls narrows the left shuffle input below the filter
+    q2 = q.select("k", "lv", "rv")
+    assert q2.explain() == golden("""
+        Project[k, lv, rv]
+          Join[on=[k], how=inner, transport=sqs]
+            Project[k, lv]
+              Filter[((lv > 1) and (k != 0))]
+                RddScan[cols=[k, ls, lv], parts=2]
+            Filter[((rv < 9) and (k != 0))]
+              RddScan[cols=[k, rv], parts=2]
+    """)
+
+
+def test_filter_on_keys_pushes_below_aggregate_but_agg_output_stays():
+    ctx = _ctx()
+    df = (ctx.parallelize([(1, 2)], 2)
+          .toDF([("k", "int"), ("v", "int")]))
+    q = (df.groupBy("k").agg(sum_(col("v")).alias("total"))
+         .where((col("k") > lit(0)) & (col("total") > lit(10))))
+    assert q.explain() == golden("""
+        Filter[(total > 10)]
+          Aggregate[keys=[k], aggs=[total:=sum(v)], combine=map_side, transport=sqs]
+            Filter[(k > 0)]
+              RddScan[cols=[k, v], parts=2]
+    """)
+
+
+def test_nondeterministic_predicate_blocks_pushdown():
+    ctx = _ctx()
+    df = (ctx.parallelize([(1, 2)], 2)
+          .toDF([("k", "int"), ("v", "int")]))
+    flaky = udf(lambda v: v > 0, "bool", name="flaky",
+                deterministic=False)
+    # non-deterministic predicate stays ABOVE the project
+    q = df.select("k", (col("v") * lit(2)).alias("w")) \
+          .where(flaky(col("w")))
+    assert q.explain() == golden("""
+        Filter[flaky!(w)]
+          Project[k, w:=(v * 2)]
+            RddScan[cols=[k, v], parts=2]
+    """)
+    # ... and a deterministic predicate over a NON-deterministic projected
+    # column is blocked too (substitution would re-evaluate the udf)
+    rnd = udf(lambda k: k * 3, "int", name="rnd", deterministic=False)
+    q2 = df.select("k", rnd(col("k")).alias("r")).where(col("r") > lit(0))
+    assert q2.explain() == golden("""
+        Filter[(r > 0)]
+          Project[k, r:=rnd!(k)]
+            RddScan[cols=[k, v], parts=2]
+    """)
+
+
+def test_pruning_drops_unused_aggregates_and_narrows_join_inputs():
+    ctx = _ctx()
+    df = (ctx.parallelize([(1, "x", 2, 3)], 2)
+          .toDF([("k", "int"), ("s", "str"), ("v", "int"), ("w", "int")]))
+    q = (df.groupBy("k")
+           .agg(sum_(col("v")).alias("sv"), sum_(col("w")).alias("sw"),
+                max_(col("s")).alias("ms"))
+           .select("k", "sv"))
+    # sw/ms are never used: dropped, and the scan narrows to k,v
+    assert q.explain() == golden("""
+        Project[k, sv]
+          Aggregate[keys=[k], aggs=[sv:=sum(v)], combine=map_side, transport=sqs]
+            Project[k, v]
+              RddScan[cols=[k, s, v, w], parts=2]
+    """)
+
+
+# ------------------------------------------------- partial-agg selection
+
+
+def test_collect_list_blocks_map_side_combine():
+    ctx = _ctx()
+    df = (ctx.parallelize([(1, 2)], 2)
+          .toDF([("k", "int"), ("v", "int")]))
+    alg = df.groupBy("k").agg(sum_(col("v")).alias("t"),
+                              min_(col("v")).alias("lo"),
+                              max_(col("v")).alias("hi"),
+                              count_().alias("n"))
+    assert "combine=map_side" in alg.explain()
+    mixed = df.groupBy("k").agg(sum_(col("v")).alias("t"),
+                                collect_list(col("v")).alias("vs"))
+    assert "combine=none" in mixed.explain()
+
+
+# ----------------------------------------------------------- limits
+
+
+def test_adjacent_limits_combine_and_topn_plan_shape():
+    ctx = _ctx()
+    df = (ctx.parallelize([(i, i) for i in range(20)], 2)
+          .toDF([("k", "int"), ("v", "int")]))
+    q = df.limit(7).limit(3)
+    assert q.explain() == golden("""
+        Limit[3]
+          RddScan[cols=[k, v], parts=2]
+    """)
+    topn = df.orderBy("v", ascending=False).limit(2)
+    assert topn.explain() == golden("""
+        Limit[2]
+          Sort[v desc]
+            RddScan[cols=[k, v], parts=2]
+    """)
+    assert topn.collect() == [(19, 19), (18, 18)]
+
+
+def test_transformations_after_final_operators_raise():
+    ctx = _ctx()
+    df = (ctx.parallelize([(1, 2)], 2)
+          .toDF([("k", "int"), ("v", "int")]))
+    with pytest.raises(ValueError, match="final"):
+        df.limit(1).select("k")
+    with pytest.raises(ValueError, match="final"):
+        df.orderBy("k").where(col("k") > lit(0))
+
+
+# --------------------------------------------------- transport choice
+
+
+def test_cost_model_picks_sqs_small_and_s3_large():
+    ctx = _ctx()  # "auto" via _ctx
+    small = ctx.read_csv("taxi.csv", TAXI, 4)
+    q = small.groupBy("color").agg(count_().alias("n"))
+    assert "transport=sqs" in q.explain()
+
+    ctx.upload("big.csv", (CSV_ROW * 400_000).encode())  # ~36 MB
+    big = ctx.read_csv("big.csv", TAXI, 2)
+    q2 = big.groupBy("pickup").agg(sum_(col("total")).alias("t"),
+                                   min_(col("dropoff")).alias("d"))
+    assert "transport=s3" in q2.explain()
+
+
+def test_pinned_backend_skips_transport_choice():
+    ctx = _ctx(shuffle_backend="s3")
+    df = ctx.read_csv("taxi.csv", TAXI, 4)
+    q = df.groupBy("color").agg(count_().alias("n"))
+    assert "transport=" not in q.explain()  # runtime default applies
+
+
+# ----------------------------------------------------------- API guards
+
+
+def test_api_validation_errors():
+    ctx = _ctx()
+    df = (ctx.parallelize([(1, 2)], 2)
+          .toDF([("k", "int"), ("v", "int")]))
+    with pytest.raises(KeyError, match="nope"):
+        df.select("nope")
+    with pytest.raises(ValueError, match="alias"):
+        df.select(col("k") + lit(1))
+    with pytest.raises(ValueError, match="duplicate"):
+        df.groupBy("k").agg(sum_(col("v")), sum_(col("v")))
+    with pytest.raises(ValueError, match="inner"):
+        df.join(df, on="k", how="left")
+    other = (ctx.parallelize([(1, 2)], 2)
+             .toDF([("k", "int"), ("v", "int")]))
+    with pytest.raises(ValueError, match="share non-key"):
+        df.join(other, on="k").schema
+    with pytest.raises(TypeError, match="not.*boolean|boolean"):
+        df.where(col("k") + lit(1)).schema
