@@ -36,8 +36,17 @@
    the optimized plan shuffles STRICTLY fewer bytes than the naive
    lowering on both queries, and zero leaked keys/queues.
 
-``--quick`` runs a reduced-size pass of (1), (2), (5) and (6) with hard
-assertions — the CI smoke gate for transport regressions.
+7. CHAOS A/B (docs/fault_tolerance.md): the groupBy on BOTH serverless
+   transports under a composite fault schedule — 5 % transient service
+   errors on every S3/SQS call, one invocation timeout that lands a
+   partial flush, and one lost durable exchange object. Hard gates:
+   results identical to the fault-free reference on both transports,
+   zero leaked keys/queues, and chaos-run cost within 2x of fault-free
+   (failed 5xx attempts bill nothing; recovery re-bills only work that
+   actually ran).
+
+``--quick`` runs a reduced-size pass of (1), (2), (5), (6) and (7) with
+hard assertions — the CI smoke gate for transport regressions.
 """
 
 from __future__ import annotations
@@ -46,7 +55,7 @@ import os
 import sys
 import time
 
-from repro.core import FlintConfig, FlintContext
+from repro.core import FaultPlan, FlintConfig, FlintContext
 from repro.data.synthetic import taxi_csv
 from repro.sql import Schema, col, count_, lit, sum_
 
@@ -443,6 +452,55 @@ def run_sql_ab(rows=None):
     return out, agreement
 
 
+def run_chaos_ab(rows=None):
+    """Fault-free reference vs composite chaos schedule (5 % transient
+    errors + one invocation timeout + one lost exchange object) on both
+    serverless transports. Hard gates: identical results, zero leaks,
+    chaos cost <= 2x fault-free. Returns (per-run rows, identical)."""
+    data = taxi_csv(rows or N_ROWS, seed=13)
+    chaos = FaultPlan(seed=1337,
+                      s3_error_prob=0.05, sqs_error_prob=0.05,
+                      tasks={(0, 0): {"timeout_after_records": 300}},
+                      lose_keys=("_exchange/",))
+    out = []
+    identical = True
+    for backend in ("sqs", "s3"):
+        answers = []
+        costs = {}
+        for plan in (None, chaos):
+            label = "chaos" if plan is not None else "none"
+            ctx = FlintContext(
+                "flint",
+                FlintConfig(concurrency=16, flush_records=2000,
+                            shuffle_backend=backend,
+                            visibility_timeout_s=1.0,
+                            drain_timeout_s=2.0,
+                            max_stage_retries=5),
+                fault_plan=plan, elastic_retries=0)
+            ctx.upload("taxi.csv", data)
+            t0 = time.monotonic()
+            ans = groupby_query(ctx)
+            wall = time.monotonic() - t0
+            rep = ctx.cost_report()
+            costs[label] = rep["total_usd"]
+            assert_no_leaks(ctx)
+            sched = ctx.last_scheduler
+            out.append({
+                "backend": backend, "faults": label,
+                "wall_s": round(wall, 4),
+                "total_usd": round(rep["total_usd"], 6),
+                "service_faults": rep["service_faults"],
+                "injector": dict(sched.faults.stats),
+                "recovery": dict(sched.recovery_stats),
+            })
+            answers.append(sorted(ans))
+        identical = identical and answers[0] == answers[1]
+        assert costs["chaos"] <= 2 * costs["none"], \
+            f"{backend}: chaos run cost {costs['chaos']} exceeds 2x " \
+            f"fault-free {costs['none']}"
+    return out, identical
+
+
 def _print_transport_rows(rows, agreement):
     print("workload,backend,wall_s,modeled_service_s,total_usd,"
           "shuffle_requests,shuffled_bytes")
@@ -496,6 +554,13 @@ def main(argv=None):
               f"{r['lambda_requests']},{r['total_usd']}")
     print(f"# sql optimized/naive cells agree: {sql_agreement}")
 
+    chaos_rows, chaos_identical = run_chaos_ab(rows)
+    print("backend,faults,wall_s,total_usd,service_faults,recovery")
+    for r in chaos_rows:
+        print(f"{r['backend']},{r['faults']},{r['wall_s']},"
+              f"{r['total_usd']},{r['service_faults']},{r['recovery']}")
+    print(f"# chaos runs identical to fault-free: {chaos_identical}")
+
     # hard gates — make transport regressions fail loudly (CI --quick)
     assert agreement, "transports disagree on query results"
     assert col_identical, "columnar framing changed query results"
@@ -505,6 +570,8 @@ def main(argv=None):
         "fan-out results differ across transports / CSE on-off"
     assert sql_agreement, \
         "sql results differ across transports / optimize on-off"
+    assert chaos_identical, \
+        "chaos runs differ from the fault-free reference"
     if quick:
         print("# quick smoke passed")
         return ab, agreement

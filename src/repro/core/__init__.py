@@ -41,6 +41,7 @@ from typing import Any
 from repro.core.costs import CostLedger, cluster_cost
 from repro.core.dag import build_plan
 from repro.core.executors import FlintConfig
+from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.queues import ObjectStoreSim
 from repro.core.rdd import RDD, ParallelCollection, Source
 from repro.core.cluster import ClusterScheduler
@@ -50,11 +51,12 @@ from repro.core.scheduler import FlintScheduler, StageFailure
 class FlintContext:
     def __init__(self, backend: str = "flint",
                  config: FlintConfig | None = None, *,
-                 fault_plan: dict | None = None,
+                 fault_plan: FaultPlan | dict | None = None,
                  elastic_retries: int = 2,
                  store: ObjectStoreSim | None = None,
                  verbose: bool = False):
         self.config = config or FlintConfig()
+        self.config.validate()  # reject incoherent resilience knobs early
         self.backend_name = backend
         self.ledger = CostLedger()
         self.store = store or ObjectStoreSim(self.ledger)
@@ -113,7 +115,11 @@ class FlintContext:
                    save_prefix: str | None = None,
                    limit: int | None = None) -> Any:
         mult = self.partition_multiplier
-        for attempt in range(self.elastic_retries + 1):
+        elastic_left = self.elastic_retries
+        # lost durable cache data is recovered by replanning the cached
+        # lineage from source — bounded like any stage resubmission
+        cache_replans_left = self.config.max_stage_retries
+        while True:
             plan = build_plan(rdd, action, save_prefix,
                               partition_multiplier=mult,
                               cse=self.config.plan_cse,
@@ -135,17 +141,32 @@ class FlintContext:
                 # elastic retry re-registers on the re-plan
                 self._unregister_pending_caches(plan)
                 if (e.error_type == "MemoryCapExceeded"
-                        and attempt < self.elastic_retries):
+                        and elastic_left > 0):
                     # the paper's elasticity move: more partitions, re-run
+                    elastic_left -= 1
                     mult *= 2
                     self.partition_multiplier = mult
                     if self.verbose:
                         print(f"[flint] memory cap hit -> partitions x{mult}")
                     continue
+                if (e.error_type == "LostCacheInput"
+                        and cache_replans_left > 0):
+                    # an acknowledged _cache/ batch vanished: retrying the
+                    # reading task cannot recreate durable data, so drop
+                    # the damaged materialization and replan — the next
+                    # plan rebuilds the cached lineage from source and
+                    # re-materializes it (docs/fault_tolerance.md)
+                    cache_replans_left -= 1
+                    token = (e.detail or {}).get("token", "")
+                    self._cache_index.pop(token, None)
+                    self.store.delete_prefix(f"_cache/{token}/")
+                    if self.verbose:
+                        print(f"[flint] cache {token or '?'} lost -> "
+                              f"replanning from source")
+                    continue
                 raise
             finally:
                 sched.shutdown()
-        raise AssertionError("unreachable")
 
     def _plan_cache_tokens(self, plan):
         return {arg[0] for stage in plan for task in stage.tasks
@@ -180,4 +201,5 @@ class FlintContext:
 
 
 __all__ = ["FlintContext", "FlintConfig", "FlintScheduler", "ClusterScheduler",
-           "CostLedger", "StageFailure", "build_plan"]
+           "CostLedger", "StageFailure", "FaultPlan", "FaultInjector",
+           "build_plan"]

@@ -111,6 +111,11 @@ class CostLedger:
     bytes_from_sqs: int = 0
     bytes_from_s3: int = 0
     bytes_to_s3: int = 0
+    # chaos bookkeeping: injected 5xx are NOT billed (AWS doesn't bill
+    # server errors) but the retries they force are — each retried call
+    # re-bills above. 429s never reach a container, so no GB-seconds.
+    service_faults: int = 0
+    lambda_throttles: int = 0
 
     def __post_init__(self):
         self._lock = threading.Lock()
@@ -165,6 +170,16 @@ class CostLedger:
         with self._lock:
             self.s3_deletes += 1
 
+    def add_service_fault(self):
+        """An injected transient service error (unbilled, counted)."""
+        with self._lock:
+            self.service_faults += 1
+
+    def add_lambda_throttle(self):
+        """A 429-rejected invocation: no container, no GB-seconds."""
+        with self._lock:
+            self.lambda_throttles += 1
+
     # ------------------------------------------------------------- report
     @property
     def lambda_usd(self) -> float:
@@ -215,4 +230,6 @@ class CostLedger:
             "bytes_from_sqs": self.bytes_from_sqs,
             "bytes_to_s3": self.bytes_to_s3,
             "bytes_from_s3": self.bytes_from_s3,
+            "service_faults": self.service_faults,
+            "lambda_throttles": self.lambda_throttles,
         }

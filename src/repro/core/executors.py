@@ -45,14 +45,36 @@ from repro.core.costs import (LAMBDA_PAYLOAD_LIMIT,
 from repro.core.dag import (CacheInput, CollectionInput, ShuffleRead,
                             SourceInput, TaskDef)
 from repro.core.queues import ObjectStoreSim, SQSSim
+from repro.core.retry import (RetryBudget, RetryBudgetExhausted,
+                              RetryExhausted, RetryingStore, RetryPolicy,
+                              TransientServiceError)
 from repro.core.shuffle import (TransportSet, pack_batch, queue_name,
                                 unpack_batch)
 from repro.core.shuffle.base import AbortedError  # noqa: F401 (re-export:
 #                       pre-subsystem callers import it from here)
+from repro.core.shuffle.base import LostShuffleInput
 
 
 class InjectedFailure(RuntimeError):
     pass
+
+
+class InvocationTimeout(RuntimeError):
+    """The invocation lease expired mid-task: the container is killed with
+    no final flush — whatever full batches already flushed are durable
+    (partial shuffle writes LAND), and the retry re-emits byte-identical
+    batches that downstream (src, seq) dedup absorbs."""
+
+
+class LostCacheInput(RuntimeError):
+    """A cache partition's manifest disagrees with the batches actually on
+    the store: a materialized batch was acknowledged and then lost.
+    Retrying the reading task cannot help — the context must replan and
+    re-materialize the cached lineage (docs/fault_tolerance.md)."""
+
+    def __init__(self, msg: str, token: str = ""):
+        super().__init__(msg)
+        self.detail = {"token": token}
 
 
 class MemoryCapExceeded(RuntimeError):
@@ -105,6 +127,19 @@ class FlintConfig:
     visibility_timeout_s: float = 10.0
     duplicate_prob: float = 0.0  # SQS at-least-once duplication rate
     chunk_fetch_bytes: int = 4 * 2**20
+    # --- resilience knobs (docs/fault_tolerance.md) ---
+    # lineage recovery: how many times one producing stage may be
+    # resubmitted to re-create permanently missing exchange/cache input
+    max_stage_retries: int = 2
+    # service-call retry layer: per-call attempt cap, decorrelated-jitter
+    # backoff bounds, and the job-wide retry budget
+    retry_max_attempts: int = 5
+    retry_base_s: float = 0.002
+    retry_cap_s: float = 0.05
+    retry_budget: int = 100_000
+    # scheduler dispatch backoff after a 429-throttled invocation
+    dispatch_backoff_base_s: float = 0.05
+    dispatch_backoff_cap_s: float = 1.0
 
     @property
     def fallback_backend(self) -> str:
@@ -114,6 +149,45 @@ class FlintConfig:
         the paper's SQS default."""
         return "sqs" if self.shuffle_backend == "auto" \
             else self.shuffle_backend
+
+    @property
+    def invocation_timeout_s(self) -> float:
+        """The Lambda lease: a task is killed this many seconds in."""
+        return self.time_limit_s
+
+    def validate(self):
+        """Reject incoherent resilience knobs at construction, mirroring
+        the scheduler's visibility_timeout_s < drain_timeout_s check."""
+        if self.retry_budget <= 0:
+            raise ValueError(
+                f"retry_budget must be > 0, got {self.retry_budget}")
+        if self.retry_max_attempts < 1:
+            raise ValueError(f"retry_max_attempts must be >= 1, got "
+                             f"{self.retry_max_attempts}")
+        if not 0 < self.retry_base_s <= self.retry_cap_s:
+            raise ValueError(
+                f"retry backoff must satisfy 0 < retry_base_s <= "
+                f"retry_cap_s, got base {self.retry_base_s} / cap "
+                f"{self.retry_cap_s}")
+        if not 0 < self.dispatch_backoff_base_s <= self.dispatch_backoff_cap_s:
+            raise ValueError(
+                f"dispatch backoff must satisfy 0 < base <= cap, got base "
+                f"{self.dispatch_backoff_base_s} / cap "
+                f"{self.dispatch_backoff_cap_s}")
+        if self.max_stage_retries < 0:
+            raise ValueError(f"max_stage_retries must be >= 0, got "
+                             f"{self.max_stage_retries}")
+        if self.drain_timeout_s >= self.invocation_timeout_s * self.lease_safety:
+            # a drain allowed to out-wait the invocation lease converts
+            # every slow producer into an invocation timeout instead of a
+            # clean drain timeout — the same shape of incoherence as
+            # visibility_timeout_s >= drain_timeout_s
+            raise ValueError(
+                f"drain_timeout_s ({self.drain_timeout_s}) must be < "
+                f"invocation_timeout_s * lease_safety "
+                f"({self.invocation_timeout_s} * {self.lease_safety}) or "
+                f"consumers time out their own invocation before the drain "
+                f"deadline can fire")
 
 
 # --------------------------------------------------------------- payloads
@@ -146,16 +220,25 @@ class LambdaSim:
 
     def __init__(self, cfg: FlintConfig, ledger: CostLedger,
                  store: ObjectStoreSim, sqs: SQSSim,
-                 transports: TransportSet | None = None):
+                 transports: TransportSet | None = None, *,
+                 faults=None, budget: RetryBudget | None = None):
         self.cfg = cfg
         self.ledger = ledger
         self.store = store
         self.sqs = sqs
         self.transports = transports or TransportSet(cfg, ledger, store, sqs)
+        # chaos admission hook (FaultInjector) + the executors' retrying
+        # view of the store: every in-task store access rides rstore so
+        # transient S3 errors are absorbed by the call-level retry layer
+        self.faults = faults
+        self.rstore = RetryingStore(store, RetryPolicy.from_config(
+            cfg, budget=budget))
         self._warm = 0
         self._lock = threading.Lock()
+        self._inflight = 0
         self.invocations = 0
         self.cold_starts = 0
+        self.throttles = 0
 
     def _acquire_container(self) -> bool:
         """Returns True on a cold start."""
@@ -172,11 +255,41 @@ class LambdaSim:
             self._warm += 1
 
     def invoke(self, payload: dict) -> dict:
+        # the account-concurrency gauge counts this invocation from request
+        # arrival (incremented BEFORE the admission check, so simultaneous
+        # dispatches see each other) until the response is produced
+        with self._lock:
+            self._inflight += 1
+            running = self._inflight
+        try:
+            return self._invoke(payload, running)
+        finally:
+            with self._lock:
+                self._inflight -= 1
+
+    def _invoke(self, payload: dict, running: int) -> dict:
+        if self.faults is not None:
+            # admission control BEFORE any container is acquired: a 429
+            # never runs (and never bills GB-seconds)
+            kind = self.faults.invoke_fault(
+                payload.get("stage", -1), payload.get("index", -1),
+                payload.get("attempt", 0), running)
+            if kind == "throttle":
+                with self._lock:
+                    self.throttles += 1
+                self.ledger.add_lambda_throttle()
+                return {"status": "throttled", "error_type": "Throttled",
+                        "error": "Rate exceeded (429)"}
         blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
         if len(blob) > LAMBDA_PAYLOAD_LIMIT:
             # paper §III-B: split/spill oversized payloads through S3
             key = f"_payload/{payload['stage']}/{payload['index']}/{time.monotonic_ns()}"
-            self.store.put(key, blob)
+            try:
+                self.rstore.put(key, blob)
+            except (RetryExhausted, RetryBudgetExhausted) as e:
+                # the invocation request itself failed — no container ran
+                return {"status": "error", "error_type": type(e).__name__,
+                        "error": str(e)}
             payload = {"spilled": key}
         cold = self._acquire_container()
         start = (self.cfg.cold_start_s if cold else self.cfg.warm_start_s)
@@ -185,13 +298,26 @@ class LambdaSim:
         t0 = time.monotonic()
         try:
             if "spilled" in payload:
-                payload = pickle.loads(self.store.get(payload["spilled"]))
+                payload = pickle.loads(self.rstore.get(payload["spilled"]))
+            if self.faults is not None:
+                t = self.faults.timeout_after(payload.get("stage", -1),
+                                              payload.get("index", -1),
+                                              payload.get("attempt", 0))
+                if t:
+                    payload = dict(payload, timeout_after_records=t)
             resp = executor_main(payload, self)
-        except (InjectedFailure, MemoryCapExceeded, AbortedError,
-                TimeoutError) as e:
+        except (InjectedFailure, InvocationTimeout, MemoryCapExceeded,
+                AbortedError, TimeoutError, KeyError, LostShuffleInput,
+                LostCacheInput, RetryExhausted, RetryBudgetExhausted,
+                TransientServiceError) as e:
             resp = {"status": "error", "error_type": type(e).__name__,
                     "error": str(e)}
+            detail = getattr(e, "detail", None)
+            if detail:
+                resp["detail"] = detail
         finally:
+            # billed for the time actually consumed — an invocation
+            # timeout bills what ran, not the full lease
             duration = time.monotonic() - t0 + start
             self.ledger.add_lambda(duration, self.cfg.memory_mb)
             self._release_container()
@@ -199,7 +325,12 @@ class LambdaSim:
         blob = pickle.dumps(resp, protocol=pickle.HIGHEST_PROTOCOL)
         if len(blob) > LAMBDA_PAYLOAD_LIMIT:
             key = f"_result/{time.monotonic_ns()}"
-            self.store.put(key, blob)
+            try:
+                self.rstore.put(key, blob)
+            except (RetryExhausted, RetryBudgetExhausted) as e:
+                return {"status": "error", "error_type": type(e).__name__,
+                        "error": str(e),
+                        "duration_s": resp["duration_s"]}
             resp = {"status": resp.get("status", "ok"), "spilled": key,
                     "duration_s": resp["duration_s"]}
         return resp
@@ -352,7 +483,7 @@ def _drain_shuffle(read: ShuffleRead, env: LambdaSim, n_producers: dict, *,
                                       consumer_group=consumer_group)
         agg: Any = {} if mode in ("agg", "group", "join") else []
         for _src, _seq, body in handle:
-            records = unpack_batch(body, env.store)
+            records = unpack_batch(body, env.rstore)
             stats["records"] += len(records)
             fold(agg, records, mode)
         stats["messages"] += handle.stats["messages"]
@@ -427,13 +558,35 @@ def _cache_tee(it, spec, store, cap=None):
         for seq, body in enumerate(bodies):
             digest = hashlib.sha1(body).hexdigest()[:12]
             store.put(f"{prefix}{seq:06d}-{digest}", body)
+        # batch-count manifest, written LAST: a reader can tell a lost
+        # batch (manifest disagrees with the store) from an unreadable or
+        # partial materialization. Deterministic across attempts — the
+        # sorted pack yields the same bodies every time.
+        store.put_obj(f"{prefix}manifest", len(bodies))
     return iter(records)
 
 
 def cache_partition_iter(inp: CacheInput, store):
-    """Read one materialized cache partition back (billed LIST + GETs)."""
-    for key in store.list(_cache_partition_prefix(inp.token, inp.nparts,
-                                                  inp.index)):
+    """Read one materialized cache partition back (billed LIST + GETs),
+    verifying the batch-count manifest first: an acknowledged-then-lost
+    batch (or a vanished manifest) raises LostCacheInput so the CONTEXT
+    replans the cached lineage — retrying the reading task cannot recreate
+    durable data that no longer exists."""
+    prefix = _cache_partition_prefix(inp.token, inp.nparts, inp.index)
+    expected = None
+    data_keys = []
+    for key in store.list(prefix):
+        if key.endswith("manifest"):
+            expected = store.get_obj(key)
+        else:
+            data_keys.append(key)
+    if expected != len(data_keys):
+        raise LostCacheInput(
+            f"cache partition {prefix} incomplete: manifest says "
+            f"{expected!r} batches, store holds {len(data_keys)} — a "
+            f"materialized batch was lost after being written",
+            token=inp.token)
+    for key in data_keys:
         yield from unpack_batch(store.get(key), store)
 
 
@@ -555,6 +708,7 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
     """The Lambda function body: deserialize task, build input iterator,
     run the pipeline, sink outputs, chain if the lease runs out."""
     fail_after = payload.get("fail_after_records")
+    timeout_after = payload.get("timeout_after_records")
     inject = payload.get("inject_failure")
     if inject:
         raise InjectedFailure(f"injected failure for task "
@@ -576,15 +730,15 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
 
     ack_shuffle = None
     if isinstance(inp, SourceInput):
-        reader = _SourceReader(inp, env.store, env.cfg,
+        reader = _SourceReader(inp, env.rstore, env.cfg,
                                payload.get("resume_offset"))
         base_iter = iter(reader)
     elif isinstance(inp, CollectionInput):
-        base_iter = iter(env.store.get_obj(f"{inp.key}/{inp.index}"))
+        base_iter = iter(env.rstore.get_obj(f"{inp.key}/{inp.index}"))
         reader = None
     elif isinstance(inp, CacheInput):
         # a cached lineage hit: the upstream stages were never planned
-        base_iter = cache_partition_iter(inp, env.store)
+        base_iter = cache_partition_iter(inp, env.rstore)
         reader = None
     else:
         base_iter, drain_stats, ack_shuffle = _shuffle_input_iter(
@@ -602,6 +756,14 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
                 n += 1
                 if fail_after and n > fail_after:
                     raise InjectedFailure("injected mid-task failure")
+                if timeout_after and n > timeout_after:
+                    # the simulated lease expiry: killed mid-flight with NO
+                    # final flush — only count-boundary flushes that
+                    # already happened are durable, so the retry's
+                    # byte-identical re-emission overlaps them exactly
+                    raise InvocationTimeout(
+                        f"invocation lease expired after {n} records "
+                        f"(simulated Lambda timeout)")
                 yield rec
                 if lease.consumed() and chainable:
                     exhausted["flag"] = True
@@ -611,7 +773,7 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
             # what it actually ingested, not just the last one
             stats["records_in"] = n
 
-    out_iter = _apply_ops(metered(), payload["ops"], env.store,
+    out_iter = _apply_ops(metered(), payload["ops"], env.rstore,
                           env.cfg.agg_memory_records)
 
     write = payload["write"]
@@ -655,7 +817,7 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
     resp = {"status": "ok", "stats": stats}
     if payload.get("save_prefix"):
         key = f"{payload['save_prefix']}/part-{payload['index']:05d}"
-        env.store.put(key, "\n".join(str(r) for r in result).encode())
+        env.rstore.put(key, "\n".join(str(r) for r in result).encode())
         resp["saved_key"] = key
     else:
         resp["result"] = result

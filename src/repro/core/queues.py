@@ -74,12 +74,15 @@ def eos_message(src: str, total: int) -> Message:
 
 
 class _QueueState:
-    __slots__ = ("visible", "inflight")
+    __slots__ = ("visible", "inflight", "delayed")
 
     def __init__(self):
         self.visible: deque[Message] = deque()
         self.inflight: dict[int, tuple[Message, float]] = {}  # receipt ->
         #                                           (message, visibility deadline)
+        # injected delivery delay: (deliver_at, message), moved to visible
+        # by the lazy sweep — SQS makes no latency promise
+        self.delayed: list[tuple[float, Message]] = []
 
 
 class SQSSim:
@@ -98,6 +101,9 @@ class SQSSim:
         self._cond = threading.Condition(self._lock)
         self._closed = False
         self.redeliveries = 0  # expired in-flight messages returned visible
+        # chaos hook: a FaultInjector installed by the scheduler for the
+        # duration of a run; consulted on every data-plane call
+        self.faults = None
 
     @property
     def closed(self) -> bool:
@@ -124,10 +130,17 @@ class SQSSim:
 
     def _sweep(self, q: _QueueState):
         """Lazy redelivery: return expired in-flight messages to the
-        visible set (their next receive bills fresh). Caller holds lock."""
+        visible set (their next receive bills fresh), and surface delayed
+        deliveries whose time has come. Caller holds lock."""
+        now = time.monotonic()
+        if q.delayed:
+            due = [m for t, m in q.delayed if t <= now]
+            if due:
+                q.delayed = [(t, m) for t, m in q.delayed if t > now]
+                q.visible.extend(due)
+                self._cond.notify_all()
         if not q.inflight:
             return
-        now = time.monotonic()
         expired = [r for r, (_, dl) in q.inflight.items() if dl <= now]
         for r in expired:
             msg, _ = q.inflight.pop(r)
@@ -145,7 +158,15 @@ class SQSSim:
             if len(m.body) > SQS_MESSAGE_LIMIT:
                 raise ValueError("SQS message exceeds 256 KiB")
             payload += len(m.body)
+        inj = self.faults
+        delay = 0.0
+        if inj is not None:
+            # an injected 5xx fails the request before anything is
+            # enqueued or billed (AWS does not bill server errors)
+            inj.sqs_call("send", name)
+            delay = inj.delivery_delay(name)
         self.ledger.add_sqs(payload)  # a rejected send still bills
+        deliver_at = time.monotonic() + delay if delay else 0.0
         with self._cond:
             q = self._queues.get(name)
             if q is None:
@@ -155,10 +176,17 @@ class SQSSim:
                 # NOT resurrect the queue and strand messages
                 return
             for m in messages:
-                q.visible.append(m)
+                if deliver_at:
+                    q.delayed.append((deliver_at, m))
+                else:
+                    q.visible.append(m)
                 # at-least-once: occasionally deliver a duplicate
                 if self._rng.random() < self.duplicate_prob:
-                    q.visible.append(Message(m.body, m.seq, m.src, m.kind))
+                    dup = Message(m.body, m.seq, m.src, m.kind)
+                    if deliver_at:
+                        q.delayed.append((deliver_at, dup))
+                    else:
+                        q.visible.append(dup)
             self._cond.notify_all()
 
     def _take_visible(self, q: _QueueState, max_messages: int
@@ -194,6 +222,10 @@ class SQSSim:
             q = self._queues.get(name)
             if q is None:
                 raise QueueGone(name)
+            if self.faults is not None:
+                # transient receive error: fails the request before any
+                # message is claimed, and before billing
+                self.faults.sqs_call("receive", name)
             out = self._take_visible(q, max_messages)
         if not out:
             self.ledger.add_sqs(1, receive=True)  # one empty receive
@@ -283,13 +315,28 @@ class ObjectStoreSim:
         self.ledger = ledger
         self._objects: dict[str, bytes] = {}
         self._lock = threading.Lock()
+        # chaos hook: a FaultInjector installed by the scheduler for the
+        # duration of a run; consulted on the billable data-plane calls
+        # (PUT/GET/LIST — never on deletes or metadata, so GC stays clean)
+        self.faults = None
 
     def put(self, key: str, data: bytes):
+        inj = self.faults
+        if inj is not None:
+            inj.s3_call("put", key)  # 5xx: nothing stored, nothing billed
         with self._lock:
             self._objects[key] = bytes(data)
         self.ledger.add_s3_put(len(data))
+        if inj is not None and inj.object_written(key):
+            # the durability fault: the write was ACKNOWLEDGED (billed,
+            # caller saw success) and the object silently vanishes
+            with self._lock:
+                self._objects.pop(key, None)
 
     def get(self, key: str, start: int = 0, end: int | None = None) -> bytes:
+        inj = self.faults
+        if inj is not None:
+            inj.s3_call("get", key)
         with self._lock:
             data = self._objects[key]
         out = data[start:end]
@@ -305,6 +352,8 @@ class ObjectStoreSim:
             return key in self._objects
 
     def list(self, prefix: str) -> list[str]:
+        if self.faults is not None:
+            self.faults.s3_call("list", prefix)
         self.ledger.add_s3_list()
         with self._lock:
             return sorted(k for k in self._objects if k.startswith(prefix))

@@ -56,6 +56,8 @@ import concurrent.futures as cf
 import heapq
 import itertools
 import pickle
+import random
+import re
 import threading
 import time
 from typing import Any
@@ -63,18 +65,39 @@ from typing import Any
 from repro.core.costs import CostLedger
 from repro.core.dag import ShuffleRead, StagePlan, TaskDef
 from repro.core.executors import FlintConfig, LambdaSim, serialize_task
+from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.queues import ObjectStoreSim, SQSSim
+from repro.core.retry import RetryBudget
 from repro.core.shuffle import TransportSet
 
 #: transient object-store prefixes swept by the job-end GC (the S3
 #: exchange's _exchange/ prefix is swept by its transport's gc())
 GC_PREFIXES = ("_spill/", "_payload/", "_result/")
 
+#: attempt number used for lineage-recovery replays: far past any real
+#: retry count, so targeted first-attempt faults (straggle_s,
+#: fail_after_records, probabilistic invocation timeouts) don't re-fire —
+#: while the task's shuffle identity (src = stage/index) stays unchanged,
+#: keeping the replay's re-emission byte-identical for downstream dedup
+_REPLAY_ATTEMPT = 1_000_000
+
 
 class StageFailure(RuntimeError):
-    def __init__(self, msg, error_type=""):
+    """A stage cannot make progress. Structured so callers branch on the
+    ROOT CAUSE instead of parsing message text: ``error_type`` carries the
+    executor-side exception class name, ``retryable`` whether a coarser
+    recovery above the scheduler (elastic re-plan, cache
+    re-materialization) could still succeed."""
+
+    def __init__(self, msg, error_type="", *, stage_id=None,
+                 task_index=None, attempts=0, retryable=False, detail=None):
         super().__init__(msg)
         self.error_type = error_type
+        self.stage_id = stage_id
+        self.task_index = task_index
+        self.attempts = attempts
+        self.retryable = retryable
+        self.detail = detail or {}
 
 
 def _consumed_shuffles(stage: StagePlan) -> set[int]:
@@ -90,6 +113,7 @@ class FlintScheduler:
                  store: ObjectStoreSim | None = None, *,
                  fault_plan: dict | None = None, verbose: bool = False,
                  cache_index: dict | None = None):
+        cfg.validate()
         if (cfg.shuffle_backend in ("sqs", "auto")
                 and cfg.visibility_timeout_s >= cfg.drain_timeout_s):
             # otherwise a retried consumer times out waiting for its dead
@@ -104,16 +128,33 @@ class FlintScheduler:
         self.store = store or ObjectStoreSim(self.ledger)
         self.sqs = SQSSim(self.ledger, duplicate_prob=cfg.duplicate_prob,
                           visibility_timeout=cfg.visibility_timeout_s)
+        # the chaos layer: one seeded injector consulted by every service
+        # sim, one job-wide retry budget every retry layer draws from
+        plan = FaultPlan.coerce(fault_plan)
+        self.faults = FaultInjector(plan, self.ledger)
+        self.retry_budget = RetryBudget(cfg.retry_budget)
+        if plan.has_service_faults:
+            self.store.faults = self.faults
+            self.sqs.faults = self.faults
         self.transports = TransportSet(cfg, self.ledger, self.store,
-                                       self.sqs)
+                                       self.sqs, budget=self.retry_budget)
         self.lam = LambdaSim(cfg, self.ledger, self.store, self.sqs,
-                             self.transports)
+                             self.transports,
+                             faults=None if plan.empty else self.faults,
+                             budget=self.retry_budget)
         self.pool = cf.ThreadPoolExecutor(max_workers=cfg.concurrency)
-        # fault_plan: {(stage, index): {"fail_attempts": n} | {"straggle_s": s}
-        #             | {"fail_after_records": n} | {"fail_on_link": k}}
-        self.fault_plan = fault_plan or {}
         self.verbose = verbose
         self.stage_stats: list[dict] = []
+        # recovery bookkeeping: 429 re-dispatches, lost-input detections,
+        # and lineage resubmissions (docs/fault_tolerance.md)
+        self.recovery_stats = {"throttled": 0, "lost_inputs": 0,
+                               "stage_resubmits": 0, "replayed_tasks": 0}
+        self._dispatch_sleep = 0.0  # decorrelated-jitter state, 0 = idle
+        self._backoff_rng = random.Random(plan.seed ^ 0x5DEECE66D)
+        self._stage_retries: dict[int, int] = {}  # stage idx -> resubmits
+        self._stages: list[StagePlan] = []
+        self._producer_stage_of: dict[int, int] = {}
+        self._stage_done: list[bool] = []
         self._lock = threading.Lock()
         # shuffle_id -> (producer nparts, transport name); set per run()
         self._sid_meta: dict[int, tuple[int, str]] = {}
@@ -131,6 +172,12 @@ class FlintScheduler:
 
     # ------------------------------------------------------------------
     def run(self, stages: list[StagePlan]):
+        self._stages = stages
+        self._stage_done = [False] * len(stages)
+        self._stage_retries = {}
+        self._producer_stage_of = {
+            s.write.shuffle_id: si for si, s in enumerate(stages)
+            if s.write is not None}
         self._sid_meta = {
             s.write.shuffle_id:
                 (s.write.nparts,
@@ -206,6 +253,7 @@ class FlintScheduler:
                 if stage.write is not None:
                     self._open_shuffle(stage.write)
                 result = self._run_stage(stage)
+                self._stage_done[si] = True
                 # channels whose last consumer just finished are dead
                 self._consumer_stage_done(si, stage)
         except BaseException:
@@ -220,7 +268,7 @@ class FlintScheduler:
     def _payload_for(self, task: TaskDef, stage: StagePlan, attempt: int,
                      extra: dict | None = None) -> dict:
         extra = dict(extra or {})
-        fault = self.fault_plan.get((task.stage_id, task.index), {})
+        fault = self.faults.task_fault(task.stage_id, task.index)
         if fault.get("fail_attempts", 0) > attempt:
             extra["inject_failure"] = True
         if fault.get("straggle_s") and attempt == 0 \
@@ -244,6 +292,222 @@ class FlintScheduler:
             extra["save_prefix"] = stage.save_prefix
         return serialize_task(task, attempt, extra)
 
+    # -------------------------------------------- failure triage + recovery
+    def _task_failure(self, stage, idx, n_attempts, resp, *,
+                      retryable=False) -> StageFailure:
+        return StageFailure(
+            f"task {stage.id}/{idx} failed after {n_attempts} attempt(s): "
+            f"{resp.get('error')}",
+            error_type=resp.get("error_type", ""),
+            stage_id=stage.id, task_index=idx, attempts=n_attempts,
+            retryable=retryable, detail=resp.get("detail"))
+
+    def _on_task_error(self, stage, task, resp, attempts_map):
+        """Shared failure triage for both scheduler modes and the replay
+        path. Returns after deciding the task should run again (charging a
+        retry attempt unless the failure was a recovered lost input —
+        those are the INPUT's fault, bounded by the stage-resubmission
+        budget instead); raises a structured StageFailure when the cause
+        is terminal at this layer."""
+        err = resp.get("error_type", "")
+        idx = task.index
+        if err == "MemoryCapExceeded":
+            # retryable=True: the context's answer is elasticity — raise
+            # the partition count and re-plan (message kept verbatim)
+            raise StageFailure(resp.get("error", ""),
+                               error_type="MemoryCapExceeded",
+                               stage_id=stage.id, task_index=idx,
+                               attempts=attempts_map[idx] + 1,
+                               retryable=True)
+        if err == "RetryBudgetExhausted":
+            # the job-wide budget is gone; any further attempt would just
+            # trip it again on its first service call
+            raise self._task_failure(stage, idx, attempts_map[idx] + 1, resp)
+        if err == "LostCacheInput":
+            # durable cache data is gone — only the context can replan the
+            # cached lineage and re-materialize (detail carries the token)
+            raise self._task_failure(stage, idx, attempts_map[idx] + 1,
+                                     resp, retryable=True)
+        if self._is_lost_input(task, err):
+            self.recovery_stats["lost_inputs"] += 1
+            if self._recover_lost_input(task, resp.get("detail")):
+                return  # input re-created — rerun without charging the task
+            raise self._task_failure(
+                stage, idx, attempts_map[idx] + 1,
+                dict(resp, error=f"{resp.get('error')} [stage-resubmission "
+                     f"budget exhausted: max_stage_retries="
+                     f"{self.cfg.max_stage_retries}]"))
+        attempts_map[idx] += 1
+        if attempts_map[idx] > self.cfg.max_task_retries:
+            raise self._task_failure(stage, idx, attempts_map[idx], resp)
+
+    def _is_lost_input(self, task: TaskDef, err_type: str) -> bool:
+        """LostShuffleInput is conclusive on its own — the drain proved the
+        producer quorum complete with advertised data absent. A bare drain
+        TimeoutError only means lost input once every producing stage
+        finished; before that it is an ordinary slow/failed producer and
+        task retry is the right tool."""
+        if not isinstance(task.input, ShuffleRead):
+            return False
+        if err_type == "LostShuffleInput":
+            return True
+        if err_type != "TimeoutError":
+            return False
+        return all(self._stage_done[self._producer_stage_of[sid]]
+                   for sid, _ in task.input.parts
+                   if sid in self._producer_stage_of)
+
+    def _next_dispatch_backoff(self) -> float:
+        """Decorrelated-jitter pause before re-dispatching a 429-throttled
+        invocation; grows while throttles keep coming, resets to idle on
+        the next successful completion."""
+        base = self.cfg.dispatch_backoff_base_s
+        prev = self._dispatch_sleep or base
+        self._dispatch_sleep = min(self.cfg.dispatch_backoff_cap_s,
+                                   self._backoff_rng.uniform(base, prev * 3))
+        return self._dispatch_sleep
+
+    def _recover_lost_input(self, task: TaskDef, detail=None) -> bool:
+        """Lineage-based recovery (docs/fault_tolerance.md): the consumer
+        proved its shuffle input permanently gone, so re-execute producing
+        tasks from lineage, exactly as the paper's driver would.
+
+        TARGETED path: when the drain names the producers whose advertised
+        output vanished (detail["srcs"], ``s{stage}t{index}``), only those
+        tasks are resubmitted — their re-emission is byte-identical
+        (stable partitioning, sorted re-emission, fixed flush boundaries)
+        and rewrites the content-addressed keys in place, so the retried
+        consumer's deferred GETs pick them up without reopening the
+        channel. This keeps recovery cost proportional to what was lost,
+        not to the stage width.
+
+        FULL path (no srcs — e.g. a lost EOS manifest surfacing as a
+        drain timeout): reopen and replay the whole upstream lineage
+        deepest-first; consumers still mid-drain dedup the byte-identical
+        overlap instead of double-counting.
+
+        Both paths charge the per-stage resubmission budget; returns
+        False when max_stage_retries is exhausted."""
+        targets: dict[int, set[int]] = {}
+        stage_by_id = {s.id: i for i, s in enumerate(self._stages)}
+        for src in (detail or {}).get("srcs") or ():
+            m = re.fullmatch(r"s(\d+)t(\d+)", src)
+            psi = stage_by_id.get(int(m.group(1))) if m else None
+            if psi is None:
+                targets.clear()  # unparseable producer: fall back to full
+                break
+            targets.setdefault(psi, set()).add(int(m.group(2)))
+        if targets:
+            for psi in targets:
+                n = self._stage_retries.get(psi, 0) + 1
+                if n > self.cfg.max_stage_retries:
+                    return False
+                self._stage_retries[psi] = n
+            for psi, indices in sorted(targets.items()):
+                self._replay_stage(psi, only=indices)
+            self.recovery_stats["stage_resubmits"] += len(targets)
+            return True
+        order: list[int] = []
+        seen: set[int] = set()
+
+        def visit(sid: int):
+            psi = self._producer_stage_of.get(sid)
+            if psi is None or psi in seen:
+                return
+            seen.add(psi)
+            for up in sorted(_consumed_shuffles(self._stages[psi])):
+                visit(up)
+            order.append(psi)
+
+        for sid, _ in task.input.parts:
+            visit(sid)
+        if not order:
+            return False
+        for psi in order:
+            n = self._stage_retries.get(psi, 0) + 1
+            if n > self.cfg.max_stage_retries:
+                return False
+            self._stage_retries[psi] = n
+        for psi in order:
+            write = self._stages[psi].write
+            self._transport_of(write.shuffle_id).reopen(
+                write.shuffle_id, write.nparts,
+                groups=write.consumer_groups)
+            self._replay_stage(psi)
+        self.recovery_stats["stage_resubmits"] += len(order)
+        return True
+
+    def _replay_stage(self, psi: int, only: set[int] | None = None):
+        """Synchronously re-execute one producing stage (or, with
+        ``only``, just the named task indices) for lineage recovery — on
+        a PRIVATE pool, because the main pool's threads may all be
+        consumers blocked in drains waiting for exactly this data.
+        Replay invocations carry a large attempt number so targeted
+        first-attempt faults don't re-fire, while the tasks' shuffle
+        identity (src = stage/index) is unchanged. Completed partitions
+        are NOT released here: the retried consumer re-drains the
+        channels, and the job-end GC sweeps whatever remains."""
+        stage = self._stages[psi]
+        cfg = self.cfg
+        tasks = [t for t in stage.tasks
+                 if only is None or t.index in only]
+        by_idx = {t.index: t for t in tasks}
+        attempts = {t.index: 0 for t in tasks}
+        cursors: dict[int, dict] = {}
+        delayed: list = []  # (due, task, extra) — 429 backoff
+        inflight: dict = {}
+        pool = cf.ThreadPoolExecutor(
+            max_workers=max(1, cfg.concurrency // 2))
+        try:
+            def launch(task, extra=None):
+                payload = self._payload_for(
+                    task, stage, _REPLAY_ATTEMPT + attempts[task.index],
+                    dict(extra or {}))
+                inflight[pool.submit(self.lam.invoke, payload)] = task.index
+
+            for t in tasks:
+                launch(t)
+            while inflight or delayed:
+                now = time.monotonic()
+                due = [e for e in delayed if e[0] <= now]
+                if due:
+                    delayed = [e for e in delayed if e[0] > now]
+                    for _, t, extra in due:
+                        launch(t, extra)
+                if not inflight:
+                    time.sleep(max(0.001, min(
+                        0.25, min(e[0] for e in delayed) - now)))
+                    continue
+                done, _ = cf.wait(list(inflight), timeout=0.25,
+                                  return_when=cf.FIRST_COMPLETED)
+                for fut in done:
+                    idx = inflight.pop(fut)
+                    resp = fut.result()
+                    if "spilled" in resp:
+                        resp = pickle.loads(
+                            self.lam.rstore.get(resp["spilled"]))
+                    if resp.get("status") == "throttled":
+                        self.recovery_stats["throttled"] += 1
+                        delayed.append(
+                            (time.monotonic() + self._next_dispatch_backoff(),
+                             by_idx[idx], cursors.get(idx)))
+                        continue
+                    if resp.get("status") != "ok":
+                        # re-entrant on purpose: a lost input DURING replay
+                        # cascades one level deeper, bounded by the shared
+                        # per-stage resubmission counters
+                        self._on_task_error(stage, by_idx[idx], resp,
+                                            attempts)
+                        launch(by_idx[idx], cursors.get(idx))
+                        continue
+                    if "continuation" in resp:
+                        cursors[idx] = resp["continuation"]
+                        launch(by_idx[idx], resp["continuation"])
+                        continue
+                    self.recovery_stats["replayed_tasks"] += 1
+        finally:
+            pool.shutdown(wait=False)
+
     def _run_stage(self, stage: StagePlan) -> Any:
         t0 = time.monotonic()
         n = len(stage.tasks)
@@ -262,6 +526,7 @@ class FlintScheduler:
         # replay is byte-identical)
         cursors: dict[int, dict] = {}
         links: dict[int, int] = {}
+        delayed: list = []  # (due, task, extra) — 429 dispatch backoff
 
         def launch(task: TaskDef, extra=None, speculative=False):
             payload = self._payload_for(
@@ -294,11 +559,23 @@ class FlintScheduler:
         # for a cold start before calling anything a straggler
         start_allowance = self.cfg.cold_start_s * self.cfg.start_latency_scale
 
-        while inflight:
+        while inflight or delayed:
+            now = time.monotonic()
+            due = [e for e in delayed if e[0] <= now]
+            if due:
+                delayed = [e for e in delayed if e[0] > now]
+                for _, dtask, dextra in due:
+                    launch(dtask, extra=dextra)
+            if not inflight:
+                # every runnable task is backing off a 429
+                time.sleep(max(0.001, min(
+                    0.25, min(e[0] for e in delayed) - time.monotonic())))
+                continue
             # event-driven: block on completions; wake periodically only
-            # while a straggler check could actually fire
+            # while a straggler check or a delayed re-dispatch could fire
             done, _ = cf.wait(list(inflight),
-                              timeout=0.05 if spec_armed() else 5.0,
+                              timeout=0.05 if (spec_armed() or delayed)
+                              else 5.0,
                               return_when=cf.FIRST_COMPLETED)
             now = time.monotonic()
             # straggler speculation
@@ -317,24 +594,28 @@ class FlintScheduler:
                 idx, speculative, started = inflight.pop(fut)
                 resp = fut.result()
                 if "spilled" in resp:
-                    resp = pickle.loads(self.store.get(resp["spilled"]))
+                    resp = pickle.loads(self.lam.rstore.get(resp["spilled"]))
                 if idx in results:
                     dup_dropped += 1  # speculative duplicate lost the race
                     continue
+                if resp.get("status") == "throttled":
+                    # 429: never ran, never billed — re-dispatch after a
+                    # decorrelated-jitter pause, no retry attempt charged
+                    self.recovery_stats["throttled"] += 1
+                    delayed.append(
+                        (time.monotonic() + self._next_dispatch_backoff(),
+                         stage.tasks[idx], cursors.get(idx)))
+                    continue
                 if resp.get("status") != "ok":
-                    if resp.get("error_type") == "MemoryCapExceeded":
-                        raise StageFailure(resp.get("error", ""),
-                                           error_type="MemoryCapExceeded")
                     # a dead consumer's unacked messages redeliver after
-                    # the visibility timeout, so its retry sees them all
-                    attempts[idx] += 1
-                    if attempts[idx] > self.cfg.max_task_retries:
-                        raise StageFailure(
-                            f"task {stage.id}/{idx} failed after "
-                            f"{attempts[idx]} attempts: {resp.get('error')}",
-                            error_type=resp.get("error_type", ""))
+                    # the visibility timeout, so its retry sees them all;
+                    # lost durable input triggers lineage resubmission
+                    # instead (triage raises when terminal)
+                    self._on_task_error(stage, stage.tasks[idx], resp,
+                                        attempts)
                     launch(stage.tasks[idx], extra=cursors.get(idx))
                     continue
+                self._dispatch_sleep = 0.0  # concurrency is healthy again
                 if "continuation" in resp:
                     # executor chaining: merge partial output, re-invoke warm
                     chained += 1
@@ -370,10 +651,7 @@ class FlintScheduler:
             if stage.write is not None:
                 self._open_shuffle(stage.write)
 
-        producer_stage_of = {s.write.shuffle_id: si
-                             for si, s in enumerate(stages)
-                             if s.write is not None}
-        deps = [sorted(producer_stage_of[sid]
+        deps = [sorted(self._producer_stage_of[sid]
                        for sid in _consumed_shuffles(stage))
                 for stage in stages]
 
@@ -388,7 +666,7 @@ class FlintScheduler:
         # last continuation cursor per chained task (see _run_stage)
         cursors: list[dict] = [{} for _ in stages]
         links: list[dict] = [{} for _ in stages]
-        stage_done = [False] * n_stages
+        stage_done = self._stage_done  # shared: failure triage reads it
         stage_t0: list[float | None] = [None] * n_stages
         stats_rows: list[dict | None] = [None] * n_stages
         final_result: list[Any] = [None]
@@ -398,6 +676,7 @@ class FlintScheduler:
         # outranks consumer launches for a freed window slot
         ticket = itertools.count()
         pending: list = []
+        delayed: list = []  # (due, si, task, extra) — 429 dispatch backoff
         inflight: dict[cf.Future, tuple[int, int, bool, float]] = {}
 
         def push(si, task, extra=None, speculative=False):
@@ -466,9 +745,24 @@ class FlintScheduler:
 
         launch_ready()
         try:
-            while inflight:
+            while inflight or pending or delayed:
+                now = time.monotonic()
+                due = [e for e in delayed if e[0] <= now]
+                if due:
+                    delayed = [e for e in delayed if e[0] > now]
+                    for _, dsi, dtask, dextra in due:
+                        push(dsi, dtask, extra=dextra)
+                launch_ready()
+                if not inflight:
+                    if delayed:
+                        # every runnable task is backing off a 429
+                        time.sleep(max(0.001, min(
+                            0.25,
+                            min(e[0] for e in delayed) - time.monotonic())))
+                    continue
                 done, _ = cf.wait(list(inflight),
-                                  timeout=0.05 if spec_armed() else 5.0,
+                                  timeout=0.05 if (spec_armed() or delayed)
+                                  else 5.0,
                                   return_when=cf.FIRST_COMPLETED)
                 now = time.monotonic()
                 # straggler speculation — only for stages whose producers
@@ -496,27 +790,32 @@ class FlintScheduler:
                     si, idx, speculative, started = inflight.pop(fut)
                     resp = fut.result()
                     if "spilled" in resp:
-                        resp = pickle.loads(self.store.get(resp["spilled"]))
+                        resp = pickle.loads(
+                            self.lam.rstore.get(resp["spilled"]))
                     if idx in results[si]:
                         dup_dropped[si] += 1  # speculative dup lost the race
                         continue
+                    if resp.get("status") == "throttled":
+                        # 429: never ran, never billed — re-dispatch after
+                        # a decorrelated-jitter pause, no attempt charged
+                        self.recovery_stats["throttled"] += 1
+                        delayed.append(
+                            (time.monotonic()
+                             + self._next_dispatch_backoff(),
+                             si, stages[si].tasks[idx],
+                             cursors[si].get(idx)))
+                        continue
                     if resp.get("status") != "ok":
-                        if resp.get("error_type") == "MemoryCapExceeded":
-                            raise StageFailure(
-                                resp.get("error", ""),
-                                error_type="MemoryCapExceeded")
                         # a dead consumer's unacked messages redeliver
-                        # after the visibility timeout — retry like any task
-                        attempts[si][idx] += 1
-                        if attempts[si][idx] > cfg.max_task_retries:
-                            raise StageFailure(
-                                f"task {stages[si].id}/{idx} failed after "
-                                f"{attempts[si][idx]} attempts: "
-                                f"{resp.get('error')}",
-                                error_type=resp.get("error_type", ""))
+                        # after the visibility timeout — retry like any
+                        # task; lost durable input triggers lineage
+                        # resubmission instead (triage raises if terminal)
+                        self._on_task_error(stages[si], stages[si].tasks[idx],
+                                            resp, attempts[si])
                         push(si, stages[si].tasks[idx],
                              extra=cursors[si].get(idx))
                         continue
+                    self._dispatch_sleep = 0.0  # concurrency healthy again
                     if "continuation" in resp:
                         # chaining: the producer has NOT emitted EOS yet —
                         # the re-invoked link (or its last successor) will
@@ -602,6 +901,15 @@ class FlintScheduler:
         return report
 
     def shutdown(self):
+        # detach the chaos layer FIRST: job-end GC must not be failed by
+        # injected faults (a real driver retries cleanup indefinitely;
+        # modeling it fault-free keeps the zero-leak asserts meaningful),
+        # and the service sims may be shared with the next scheduler
+        if self.store.faults is self.faults:
+            self.store.faults = None
+        if self.sqs.faults is self.faults:
+            self.sqs.faults = None
+        self.lam.faults = None
         self.sqs.close()  # release any consumer blocked on arrival
         self.gc_job()
         self.pool.shutdown(wait=False)

@@ -12,8 +12,9 @@ from __future__ import annotations
 
 import threading
 
+from repro.core.retry import RetryPolicy
 from repro.core.shuffle.base import (AbortedError, DrainHandle, DrainState,
-                                     ShuffleTransport)
+                                     LostShuffleInput, ShuffleTransport)
 from repro.core.shuffle.batch import is_columnar, pack_batch, unpack_batch
 from repro.core.shuffle.s3 import S3ExchangeTransport
 from repro.core.shuffle.sqs import SQSTransport, queue_name
@@ -38,11 +39,14 @@ class TransportSet:
     quartet, constructed lazily so a query that never touches a backend
     never pays its setup."""
 
-    def __init__(self, cfg, ledger, store, sqs):
+    def __init__(self, cfg, ledger, store, sqs, *, budget=None):
         self.cfg = cfg
         self.ledger = ledger
         self.store = store
         self.sqs = sqs
+        # one job-wide retry policy for every transport: the per-job retry
+        # BUDGET is only meaningful if all backends draw from the same pool
+        self.retry = RetryPolicy.from_config(cfg, budget=budget)
         self._instances: dict[str, ShuffleTransport] = {}
         self._lock = threading.Lock()
 
@@ -57,6 +61,10 @@ class TransportSet:
                         f"(have: {', '.join(transport_names())})")
                 tr = self._instances[name] = cls(self.cfg, self.ledger,
                                                  self.store, self.sqs)
+                # attribute swap, not a constructor arg: third-party
+                # backends registered via register_transport keep the
+                # documented 4-arg signature
+                tr.retry = self.retry
             return tr
 
     def active(self) -> list[ShuffleTransport]:
@@ -64,7 +72,8 @@ class TransportSet:
             return list(self._instances.values())
 
 
-__all__ = ["AbortedError", "DrainHandle", "DrainState", "ShuffleTransport",
+__all__ = ["AbortedError", "DrainHandle", "DrainState", "LostShuffleInput",
+           "ShuffleTransport",
            "SQSTransport", "S3ExchangeTransport", "TransportSet",
            "is_columnar", "pack_batch", "unpack_batch", "queue_name",
            "register_transport", "transport_names"]

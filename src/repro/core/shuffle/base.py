@@ -39,11 +39,22 @@ from __future__ import annotations
 import hashlib
 from typing import Iterator
 
+from repro.core.retry import RetryPolicy
+
 
 class AbortedError(RuntimeError):
     """The shuffle channel disappeared under a live drain — the scheduler
     shut the transport down (fatal failure / re-plan), or a competing
     attempt already completed this partition. Unblock and exit quietly."""
+
+
+class LostShuffleInput(RuntimeError):
+    """The drain is CERTAIN its missing input will never arrive on its
+    own: the producer quorum's EOS manifests are all in, yet advertised
+    batches are absent past the drain deadline with no release tombstone
+    to explain them — an acknowledged durable write was lost. Retrying
+    the consumer cannot help; the scheduler answers with lineage-based
+    resubmission of the producing stage (docs/fault_tolerance.md)."""
 
 
 class DrainState:
@@ -121,6 +132,9 @@ class ShuffleTransport:
         self.ledger = ledger
         self.store = store
         self.sqs = sqs  # SQSSim doubles as the job-wide abort signal
+        # call-level retry around every service call this transport makes;
+        # TransportSet replaces this with its shared, budget-backed policy
+        self.retry = RetryPolicy.from_config(cfg)
 
     # ---------------------------------------------------- producer side
     def spill(self, blob: bytes) -> str:
@@ -128,7 +142,7 @@ class ShuffleTransport:
         batch body: content-addressed, so a retry or speculative twin
         re-spilling the same record overwrites idempotently."""
         key = f"_spill/{hashlib.sha1(blob).hexdigest()}"
-        self.store.put(key, blob)
+        self.retry.call(self.store.put, key, blob)
         return key
 
     def send(self, shuffle_id: int, partition: int, src: str,
@@ -168,6 +182,14 @@ class ShuffleTransport:
     def destroy(self, shuffle_id: int, nparts: int):
         """All-consumer-stages-done sweep (every group) of whatever
         ``release_partition`` didn't cover."""
+
+    def reopen(self, shuffle_id: int, nparts: int, groups: int = 1):
+        """Lineage recovery (docs/fault_tolerance.md): make a previously
+        released/destroyed shuffle's channels writable and drainable
+        again so the producing stage can be resubmitted. Must clear any
+        per-partition release state for the shuffle; re-emitted batches
+        are byte-identical, so consumers mid-drain dedup the overlap."""
+        self.open(shuffle_id, nparts, groups)
 
     def gc(self) -> dict[str, int]:
         """Job-end cleanup; returns {resource: count} actually removed."""

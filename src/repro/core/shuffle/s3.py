@@ -45,7 +45,7 @@ from collections import deque
 
 from repro.core.costs import S3_EXCHANGE_BATCH_LIMIT
 from repro.core.shuffle.base import (AbortedError, DrainHandle, DrainState,
-                                     ShuffleTransport)
+                                     LostShuffleInput, ShuffleTransport)
 
 EXCHANGE_PREFIX = "_exchange/"
 _TOMBSTONE = ".released-g"
@@ -90,12 +90,16 @@ class S3ExchangeTransport(ShuffleTransport):
         prefix = _partition_prefix(shuffle_id, partition)
         for i, body in enumerate(bodies):
             digest = hashlib.sha1(body).hexdigest()[:12]
-            self.store.put(f"{prefix}{src}-{first_seq + i:08d}-{digest}",
-                           body)
+            # content-addressed: a PUT retried after a transient 503
+            # overwrites itself idempotently
+            self.retry.call(self.store.put,
+                            f"{prefix}{src}-{first_seq + i:08d}-{digest}",
+                            body)
 
     def emit_eos(self, shuffle_id, nparts, src, totals):
         for p in range(nparts):
-            self.store.put_obj(
+            self.retry.call(
+                self.store.put_obj,
                 f"{_partition_prefix(shuffle_id, p)}eos-{src}",
                 totals.get(p, 0))
 
@@ -123,7 +127,7 @@ class S3ExchangeTransport(ShuffleTransport):
                 return
             idx.last_list = now
             prefix = _shuffle_prefix(shuffle_id)
-            fresh = [k for k in self.store.list(prefix)
+            fresh = [k for k in self.retry.call(self.store.list, prefix)
                      if k not in idx.known]
             if fresh:
                 # snap back to the FLOOR, not zero: during active
@@ -157,13 +161,14 @@ class S3ExchangeTransport(ShuffleTransport):
         self._released.add(key)
         prefix = _partition_prefix(shuffle_id, partition)
         # abort marker for THIS group's competing drains first
-        self.store.put(f"{prefix}{_TOMBSTONE}{consumer_group}", b"")
+        self.retry.call(self.store.put,
+                        f"{prefix}{_TOMBSTONE}{consumer_group}", b"")
         groups = self._groups.get(shuffle_id, 1)
         if all((shuffle_id, partition, g) in self._released
                for g in range(groups)):
             # every consumer group drained this partition: the data is
             # dead (tombstones stay until gc so late losers still abort)
-            for obj in self.store.list(prefix):
+            for obj in self.retry.call(self.store.list, prefix):
                 if _TOMBSTONE not in obj:
                     self.store.delete(obj)
 
@@ -171,6 +176,36 @@ class S3ExchangeTransport(ShuffleTransport):
         for p in range(nparts):
             for g in range(self._groups.get(shuffle_id, 1)):
                 self.release_partition(shuffle_id, p, g)
+
+    def reopen(self, shuffle_id, nparts, groups=1):
+        """Lineage recovery: un-release this shuffle so a resubmitted
+        producer stage can re-fill it. Deletes the partition tombstones
+        (data objects are content-addressed — re-emission recreates them
+        in place) and purges those tombstone keys from the shared
+        discovery index, or a resumed drain would abort on the stale
+        marker it discovered before the recovery."""
+        self._groups.setdefault(shuffle_id, groups)
+        self._released = {k for k in self._released
+                          if k[0] != shuffle_id}
+        prefix = _shuffle_prefix(shuffle_id)
+        doomed = [k for k in self.retry.call(self.store.list, prefix)
+                  if _TOMBSTONE in k]
+        for k in doomed:
+            self.store.delete(k)
+        # purge only the authoritative ``known`` set: the per-partition
+        # bucket lists keep their entries (live drains hold cursor
+        # positions into them) and drains re-check a tombstone against
+        # ``known`` before aborting on it
+        idx = self._sid_index(shuffle_id)
+        with idx.lock:
+            idx.known = {k for k in idx.known if _TOMBSTONE not in k}
+
+    def tombstone_active(self, shuffle_id: int, key: str) -> bool:
+        """False once ``reopen`` retired this tombstone — a drain that
+        discovered it before the recovery must not abort on it."""
+        idx = self._sid_index(shuffle_id)
+        with idx.lock:
+            return key in idx.known
 
     def gc(self):
         n = self.store.delete_prefix(EXCHANGE_PREFIX)
@@ -199,6 +234,8 @@ class _S3Drain(DrainHandle):
         self.prefix = _partition_prefix(shuffle_id, partition)
         self.state = DrainState(quorum)
         self._pending: deque = deque()  # (src, seq, key) discovered, un-GET
+        self._deferred: list = []  # discovered keys whose GET found nothing
+        self._eos_pending: list = []  # eos manifests awaiting a readable GET
         self._cursor = 0  # position in the shared partition bucket
         self._timeout = tr.cfg.drain_timeout_s
         self._deadline = time.monotonic() + self._timeout
@@ -209,13 +246,18 @@ class _S3Drain(DrainHandle):
             if self._pending:
                 src, seq, key = self._pending.popleft()
                 try:
-                    body = self.tr.store.get(key)
+                    body = self.tr.retry.call(self.tr.store.get, key)
                 except KeyError:
-                    raise AbortedError(
-                        f"{key} vanished mid-drain — partition released by "
-                        f"a competing attempt") from None
+                    # the advertised object is GONE. Either a release
+                    # deleted it (a tombstone explains that — the next
+                    # poll aborts on it) or an acknowledged write was
+                    # LOST. Defer instead of deciding: a concurrent
+                    # stage resubmission may rewrite the byte-identical
+                    # key; the drain deadline arbitrates.
+                    self._deferred.append((src, seq, key))
+                    continue
                 return (src, seq, body)
-            if self.state.done():
+            if self.state.done() and not self._deferred:
                 raise StopIteration
             self._poll()
 
@@ -228,34 +270,82 @@ class _S3Drain(DrainHandle):
         for key in bucket[self._cursor:]:
             tail = key[len(self.prefix):]
             if tail.startswith(_TOMBSTONE):
-                if int(tail[len(_TOMBSTONE):]) == self.consumer_group:
+                if (int(tail[len(_TOMBSTONE):]) == self.consumer_group
+                        and self.tr.tombstone_active(self.sid, key)):
                     raise AbortedError(
                         f"s3 exchange {self.prefix} released for group "
                         f"{self.consumer_group} — a competing attempt "
                         f"already completed this partition")
-                continue  # a sibling group's release is not ours
+                continue  # a sibling group's (or a retired) release
             if tail.startswith("eos-"):
-                try:
-                    total = self.tr.store.get_obj(key)
-                except KeyError:
-                    raise AbortedError(
-                        f"{key} vanished mid-drain — partition released"
-                    ) from None
-                progressed |= self.state.register_eos(tail[4:], total)
+                self._eos_pending.append(key)
             else:
                 src, seq, _digest = tail.split("-")
                 if self.state.register_data(src, int(seq)):
                     self._pending.append((src, int(seq), key))
                     progressed = True
         self._cursor = len(bucket)
+        if self._eos_pending:
+            # a discovered EOS manifest that GETs to nothing is either a
+            # released partition (the tombstone branch above handles that
+            # on a later poll) or a LOST object — keep trying until the
+            # manifest reappears (stage resubmission rewrites it) or the
+            # deadline arbitrates
+            still = []
+            for key in self._eos_pending:
+                try:
+                    total = self.tr.retry.call(self.tr.store.get_obj, key)
+                except KeyError:
+                    still.append(key)
+                    continue
+                progressed |= self.state.register_eos(
+                    key[len(self.prefix) + 4:], total)
+            self._eos_pending = still
+        # vanished-object re-check: a resubmitted producer rewrites the
+        # byte-identical key in place — promote it back to pending the
+        # moment it reappears (HEAD, unbilled metadata)
+        if self._deferred:
+            still_gone = []
+            for src, seq, key in self._deferred:
+                if self.tr.store.exists(key):
+                    self._pending.append((src, seq, key))
+                    progressed = True
+                else:
+                    still_gone.append((src, seq, key))
+            self._deferred = still_gone
         now = time.monotonic()
         if progressed:
             self._deadline = now + self._timeout
             self._backoff = 0.002
             return
-        if self._pending or self.state.done():
+        if self._pending or (self.state.done() and not self._deferred):
             return
         if now > self._deadline:
+            if len(self.state.eos_total) >= self.state.quorum > 0:
+                # every producer finished and closed its stream, yet
+                # advertised batches never materialized: an acknowledged
+                # durable write was lost. Only producing-stage
+                # resubmission can recreate it.
+                # name the producers whose output vanished so the
+                # scheduler can resubmit exactly those tasks instead of
+                # the whole stage (src encodes stage/index): a producer is
+                # short when its EOS-advertised count exceeds what was
+                # received — whether the object vanished AFTER discovery
+                # (deferred) or was lost before any LIST ever saw it
+                short = {src for src, total in self.state.eos_total.items()
+                         if self.state.per_src.get(src, 0) < total}
+                short |= {src for src, _, _ in self._deferred}
+                missing = sum(
+                    total - self.state.per_src.get(src, 0)
+                    for src, total in self.state.eos_total.items()
+                ) + len(self._deferred)
+                err = LostShuffleInput(
+                    f"s3 exchange {self.prefix}: producer quorum complete "
+                    f"but {missing} advertised batch(es) from "
+                    f"{sorted(short)} missing past the drain deadline — "
+                    f"exchange object(s) lost after write")
+                err.detail = {"srcs": sorted(short)}
+                raise err
             raise TimeoutError(
                 f"s3 exchange {self.prefix} incomplete: "
                 f"{len(self.state.seen)} batches, eos "

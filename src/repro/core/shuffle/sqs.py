@@ -54,8 +54,11 @@ class SQSTransport(ShuffleTransport):
             # let concurrent sibling-group receives clobber each other's
             # receipt handles
             for name in names:
-                self.sqs.send_batch(name, [Message(body, seq, src)
-                                           for body, seq in batch])
+                # transient send errors retry at the call layer: nothing
+                # was enqueued, so the re-send cannot duplicate
+                self.retry.call(self.sqs.send_batch, name,
+                                [Message(body, seq, src)
+                                 for body, seq in batch])
 
         for i, body in enumerate(bodies):
             batch.append((body, first_seq + i))
@@ -68,8 +71,9 @@ class SQSTransport(ShuffleTransport):
     def emit_eos(self, shuffle_id, nparts, src, totals):
         for g in range(self._groups.get(shuffle_id, 1)):
             for p in range(nparts):
-                self.sqs.send_batch(queue_name(shuffle_id, p, g),
-                                    [eos_message(src, totals.get(p, 0))])
+                self.retry.call(self.sqs.send_batch,
+                                queue_name(shuffle_id, p, g),
+                                [eos_message(src, totals.get(p, 0))])
 
     # ---------------------------------------------------- consumer side
     def open_drain(self, shuffle_id, partition, quorum, group=None,
@@ -103,6 +107,19 @@ class SQSTransport(ShuffleTransport):
         for g in range(self._groups.get(shuffle_id, 1)):
             for p in range(nparts):
                 self.release_partition(shuffle_id, p, g)
+
+    def reopen(self, shuffle_id, nparts, groups=1):
+        """Lineage recovery: recreate this shuffle's queues (idempotent
+        creates) and forget their released state so a resubmitted producer
+        stage can re-fill them and a retried consumer can re-drain."""
+        groups = max(groups, self._groups.get(shuffle_id, 1))
+        self._groups[shuffle_id] = groups
+        for g in range(groups):
+            for p in range(nparts):
+                name = queue_name(shuffle_id, p, g)
+                self._released.discard(name)
+                self._live.add(name)
+                self.sqs.create_queue(name)
 
     def gc(self):
         """Queues normally die with their consuming stage; after an abort
@@ -160,7 +177,10 @@ class _SQSDrain(DrainHandle):
             self._want = min(1000, max(SQS_BATCH_MESSAGES,
                                        sqs.approx_len(self.name)))
         try:
-            msgs = sqs.receive_many(self.name, self._want)
+            # transient receive errors (nothing claimed) retry at the
+            # call layer; QueueGone passes through untouched
+            msgs = self.tr.retry.call(sqs.receive_many, self.name,
+                                      self._want)
         except QueueGone:
             raise AbortedError(
                 f"queue {self.name} deleted — a competing attempt already "

@@ -1,0 +1,240 @@
+"""Chaos harness (docs/fault_tolerance.md): seeded randomized fault
+schedules across both transports and both scheduler modes must be
+INVISIBLE in the results — every run produces exactly the fault-free
+answer with zero leaked queues/objects — plus targeted scenarios for each
+recovery layer (call retry, task retry + 429 backoff, lineage-based stage
+resubmission, cache re-materialization) and for every exhaustion path.
+
+``FLINT_CHAOS_SEED`` re-bases the randomized sweep so CI can pin one leg
+to a fixed schedule while letting exploratory runs roll new ones."""
+
+import operator
+import os
+
+import pytest
+
+from repro.core import (FaultPlan, FlintConfig, FlintContext, StageFailure)
+
+CHAOS_SEED = int(os.environ.get("FLINT_CHAOS_SEED", "0"))
+
+#: transient prefixes that must be empty once a job (even a failed one)
+#: has shut down — _cache/ is excluded: registered caches outlive jobs
+TRANSIENT_PREFIXES = ("_exchange/", "_spill/", "_payload/", "_result/")
+
+DATA = [(i % 7, i) for i in range(300)]
+EXPECTED = {}
+for _k, _v in DATA:
+    EXPECTED[_k] = EXPECTED.get(_k, 0) + _v
+EXPECTED = sorted(EXPECTED.items())
+
+ADD = operator.add
+
+
+def chaos_config(backend, pipelined, **kw):
+    kw.setdefault("concurrency", 8)
+    kw.setdefault("flush_records", 50)
+    kw.setdefault("visibility_timeout_s", 0.5)
+    kw.setdefault("drain_timeout_s", 1.5)
+    kw.setdefault("retry_base_s", 0.001)
+    kw.setdefault("retry_cap_s", 0.01)
+    kw.setdefault("max_stage_retries", 5)
+    return FlintConfig(shuffle_backend=backend, pipeline_stages=pipelined,
+                       **kw)
+
+
+def assert_no_leaks(ctx):
+    leaked = [k for p in TRANSIENT_PREFIXES for k in ctx.store.list(p)]
+    assert not leaked, f"leaked transient objects: {leaked[:5]}"
+    sched = ctx.last_scheduler
+    assert sched.sqs._queues == {}, "leaked queues"
+
+
+def run_job(backend, pipelined, plan, **cfg_kw):
+    ctx = FlintContext(config=chaos_config(backend, pipelined, **cfg_kw),
+                       fault_plan=plan)
+    result = (ctx.parallelize(DATA, 4)
+              .reduceByKey(ADD, 3)
+              .collect())
+    return ctx, sorted(result)
+
+
+# ------------------------------------------------- randomized fault sweep
+# 13 seeds x 2 transports x 2 modes = 52 seeded schedules, every one of
+# which must produce the exact fault-free answer and leak nothing.
+
+SWEEP_SEEDS = [CHAOS_SEED * 1000 + i for i in range(13)]
+
+
+@pytest.mark.parametrize("pipelined", [True, False],
+                         ids=["pipelined", "barrier"])
+@pytest.mark.parametrize("backend", ["sqs", "s3"])
+@pytest.mark.parametrize("seed", SWEEP_SEEDS)
+def test_chaos_schedule_is_invisible_in_results(seed, backend, pipelined):
+    plan = FaultPlan(seed=seed,
+                     s3_error_prob=0.03,
+                     sqs_error_prob=0.03,
+                     sqs_delay_prob=0.10, sqs_delay_s=0.02,
+                     invoke_throttle_prob=0.02,
+                     lose_object_prob=0.02)
+    ctx, result = run_job(backend, pipelined, plan)
+    assert result == EXPECTED
+    assert_no_leaks(ctx)
+
+
+# --------------------------------------------- targeted recovery scenarios
+
+
+def test_lost_exchange_object_recovers_via_stage_resubmission():
+    """An acknowledged exchange batch vanishes after write; the drain
+    proves the producer quorum complete, raises LostShuffleInput, and the
+    scheduler re-executes the producing stage from lineage — observable in
+    recovery_stats, invisible in the result."""
+    plan = FaultPlan(lose_keys=("_exchange/",))
+    ctx, result = run_job("s3", True, plan)
+    assert result == EXPECTED
+    sched = ctx.last_scheduler
+    assert sched.recovery_stats["lost_inputs"] >= 1
+    assert sched.recovery_stats["stage_resubmits"] >= 1
+    assert sched.recovery_stats["replayed_tasks"] >= 1
+    assert sched.faults.stats["lost_objects"] == 1
+    assert_no_leaks(ctx)
+
+
+def test_lost_exchange_object_recovers_in_barrier_mode():
+    plan = FaultPlan(lose_keys=("_exchange/",))
+    ctx, result = run_job("s3", False, plan)
+    assert result == EXPECTED
+    assert ctx.last_scheduler.recovery_stats["stage_resubmits"] >= 1
+    assert_no_leaks(ctx)
+
+
+def test_lost_cache_batch_replans_and_rematerializes():
+    """A materialized _cache/ batch is acknowledged then lost. The next
+    action's manifest check raises LostCacheInput; the CONTEXT drops the
+    damaged materialization and replans the cached lineage from source."""
+    plan = FaultPlan(lose_keys=("_cache/",))
+    ctx = FlintContext(config=chaos_config("sqs", True), fault_plan=plan)
+    cached = ctx.parallelize(DATA, 4).map(lambda kv: kv).cache()
+    first = sorted(cached.reduceByKey(ADD, 3).collect())
+    assert first == EXPECTED  # materializing action: loss is silent
+    assert ctx.last_scheduler.faults.stats["lost_objects"] == 1
+    second = sorted(cached.reduceByKey(ADD, 3).collect())  # reads cache
+    assert second == EXPECTED
+    assert_no_leaks(ctx)
+
+
+def test_account_concurrency_throttling_backs_off_and_completes():
+    """Dispatch beyond the account cap draws 429s; the scheduler backs
+    off (decorrelated jitter) and redrives. Barrier mode: under a tight
+    cap, pipelined consumers would squat on concurrency slots while
+    draining and starve the throttled producers (docs/fault_tolerance.md
+    documents that trade-off)."""
+    def slow_ident(kv):
+        import time
+        time.sleep(0.002)  # hold the container so dispatches overlap
+        return kv
+
+    plan = FaultPlan(account_concurrency=2)
+    ctx = FlintContext(config=chaos_config("sqs", False, concurrency=6),
+                       fault_plan=plan)
+    result = sorted(ctx.parallelize(DATA, 6).map(slow_ident)
+                    .reduceByKey(ADD, 3).collect())
+    assert result == EXPECTED
+    sched = ctx.last_scheduler
+    assert sched.recovery_stats["throttled"] > 0
+    assert sched.lam.throttles > 0
+    # 429s never ran: counted on the ledger but billed no GB-seconds
+    assert ctx.ledger.report()["lambda_throttles"] > 0
+    assert_no_leaks(ctx)
+
+
+def test_invocation_timeout_partial_flushes_absorbed_by_dedup():
+    """The lease expires mid-task AFTER one full flush landed: the retry
+    re-emits byte-identical batches and downstream (src, seq) dedup
+    absorbs the overlap — no double counting."""
+    for backend in ("sqs", "s3"):
+        plan = FaultPlan(tasks={(0, 1): {"timeout_after_records": 60}})
+        ctx, result = run_job(backend, True, plan)  # flush_records=50 < 60
+        assert result == EXPECTED, backend
+        assert ctx.last_scheduler.faults.stats["timeouts"] == 1
+        assert_no_leaks(ctx)
+
+
+def test_retried_calls_bill_honestly():
+    """Failed 5xx attempts are never billed (AWS does not charge server
+    errors) — each retry re-bills only the attempt that actually ran, so
+    the successful-request bill matches fault-free exactly and total cost
+    stays within the run_chaos_ab 2x gate."""
+    quiet_ctx, quiet = run_job("s3", True, None)
+    noisy_ctx, noisy = run_job("s3", True, FaultPlan(seed=5,
+                                                     s3_error_prob=0.2))
+    assert quiet == noisy == EXPECTED
+    assert noisy_ctx.ledger.report()["service_faults"] > 0
+    noisy_reqs = noisy_ctx.ledger.s3_gets + noisy_ctx.ledger.s3_puts
+    quiet_reqs = quiet_ctx.ledger.s3_gets + quiet_ctx.ledger.s3_puts
+    assert noisy_reqs == quiet_reqs  # failed attempts billed nothing
+    assert (noisy_ctx.ledger.report()["total_usd"]
+            <= 2 * quiet_ctx.ledger.report()["total_usd"])
+
+
+# -------------------------------------------------- exhaustion (failure)
+# Every bounded recovery layer must fail STRUCTURED and leak-free when its
+# budget runs out — on both transports.
+
+
+@pytest.mark.parametrize("backend", ["sqs", "s3"])
+def test_task_retry_exhaustion_is_structured_and_leak_free(backend):
+    plan = FaultPlan(tasks={(0, 1): {"fail_attempts": 99}})
+    ctx = FlintContext(config=chaos_config(backend, True,
+                                           max_task_retries=1),
+                       fault_plan=plan, elastic_retries=0)
+    with pytest.raises(StageFailure) as exc:
+        ctx.parallelize(DATA, 4).reduceByKey(ADD, 3).collect()
+    e = exc.value
+    assert e.error_type == "InjectedFailure"
+    assert e.stage_id == 0 and e.task_index == 1
+    assert e.attempts == 2 and e.retryable is False
+    assert_no_leaks(ctx)  # the FAILURE path must gc too
+
+
+@pytest.mark.parametrize("backend", ["sqs", "s3"])
+def test_stage_resubmission_exhaustion(backend):
+    """A permanent black hole on first-sequence exchange batches: every
+    resubmitted producer loses its rewrite again, so the stage-retry
+    budget exhausts and the failure surfaces structured, without leaks.
+    (On sqs the loss targets nothing — included to pin that a transport
+    with no durable exchange objects simply never enters this path.)"""
+    plan = FaultPlan(lose_keys_every=("-00000000-",))
+    ctx = FlintContext(config=chaos_config(backend, True,
+                                           max_stage_retries=1,
+                                           drain_timeout_s=1.0),
+                       fault_plan=plan, elastic_retries=0)
+    if backend == "sqs":
+        result = sorted(ctx.parallelize(DATA, 4)
+                        .reduceByKey(ADD, 3).collect())
+        assert result == EXPECTED
+    else:
+        with pytest.raises(StageFailure) as exc:
+            ctx.parallelize(DATA, 4).reduceByKey(ADD, 3).collect()
+        e = exc.value
+        assert e.error_type in ("LostShuffleInput", "TimeoutError")
+        assert "stage-resubmission budget exhausted" in str(e)
+        assert e.retryable is False
+        assert ctx.last_scheduler.recovery_stats["stage_resubmits"] >= 1
+    assert_no_leaks(ctx)
+
+
+@pytest.mark.parametrize("backend", ["sqs", "s3"])
+def test_retry_budget_exhaustion_mid_drain(backend):
+    """A tiny job-wide retry budget under heavy transient errors: the
+    budget dies mid-job and the failure is terminal (a job burning its
+    whole budget is systemically unhealthy), structured, and leak-free."""
+    plan = FaultPlan(seed=2, s3_error_prob=0.6, sqs_error_prob=0.6)
+    ctx = FlintContext(config=chaos_config(backend, True, retry_budget=4,
+                                           retry_max_attempts=10),
+                       fault_plan=plan, elastic_retries=0)
+    with pytest.raises(StageFailure) as exc:
+        ctx.parallelize(DATA, 4).reduceByKey(ADD, 3).collect()
+    assert exc.value.error_type == "RetryBudgetExhausted"
+    assert exc.value.retryable is False
+    assert_no_leaks(ctx)

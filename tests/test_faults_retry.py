@@ -1,0 +1,291 @@
+"""Unit coverage for the chaos subsystem's building blocks: the retry
+layer's taxonomy/backoff/budget (core.retry), the FaultPlan schema and the
+seeded FaultInjector's reproducibility (core.faults), and the resilience-
+knob validation at FlintConfig/scheduler construction."""
+
+import pytest
+
+from repro.core import FaultInjector, FaultPlan, FlintConfig, FlintScheduler
+from repro.core.costs import CostLedger
+from repro.core.queues import ObjectStoreSim
+from repro.core.retry import (RetryBudget, RetryBudgetExhausted,
+                              RetryExhausted, RetryPolicy, RetryingStore,
+                              ThrottledError, TransientServiceError,
+                              is_retryable)
+
+
+# ------------------------------------------------------------ retry layer
+
+
+def fast_policy(**kw):
+    kw.setdefault("max_attempts", 4)
+    kw.setdefault("base_s", 0.0001)
+    kw.setdefault("cap_s", 0.001)
+    return RetryPolicy(**kw)
+
+
+def test_taxonomy_retryable_vs_fatal():
+    assert is_retryable(TransientServiceError("x"))
+    assert is_retryable(ThrottledError("x"))
+    assert not is_retryable(KeyError("missing"))  # missing != flaky
+    assert not is_retryable(RetryExhausted("x"))
+    assert not is_retryable(RetryBudgetExhausted("x"))
+
+
+def test_backoff_sleep_stays_within_bounds():
+    pol = RetryPolicy(max_attempts=3, base_s=0.01, cap_s=0.05)
+    prev = pol.base_s
+    for _ in range(200):
+        prev = pol.next_sleep(prev)
+        assert 0.01 <= prev <= 0.05
+
+
+def test_call_retries_transient_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientServiceError("503")
+        return "ok"
+
+    assert fast_policy().call(flaky) == "ok"
+    assert calls["n"] == 3
+
+
+def test_call_raises_retry_exhausted_with_cause():
+    def always():
+        raise TransientServiceError("503 forever")
+
+    with pytest.raises(RetryExhausted) as exc:
+        fast_policy(max_attempts=3).call(always)
+    assert isinstance(exc.value.cause, TransientServiceError)
+
+
+def test_call_passes_fatal_errors_through_untouched():
+    def missing():
+        raise KeyError("nope")
+
+    calls = {"n": 0}
+
+    def count_then_missing():
+        calls["n"] += 1
+        raise KeyError("nope")
+
+    with pytest.raises(KeyError):
+        fast_policy().call(missing)
+    with pytest.raises(KeyError):
+        fast_policy().call(count_then_missing)
+    assert calls["n"] == 1  # no retry burned on a fatal error
+
+
+def test_budget_is_shared_and_exhausts():
+    budget = RetryBudget(3)
+    pol_a = fast_policy(max_attempts=10, budget=budget)
+    pol_b = fast_policy(max_attempts=10, budget=budget)
+
+    def always():
+        raise TransientServiceError("503")
+
+    # first policy burns 2 retries, second's first retry spends the last
+    with pytest.raises(RetryBudgetExhausted):
+        pol_a.call(always)
+    assert budget.remaining == 0
+    with pytest.raises(RetryBudgetExhausted):
+        pol_b.call(always)
+
+
+def test_budget_validation():
+    with pytest.raises(ValueError):
+        RetryBudget(0)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_s=0.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_s=0.1, cap_s=0.05)
+
+
+def test_retrying_store_roundtrip_through_transients():
+    ledger = CostLedger()
+    store = ObjectStoreSim(ledger)
+    plan = FaultPlan(seed=11, s3_error_prob=0.4)
+    store.faults = FaultInjector(plan, ledger)
+    rstore = RetryingStore(store, fast_policy(max_attempts=50))
+    for i in range(30):
+        rstore.put(f"k/{i}", b"v%d" % i)
+    for i in range(30):
+        assert rstore.get(f"k/{i}") == b"v%d" % i
+    assert len(rstore.list("k/")) == 30
+    assert ledger.service_faults > 0  # some 503s actually fired
+
+
+# ------------------------------------------------------- FaultPlan schema
+
+
+def test_fault_plan_validates_probabilities():
+    with pytest.raises(ValueError):
+        FaultPlan(s3_error_prob=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(lose_object_prob=-0.1)
+    with pytest.raises(ValueError):
+        FaultPlan(account_concurrency=-1)
+    with pytest.raises(ValueError):
+        FaultPlan(sqs_delay_s=-0.5)
+
+
+def test_fault_plan_validates_task_faults():
+    with pytest.raises(ValueError):
+        FaultPlan(tasks={"0-0": {"fail_attempts": 1}})  # not a tuple key
+    with pytest.raises(ValueError):
+        FaultPlan(tasks={(0, 0): {"explode": True}})  # unknown fault key
+    FaultPlan(tasks={(0, 0): {"fail_attempts": 2, "straggle_s": 0.1}})
+
+
+def test_fault_plan_coerce_legacy_dict_and_none():
+    legacy = {(0, 1): {"fail_attempts": 3}}
+    plan = FaultPlan.coerce(legacy)
+    assert plan.tasks == legacy and not plan.has_service_faults
+    assert FaultPlan.coerce(None).empty
+    existing = FaultPlan(seed=9)
+    assert FaultPlan.coerce(existing) is existing
+    with pytest.raises(TypeError):
+        FaultPlan.coerce("chaos")
+
+
+def test_fault_plan_service_fault_detection():
+    assert not FaultPlan(tasks={(0, 0): {"fail_attempts": 1}}
+                         ).has_service_faults
+    assert FaultPlan(sqs_error_prob=0.1).has_service_faults
+    assert FaultPlan(account_concurrency=4).has_service_faults
+    assert FaultPlan(lose_keys=("_exchange/",)).has_service_faults
+    assert FaultPlan().empty
+
+
+# --------------------------------------------------- injector determinism
+
+
+def _schedule(seed, calls=100):
+    inj = FaultInjector(FaultPlan(seed=seed, s3_error_prob=0.3))
+    out = []
+    for i in range(calls):
+        try:
+            inj.s3_call("put", f"key/{i % 7}")
+            out.append(False)
+        except TransientServiceError:
+            out.append(True)
+    return out
+
+
+def test_injector_same_seed_same_schedule():
+    assert _schedule(42) == _schedule(42)
+    sched = _schedule(42)
+    assert any(sched) and not all(sched)  # an actual mix at p=0.3
+
+
+def test_injector_decisions_keyed_per_signature_not_global_order():
+    """Interleaving calls to other signatures must not shift a given
+    signature's decision sequence — that is what makes fixed-seed chaos
+    schedules reproducible under thread racing."""
+    plan = FaultPlan(seed=7, s3_error_prob=0.5)
+    a = FaultInjector(plan)
+    b = FaultInjector(plan)
+
+    def probe(inj, key):
+        try:
+            inj.s3_call("get", key)
+            return False
+        except TransientServiceError:
+            return True
+
+    seq_a = [probe(a, "target") for _ in range(20)]
+    seq_b = []
+    for _ in range(20):
+        probe(b, "noise-1")
+        seq_b.append(probe(b, "target"))
+        probe(b, "noise-2")
+    assert seq_a == seq_b
+
+
+def test_lose_keys_fires_once_lose_keys_every_always():
+    inj = FaultInjector(FaultPlan(lose_keys=("once/",),
+                                  lose_keys_every=("forever/",)))
+    assert inj.object_written("once/a") is True
+    assert inj.object_written("once/b") is False  # one-shot
+    assert inj.object_written("forever/a") is True
+    assert inj.object_written("forever/b") is True
+    assert inj.stats["lost_objects"] == 3
+
+
+def test_lost_objects_respect_prefixes_and_spare_tombstones():
+    inj = FaultInjector(FaultPlan(seed=1, lose_object_prob=1.0))
+    assert inj.object_written("_exchange/0/p0/s0t0-00000000-ab") is True
+    assert inj.object_written("_cache/tok/2/p0/000000-cd") is True
+    assert inj.object_written("_result/123") is False  # not a lose prefix
+    # release tombstones are markers, not data — never lost
+    assert inj.object_written("_exchange/0/p0/.released-g0") is False
+
+
+def test_concurrency_cap_throttles_deterministically():
+    inj = FaultInjector(FaultPlan(account_concurrency=2))
+    assert inj.invoke_fault(0, 0, 0, inflight=2) is None
+    assert inj.invoke_fault(0, 1, 0, inflight=3) == "throttle"
+    assert inj.stats["throttles"] == 1
+
+
+def test_timeout_after_targets_first_attempt_only():
+    inj = FaultInjector(FaultPlan(
+        tasks={(1, 2): {"timeout_after_records": 55}}))
+    assert inj.timeout_after(1, 2, 0) == 55
+    assert inj.timeout_after(1, 2, 1) is None  # the retry must finish
+    assert inj.timeout_after(0, 0, 0) is None
+    probabilistic = FaultInjector(FaultPlan(seed=3, invoke_timeout_prob=1.0))
+    t = probabilistic.timeout_after(0, 0, 0)
+    assert t is not None and t >= 20
+    assert t == FaultInjector(FaultPlan(seed=3, invoke_timeout_prob=1.0)
+                              ).timeout_after(0, 0, 0)  # seeded
+
+
+def test_injector_counts_service_faults_in_ledger():
+    ledger = CostLedger()
+    inj = FaultInjector(FaultPlan(seed=0, sqs_error_prob=1.0), ledger)
+    with pytest.raises(TransientServiceError):
+        inj.sqs_call("send", "q")
+    rep = ledger.report()
+    assert rep["service_faults"] == 1
+    assert "lambda_throttles" in rep
+
+
+# --------------------------------------- resilience-knob validation (cfg)
+
+
+@pytest.mark.parametrize("bad", [
+    {"retry_budget": 0},
+    {"retry_max_attempts": 0},
+    {"retry_base_s": 0.0},
+    {"retry_base_s": 0.2, "retry_cap_s": 0.1},
+    {"dispatch_backoff_base_s": 0.0},
+    {"dispatch_backoff_base_s": 2.0, "dispatch_backoff_cap_s": 1.0},
+    {"max_stage_retries": -1},
+    # drain deadline must fire before the invocation lease does
+    {"drain_timeout_s": 400.0, "time_limit_s": 300.0},
+])
+def test_config_validate_rejects_incoherent_knobs(bad):
+    cfg = FlintConfig(**bad)
+    with pytest.raises(ValueError):
+        cfg.validate()
+    # the scheduler constructor enforces the same gate
+    with pytest.raises(ValueError):
+        FlintScheduler(cfg)
+
+
+def test_config_validate_accepts_defaults():
+    FlintConfig().validate()
+
+
+def test_scheduler_rejects_unknown_fault_plan_type():
+    with pytest.raises(TypeError):
+        FlintScheduler(FlintConfig(), fault_plan="chaos")

@@ -75,11 +75,18 @@ def test_task_retry_on_failure():
 
 
 def test_task_fails_after_max_retries():
+    from repro.core import StageFailure
     ctx = FlintContext("flint", FlintConfig(concurrency=4, max_task_retries=1),
                        fault_plan={(0, 0): {"fail_attempts": 99}})
     ctx.upload("text.txt", TEXT)
-    with pytest.raises(Exception):
+    with pytest.raises(StageFailure) as exc:
         ctx.textFile("text.txt", 2).count()
+    # structured root cause, not message text (docs/fault_tolerance.md)
+    e = exc.value
+    assert e.error_type == "InjectedFailure"
+    assert e.stage_id == 0 and e.task_index == 0
+    assert e.attempts == 2  # first try + max_task_retries=1
+    assert e.retryable is False
 
 
 def test_mid_task_failure_is_idempotent():
