@@ -36,7 +36,14 @@
    the optimized plan shuffles STRICTLY fewer bytes than the naive
    lowering on both queries, and zero leaked keys/queues.
 
-7. CHAOS A/B (docs/fault_tolerance.md): the groupBy on BOTH serverless
+7. VECTORIZE A/B (docs/vectorized_execution.md): both SQL taxi queries
+   run with the vectorized columnar engine vs ``FlintConfig.vectorize=
+   False`` (per-row closures), optimized plans, best-of-N wall time.
+   Hard gates: bit-identical results, the vectorized path STRICTLY
+   faster on wall-clock AND rows-per-second for both queries, zero
+   leaks — the benchmark tells a speed story, not just a bytes story.
+
+8. CHAOS A/B (docs/fault_tolerance.md): the groupBy on BOTH serverless
    transports under a composite fault schedule — 5 % transient service
    errors on every S3/SQS call, one invocation timeout that lands a
    partial flush, and one lost durable exchange object. Hard gates:
@@ -45,8 +52,8 @@
    (failed 5xx attempts bill nothing; recovery re-bills only work that
    actually ran).
 
-``--quick`` runs a reduced-size pass of (1), (2), (5), (6) and (7) with
-hard assertions — the CI smoke gate for transport regressions.
+``--quick`` runs a reduced-size pass of (1), (2), (5), (6), (7) and (8)
+with hard assertions — the CI smoke gate for transport regressions.
 """
 
 from __future__ import annotations
@@ -452,6 +459,50 @@ def run_sql_ab(rows=None):
     return out, agreement
 
 
+def run_vectorize_ab(rows=None, trials=3):
+    """Vectorized columnar engine vs per-row closures on both SQL taxi
+    queries (optimized plans, SQS transport). Best-of-``trials`` wall
+    per mode — the minimum is the least noise-contaminated sample. Hard
+    gates: bit-identical results, vectorized STRICTLY faster on
+    wall-clock and rows-per-second for both queries, zero leaks.
+    Returns (rows, all-pairs-identical)."""
+    n = rows or N_ROWS
+    data = taxi_csv(n, seed=13)
+    out = []
+    identical = True
+    for workload, query in SQL_WORKLOADS.items():
+        answers = {}
+        wall_by_mode = {}
+        for vectorize in (False, True):
+            wall = float("inf")
+            for _ in range(trials):
+                ctx = FlintContext(
+                    "flint",
+                    FlintConfig(concurrency=16, flush_records=2000,
+                                shuffle_backend="sqs",
+                                vectorize=vectorize))
+                ctx.upload("taxi.csv", data)
+                t0 = time.monotonic()
+                ans = query(ctx, optimize=True)
+                wall = min(wall, time.monotonic() - t0)
+                assert_no_leaks(ctx)
+            answers[vectorize] = sorted(ans)
+            wall_by_mode[vectorize] = wall
+            out.append({
+                "workload": workload,
+                "mode": "vectorized" if vectorize else "row",
+                "wall_s": round(wall, 4),
+                "rows_per_s": int(n / max(wall, 1e-9)),
+            })
+        identical = identical and answers[True] == answers[False]
+        vec, row = wall_by_mode[True], wall_by_mode[False]
+        assert vec < row, \
+            f"{workload}: vectorized not faster ({vec:.4f}s vs {row:.4f}s)"
+        assert n / vec > n / row, \
+            f"{workload}: vectorized rows/s did not win"
+    return out, identical
+
+
 def run_chaos_ab(rows=None):
     """Fault-free reference vs composite chaos schedule (5 % transient
     errors + one invocation timeout + one lost exchange object) on both
@@ -554,6 +605,13 @@ def main(argv=None):
               f"{r['lambda_requests']},{r['total_usd']}")
     print(f"# sql optimized/naive cells agree: {sql_agreement}")
 
+    vec_rows, vec_identical = run_vectorize_ab(rows)
+    print("workload,mode,wall_s,rows_per_s")
+    for r in vec_rows:
+        print(f"{r['workload']},{r['mode']},{r['wall_s']},"
+              f"{r['rows_per_s']}")
+    print(f"# vectorized/row results identical: {vec_identical}")
+
     chaos_rows, chaos_identical = run_chaos_ab(rows)
     print("backend,faults,wall_s,total_usd,service_faults,recovery")
     for r in chaos_rows:
@@ -570,6 +628,8 @@ def main(argv=None):
         "fan-out results differ across transports / CSE on-off"
     assert sql_agreement, \
         "sql results differ across transports / optimize on-off"
+    assert vec_identical, \
+        "vectorized execution changed SQL query results"
     assert chaos_identical, \
         "chaos runs differ from the fault-free reference"
     if quick:

@@ -25,6 +25,7 @@ from repro.core.dag import (CacheInput, CollectionInput, ShuffleRead,
 from repro.core.executors import (FlintConfig, _apply_ops, _SourceReader,
                                   cache_partition_iter)
 from repro.core.queues import ObjectStoreSim
+from repro.core.shuffle import iter_records
 
 
 class ClusterScheduler:
@@ -96,6 +97,9 @@ class ClusterScheduler:
             if self.pipe_overhead:  # JVM -> Python pipe: serde per record
                 it = (pickle.loads(pickle.dumps(r)) for r in it)
             it = _apply_ops(it, [(k, fn) for k, fn in task.ops], self.store)
+            # fused vectorized ops may yield KVBatch column carriers; this
+            # backend's write loops iterate row-at-a-time
+            it = iter_records(it)
             if stage.write is not None:
                 w = stage.write
                 out: dict[int, list] = defaultdict(list)

@@ -48,7 +48,8 @@ from repro.core.queues import ObjectStoreSim, SQSSim
 from repro.core.retry import (RetryBudget, RetryBudgetExhausted,
                               RetryExhausted, RetryingStore, RetryPolicy,
                               TransientServiceError)
-from repro.core.shuffle import (TransportSet, pack_batch, queue_name,
+from repro.core.shuffle import (KVBatch, TransportSet, iter_records,
+                                pack_batch, pack_batch_columns, queue_name,
                                 unpack_batch)
 from repro.core.shuffle.base import AbortedError  # noqa: F401 (re-export:
 #                       pre-subsystem callers import it from here)
@@ -108,6 +109,17 @@ class FlintConfig:
     # stage with per-read-site consumer groups. False restores the
     # one-consumer-per-shuffle planner (A/B comparison).
     plan_cse: bool = True
+    # vectorized columnar execution (docs/vectorized_execution.md): the SQL
+    # lowering fuses scan→filter→project→partial-agg chains into one
+    # batch-in/batch-out operator evaluating whole column arrays; False
+    # keeps the pure-Python per-row closures (A/B comparison). The backend
+    # picks the array engine for grouped aggregation ("numpy", or "jax" to
+    # route integer sums through kernels/ — see kernels.ops.grouped_reduce).
+    vectorize: bool = True
+    vector_backend: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("FLINT_VECTOR_BACKEND",
+                                               "numpy"))
+    vector_batch_rows: int = 8192  # rows per column batch in fused ops
     lease_safety: float = 0.8  # stop ingesting at this fraction of the lease
     concurrency: int = 80
     cold_start_s: float = 0.4
@@ -177,6 +189,12 @@ class FlintConfig:
         if self.max_stage_retries < 0:
             raise ValueError(f"max_stage_retries must be >= 0, got "
                              f"{self.max_stage_retries}")
+        if self.vector_backend not in ("numpy", "jax"):
+            raise ValueError(f"vector_backend must be 'numpy' or 'jax', "
+                             f"got {self.vector_backend!r}")
+        if self.vector_batch_rows < 1:
+            raise ValueError(f"vector_batch_rows must be >= 1, got "
+                             f"{self.vector_batch_rows}")
         if self.drain_timeout_s >= self.invocation_timeout_s * self.lease_safety:
             # a drain allowed to out-wait the invocation lease converts
             # every slow producer into an invocation timeout instead of a
@@ -601,6 +619,12 @@ def _apply_ops(it, ops, store=None, cap=None):
             it = _flatmap_iter(it, fn)
         elif kind == "mappartitions":
             it = fn(it)
+        elif kind == "mapbatches":
+            # batch-level narrow op (RDD.mapBatches): fn consumes the whole
+            # partition iterator and may yield KVBatch column carriers
+            # alongside plain records — row consumers downstream expand
+            # them via shuffle.iter_records
+            it = fn(it)
         elif kind == "cache":
             it = _cache_tee(it, fn, store, cap)
         elif kind == "limit":
@@ -624,6 +648,57 @@ def _canonical_key(key):
     if isinstance(key, tuple):
         return tuple(_canonical_key(k) for k in key)
     return key
+
+
+class _ColumnBuffer:
+    """Per-partition column-major output buffer: rows routed here from
+    KVBatch carriers never transpose back to tuples — flush packs wire
+    bodies straight from the columns (shuffle.pack_batch_columns). Falls
+    back to a plain record list if a row with a different shape shows up
+    mid-stream (e.g. a per-row fallback chunk emitting ragged data)."""
+
+    __slots__ = ("kcols", "vcols", "kschema", "vschema", "n")
+
+    def __init__(self, batch: KVBatch):
+        self.kcols = [[] for _ in batch.kcols]
+        self.vcols = [[] for _ in batch.vcols]
+        self.kschema = batch.kschema
+        self.vschema = batch.vschema
+        self.n = 0
+
+    def matches(self, batch: KVBatch) -> bool:
+        return (len(batch.kcols) == len(self.kcols)
+                and len(batch.vcols) == len(self.vcols)
+                and batch.kschema == self.kschema
+                and batch.vschema == self.vschema)
+
+    def extend(self, batch: KVBatch, idxs: list[int]):
+        for dst, src in zip(self.kcols, batch.kcols):
+            dst.extend(src[i] for i in idxs)
+        for dst, src in zip(self.vcols, batch.vcols):
+            dst.extend(src[i] for i in idxs)
+        self.n += len(idxs)
+
+    def append_row(self, record) -> bool:
+        """True if the row fit the column layout, False to demote."""
+        if (type(record) is not tuple or len(record) != 2
+                or type(record[0]) is not tuple
+                or len(record[0]) != len(self.kcols)
+                or type(record[1]) is not tuple
+                or len(record[1]) != len(self.vcols)):
+            return False
+        for dst, x in zip(self.kcols, record[0]):
+            dst.append(x)
+        for dst, x in zip(self.vcols, record[1]):
+            dst.append(x)
+        self.n += 1
+        return True
+
+    def to_records(self) -> list:
+        return list(zip(zip(*self.kcols), zip(*self.vcols)))
+
+    def to_batch(self) -> KVBatch:
+        return KVBatch(self.kcols, self.vcols, self.kschema, self.vschema)
 
 
 class _ShuffleWriter:
@@ -659,7 +734,7 @@ class _ShuffleWriter:
         if w.mode == "repart":
             p = self.seq.get(-1, 0) % w.nparts  # round-robin
             self.seq[-1] = self.seq.get(-1, 0) + 1
-            self.buffers.setdefault(p, []).append(record)
+            self._append(p, record)
         else:
             k, v = record
             p = self._partition_of(k)
@@ -671,21 +746,73 @@ class _ShuffleWriter:
                 if self.buffered >= self.env.cfg.flush_records:
                     self.flush()
                 return
-            self.buffers.setdefault(p, []).append(record)
+            self._append(p, record)
         self.buffered += 1
+        if self.buffered >= self.env.cfg.flush_records:
+            self.flush()
+
+    def _append(self, p: int, record):
+        buf = self.buffers.get(p)
+        if buf is None:
+            buf = self.buffers[p] = []
+        elif isinstance(buf, _ColumnBuffer):
+            if buf.append_row(record):
+                return
+            # shape mismatch: demote the partition buffer to a record list
+            buf = self.buffers[p] = buf.to_records()
+        buf.append(record)
+
+    def add_batch(self, batch: KVBatch):
+        """Column-major fast path for fused vectorized operators. Map-side
+        combine still folds record-at-a-time (the combine dict's insertion
+        order and flush boundaries must not depend on how the stream was
+        batched); group/join/plain shuffles keep the columns intact per
+        output partition so flush() packs without transposing."""
+        w = self.write
+        if w.mode == "repart" or (w.mode == "agg" and self.combine is not None):
+            for rec in batch.iter_rows():
+                self.add(rec)
+            return
+        by_p: dict[int, list[int]] = {}
+        for i, k in enumerate(batch.key_tuples()):
+            by_p.setdefault(self._partition_of(k), []).append(i)
+        for p, idxs in by_p.items():
+            buf = self.buffers.get(p)
+            if buf is None:
+                buf = self.buffers[p] = _ColumnBuffer(batch)
+            if isinstance(buf, _ColumnBuffer) and buf.matches(batch):
+                buf.extend(batch, idxs)
+            else:
+                if isinstance(buf, _ColumnBuffer):
+                    buf = self.buffers[p] = buf.to_records()
+                kt, vt = zip(*batch.kcols), zip(*batch.vcols)
+                rows = list(zip(kt, vt))
+                buf.extend(rows[i] for i in idxs)
+        self.buffered += batch.n
         if self.buffered >= self.env.cfg.flush_records:
             self.flush()
 
     def flush(self):
         transport = self._transport()
         for p, buf in self.buffers.items():
-            records = list(buf.items()) if isinstance(buf, dict) else buf
-            if not records:
-                continue
-            bodies = pack_batch(records, limit=transport.batch_limit,
-                                spill=transport.spill,
-                                columnar=self.env.cfg.columnar_batches,
-                                schema=self.write.batch_schema)
+            if isinstance(buf, _ColumnBuffer):
+                if not buf.n:
+                    continue
+                # schema from the plan when declared, else the batch's own
+                cb = buf.to_batch()
+                if self.write.batch_schema is not None:
+                    cb.kschema, cb.vschema = self.write.batch_schema
+                bodies = pack_batch_columns(
+                    cb, limit=transport.batch_limit, spill=transport.spill,
+                    columnar=self.env.cfg.columnar_batches)
+            else:
+                records = list(buf.items()) if isinstance(buf, dict) else buf
+                if not records:
+                    continue
+                bodies = pack_batch(records, limit=transport.batch_limit,
+                                    spill=transport.spill,
+                                    columnar=self.env.cfg.columnar_batches,
+                                    schema=self.write.batch_schema)
             seq = self.seq.get(p, 0)
             transport.send(self.write.shuffle_id, p, self.src, seq, bodies)
             self.seq[p] = seq + len(bodies)
@@ -786,7 +913,9 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
             # byte-identical messages: materialize and sort before
             # partitioning/packing (sorted input makes partition routing,
             # flush boundaries, and body framing all deterministic).
-            out_iter = sorted(out_iter, key=_stable_order)
+            # KVBatch carriers expand to rows first — a batch boundary is
+            # an artifact of this attempt's drain, not of the data.
+            out_iter = sorted(iter_records(out_iter), key=_stable_order)
             if len(out_iter) > env.cfg.agg_memory_records:
                 # the materialized output (e.g. a join cross-product) is
                 # state too — answer overflow with elasticity, like the
@@ -795,7 +924,10 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
                     f"materialized shuffle output {len(out_iter)} records "
                     f"> cap {env.cfg.agg_memory_records}")
         for rec in out_iter:
-            writer.add(rec)
+            if isinstance(rec, KVBatch):
+                writer.add_batch(rec)
+            else:
+                writer.add(rec)
         writer.flush()
         if not exhausted["flag"]:
             # EOS protocol (both scheduler modes): the LAST link of the
@@ -813,7 +945,7 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
             }
         return resp
 
-    result = list(out_iter)
+    result = list(iter_records(out_iter))
     resp = {"status": "ok", "stats": stats}
     if payload.get("save_prefix"):
         key = f"{payload['save_prefix']}/part-{payload['index']:05d}"

@@ -53,6 +53,16 @@ class RDD:
     def mapPartitions(self, fn: Callable) -> "RDD":
         return Narrow(self, "mappartitions", fn)
 
+    def mapBatches(self, fn: Callable) -> "RDD":
+        """Batch-level narrow op: ``fn(record_iter)`` consumes a whole
+        partition and yields records OR column-major ``KVBatch`` carriers
+        (core.shuffle.KVBatch). The vectorized SQL lowering fuses
+        scan→filter→project→partial-agg chains into one such operator so
+        data stays columnar from the scan to the shuffle pack
+        (docs/vectorized_execution.md); executors expand any KVBatch back
+        to rows wherever a row consumer needs them."""
+        return Narrow(self, "mapbatches", fn)
+
     def reduceByKey(self, fn: Callable, numPartitions: int | None = None,
                     transport: str | None = None,
                     batch_schema: tuple | None = None) -> "RDD":

@@ -80,6 +80,42 @@ def bucket_reduce(values, bucket_ids, n_buckets: int, *,
     return _bucket_reduce(values, bucket_ids, n_buckets, interpret=interpret)
 
 
+def grouped_reduce(values, bucket_ids, n_buckets: int, *,
+                   interpret: bool | None = None):
+    """int64 grouped sum for the vectorized SQL engine
+    (FLINT_VECTOR_BACKEND=jax). Integer addition is associative, so an
+    order-free reduction is EXACT as long as nothing can overflow:
+
+      * sum(|v|) < 2**24  — every value and every partial is an exact
+        f32 integer, so the bucket_reduce one-hot-matmul kernel (f32
+        MXU accumulation) gives bit-exact results;
+      * sum(|v|) <= 2**62 — an x64 segment sum accumulates in int64
+        with no possible wrap;
+      * otherwise returns None and the caller keeps its exact path
+        (the numpy engine falls back to Python bigint folds).
+
+    Returns a (n_buckets,) numpy int64 array, or None."""
+    import numpy as np
+    vals = np.asarray(values, dtype=np.int64)
+    ids = np.asarray(bucket_ids)
+    if vals.shape[0] == 0:
+        return np.zeros(n_buckets, dtype=np.int64)
+    abs_sum = float(np.abs(vals).astype(np.float64).sum())
+    if abs_sum > float(2**62):
+        return None
+    if abs_sum < float(2**24):
+        out = bucket_reduce(vals.astype(np.float32)[:, None],
+                            ids.astype(np.int32), n_buckets,
+                            interpret=interpret)
+        return np.asarray(out, dtype=np.int64)[:, 0]
+    from jax.experimental import enable_x64
+    with enable_x64():
+        seg = jax.ops.segment_sum(jnp.asarray(vals, dtype=jnp.int64),
+                                  jnp.asarray(ids, dtype=jnp.int32),
+                                  num_segments=n_buckets)
+        return np.asarray(seg, dtype=np.int64)
+
+
 def grouped_matmul(x, w, sizes=None, *, interpret: bool | None = None):
     """x: (E, T, D) @ w: (E, D, F). `sizes` accepted for API compatibility
     (rows past a group's size are zero in the dispatch buffers)."""

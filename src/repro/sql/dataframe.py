@@ -23,7 +23,7 @@ from typing import Iterable
 
 from repro.sql import plan as P
 from repro.sql.expr import (AggExpr, Alias, Col, Expr, Schema, _as_expr)
-from repro.sql.lower import apply_driver_ops, lower
+from repro.sql.lower import apply_driver_ops, lower, vector_markers
 from repro.sql.optimizer import optimize
 
 
@@ -212,8 +212,13 @@ class DataFrame:
 
     def explain(self, optimize: bool = True) -> str:
         """The logical plan as an indented tree (optimized by default) —
-        what the golden plan-shape tests pin."""
-        return P.explain_str(self._planned(optimize))
+        what the golden plan-shape tests pin. With vectorization enabled
+        each operator carries its execution mode: ``[vectorized]`` when
+        its expressions compile to array kernels, ``[row-fallback: udf]``
+        (etc.) when the lowering keeps the row closures."""
+        plan = self._planned(optimize)
+        markers = vector_markers(plan, getattr(self.ctx, "config", None))
+        return P.explain_str(plan, markers)
 
     def __repr__(self):
         cols = ", ".join(f"{n}:{t}" for n, t in self.schema)

@@ -134,6 +134,17 @@ class Expr:
     def bind(self, schema: Schema) -> Callable:
         raise NotImplementedError
 
+    def bind_vec(self, schema: Schema) -> Callable:
+        """Vectorized sibling of ``bind()``: compile to a whole-batch
+        closure ``fn(cols, n) -> column`` evaluating numpy arrays /
+        Python lists over a column batch (repro.sql.vectorized,
+        docs/vectorized_execution.md). Raises
+        ``vectorized.VectorizeUnsupported`` for expressions with no
+        array form (udf, non-scalar operands) — the lowering then keeps
+        the per-row closures for that operator."""
+        from repro.sql.vectorized import compile_expr
+        return compile_expr(self, schema)
+
     def substitute(self, mapping: dict) -> "Expr":
         """Replace column references per ``mapping`` (name -> Expr) —
         predicate pushdown through a Project rewrites in terms of the

@@ -7,7 +7,7 @@ schemas, every emitted wide op declares its (key, value) columnar batch
 schema (rdd.batch_schema) — executors pack typed columns without per-batch
 type sniffing.
 
-Node -> lineage:
+Node -> lineage (row path, FlintConfig.vectorize=False):
 
     Scan       textFile(key).map(parse-and-cast of the PRUNED columns)
     RddScan    the RDD itself (rows are tuples matching the schema)
@@ -23,6 +23,16 @@ Node -> lineage:
                merge short-circuit (RDD.take's machinery); Limit(Sort(X))
                adds a per-partition top-n; the driver applies the total
                order / final truncation to the collected rows.
+
+With ``FlintConfig.vectorize`` (the default) every maximal
+scan/Project/Filter chain — plus the map side of a partial aggregate,
+groupByKey, or join directly above one — fuses into a SINGLE
+``mapBatches`` operator compiled by repro.sql.vectorized: one batch-in /
+batch-out closure running ingest -> masks/slices -> grouped fold over
+whole column arrays, with a per-chunk fallback to the bound row closures
+(docs/vectorized_execution.md). Expressions with no vectorized form
+(udfs) stop the fusion at the longest compilable prefix; the remaining
+steps lower as row operators exactly as above.
 """
 
 from __future__ import annotations
@@ -31,6 +41,7 @@ import operator
 
 from repro.core import rdd as R
 from repro.sql import plan as P
+from repro.sql import vectorized as V
 from repro.sql.expr import CASTS, Schema, dtype_serde_char
 
 _SLOT_MERGE = {"sum": operator.add, "min": min, "max": max}
@@ -111,6 +122,10 @@ def apply_driver_ops(rows: list, driver_ops: list) -> list:
 
 
 def _lower_engine(node: P.Plan, ctx) -> R.RDD:
+    if isinstance(node, (P.Scan, P.Project, P.Filter)):
+        fused = _lower_chain(node, ctx)
+        if fused is not None:
+            return fused
     if isinstance(node, P.Scan):
         return _lower_scan(node, ctx)
     if isinstance(node, P.RddScan):
@@ -119,7 +134,7 @@ def _lower_engine(node: P.Plan, ctx) -> R.RDD:
         base = node.child.schema()
         fns = [e.bind(base) for _, e in node.cols]
         child = _lower_engine(node.child, ctx)
-        return child.map(lambda row: tuple(f(row) for f in fns))
+        return child.map(_tuple_map(fns))
     if isinstance(node, P.Filter):
         pred = node.pred.bind(node.child.schema())
         return _lower_engine(node.child, ctx).filter(pred)
@@ -145,12 +160,136 @@ def _lower_scan(node: P.Scan, ctx) -> R.RDD:
     sel = node.schema().names
     idx = [full.index(n) for n in sel]
     casters = [CASTS[full.dtype_of(n)] for n in sel]
+    return ctx.textFile(node.key, node.nparts).map(_parse_fn(idx, casters))
 
+
+def _parse_fn(idx: list, casters: list):
     def parse(line):
         parts = line.split(",")
         return tuple(c(parts[i]) for c, i in zip(casters, idx))
+    return parse
 
-    return ctx.textFile(node.key, node.nparts).map(parse)
+
+# ------------------------------------------------- vectorized chain fusion
+
+
+def _tuple_map(fns):
+    def project(row):
+        return tuple(f(row) for f in fns)
+    return project
+
+
+def _vec_one(cols, n):
+    return 1
+
+
+def _row_chain(fn_specs):
+    """The exact row-semantics pipeline for a fused segment — chunks the
+    vectorized path rejects re-run through this (see make_fused)."""
+    def chain(it):
+        for kind, fn in fn_specs:
+            it = map(fn, it) if kind == "map" else filter(fn, it)
+        return it
+    return chain
+
+
+def _split_chain(node: P.Plan):
+    """Peel the Project/Filter chain off ``node`` (inclusive). Returns
+    (base, steps) with steps ordered base-first."""
+    steps = []
+    while isinstance(node, (P.Project, P.Filter)):
+        steps.append(node)
+        node = node.child
+    steps.reverse()
+    return node, steps
+
+
+def _vector_segment(base: P.Plan, steps: list, ctx):
+    """Compile the vectorizable PREFIX of a chain over ``base``. Returns
+    (base_rdd, ingest, stages, row_fns, schema_after_prefix, n_compiled)
+    or None when vectorization is off — or when a non-Scan base compiles
+    zero steps (nothing to gain over the plain row operators)."""
+    cfg = getattr(ctx, "config", None)
+    if cfg is None or not getattr(cfg, "vectorize", False):
+        return None
+    if isinstance(base, P.Scan):
+        full = base.full_schema
+        sel = base.schema().names
+        idx = [full.index(n) for n in sel]
+        casters = [CASTS[full.dtype_of(n)] for n in sel]
+        ingest = V.scan_ingest(
+            [(i, full.dtype_of(n), c)
+             for i, n, c in zip(idx, sel, casters)])
+        row_fns = [("map", _parse_fn(idx, casters))]
+        base_rdd = ctx.textFile(base.key, base.nparts)
+    else:
+        ingest = V.rows_ingest([t for _, t in base.schema().fields])
+        row_fns = []
+        base_rdd = _lower_engine(base, ctx)
+    schema = base.schema()
+    stages: list = []
+    compiled = 0
+    for st in steps:
+        try:
+            if isinstance(st, P.Filter):
+                stages.append(V.filter_stage(st.pred.bind_vec(schema)))
+                row_fns.append(("filter", st.pred.bind(schema)))
+            else:
+                stages.append(V.project_stage(
+                    [e.bind_vec(schema) for _, e in st.cols]))
+                row_fns.append(("map", _tuple_map(
+                    [e.bind(schema) for _, e in st.cols])))
+        except V.VectorizeUnsupported:
+            break
+        schema = st.schema()
+        compiled += 1
+    if not isinstance(base, P.Scan) and compiled == 0:
+        return None
+    return base_rdd, ingest, stages, row_fns, schema, compiled
+
+
+def _lower_chain(node: P.Plan, ctx) -> R.RDD | None:
+    """Fuse ``node``'s Project/Filter chain into one rows-emitting
+    mapBatches operator; steps past the compilable prefix stay row ops."""
+    base, steps = _split_chain(node)
+    seg = _vector_segment(base, steps, ctx)
+    if seg is None:
+        return None
+    base_rdd, ingest, stages, row_fns, _schema, compiled = seg
+    fused = V.make_fused(ingest, stages, V.rows_emit, _row_chain(row_fns),
+                         ctx.config.vector_batch_rows)
+    rdd = base_rdd.mapBatches(fused)
+    for st in steps[compiled:]:
+        sch = st.child.schema()
+        if isinstance(st, P.Filter):
+            rdd = rdd.filter(st.pred.bind(sch))
+        else:
+            rdd = rdd.map(_tuple_map([e.bind(sch) for _, e in st.cols]))
+    return rdd
+
+
+def _fused_kv(child_plan: P.Plan, ctx, row_mapper, emit_builder):
+    """Fuse a FULLY-vectorizable chain plus a key/value emission into one
+    operator (the map side of an aggregate/group/join). ``emit_builder``
+    compiles the emission over the chain's output schema and may raise
+    VectorizeUnsupported; any miss returns None and the caller falls back
+    to ``_lower_engine(child).map(row_mapper)`` — which still fuses the
+    chain itself, just with row-tuple emission."""
+    base, steps = _split_chain(child_plan)
+    seg = _vector_segment(base, steps, ctx)
+    if seg is None:
+        return None
+    base_rdd, ingest, stages, row_fns, schema, compiled = seg
+    if compiled < len(steps):
+        return None
+    try:
+        emit = emit_builder(schema)
+    except V.VectorizeUnsupported:
+        return None
+    row_fns.append(("map", row_mapper))
+    fused = V.make_fused(ingest, stages, emit, _row_chain(row_fns),
+                         ctx.config.vector_batch_rows)
+    return base_rdd.mapBatches(fused)
 
 
 def _key_value_fn(key_idx: list, rest_idx: list):
@@ -163,23 +302,36 @@ def _key_value_fn(key_idx: list, rest_idx: list):
 def _lower_join(node: P.Join, ctx) -> R.RDD:
     ls, rs = node.left.schema(), node.right.schema()
     lrest, rrest = node.rest_names(node.left), node.rest_names(node.right)
-    lmap = _key_value_fn([ls.index(n) for n in node.on],
-                         [ls.index(n) for n in lrest])
-    rmap = _key_value_fn([rs.index(n) for n in node.on],
-                         [rs.index(n) for n in rrest])
-    left = _lower_engine(node.left, ctx).map(lmap)
-    right = _lower_engine(node.right, ctx).map(rmap)
-    schemas = (_tuple_schema(ls, node.on),
-               _tuple_schema(ls, lrest), _tuple_schema(rs, rrest))
+    kschema = _tuple_schema(ls, node.on)
+    left = _lower_join_side(node.left, ctx, ls, node.on, lrest,
+                            kschema, _tuple_schema(ls, lrest))
+    right = _lower_join_side(node.right, ctx, rs, node.on, rrest,
+                             kschema, _tuple_schema(rs, rrest))
+    schemas = (kschema, _tuple_schema(ls, lrest), _tuple_schema(rs, rrest))
     joined = left.join(right, node.nparts, transport=node.transport,
                        batch_schemas=schemas)
     return joined.map(lambda kv: kv[0] + kv[1][0] + kv[1][1])
 
 
+def _lower_join_side(side: P.Plan, ctx, schema: Schema, on, rest,
+                     kschema: str | None, vschema: str | None) -> R.RDD:
+    key_idx = [schema.index(n) for n in on]
+    rest_idx = [schema.index(n) for n in rest]
+    mapper = _key_value_fn(key_idx, rest_idx)
+    if kschema and vschema and key_idx and rest_idx:
+        def vec_emit(sch):
+            return V.make_kv_plain_emit(
+                [V.col_selector(i) for i in key_idx], rest_idx,
+                kschema, vschema)
+        fused = _fused_kv(side, ctx, mapper, vec_emit)
+        if fused is not None:
+            return fused
+    return _lower_engine(side, ctx).map(mapper)
+
+
 def _lower_aggregate(node: P.Aggregate, ctx) -> R.RDD:
     base = node.child.schema()
     out_schema = node.schema()
-    child = _lower_engine(node.child, ctx)
     kfs = [e.bind(base) for _, e in node.keys]
     kschema = _tuple_schema(out_schema, [n for n, _ in node.keys])
 
@@ -187,15 +339,17 @@ def _lower_aggregate(node: P.Aggregate, ctx) -> R.RDD:
         return tuple(k(row) for k in kfs)
 
     if node.partial:
-        return _lower_partial(node, child, base, keyer, kschema)
-    return _lower_full(node, child, base, keyer, kschema)
+        return _lower_partial(node, ctx, base, keyer, kschema)
+    return _lower_full(node, ctx, base, keyer, kschema)
 
 
-def _lower_partial(node: P.Aggregate, child: R.RDD, base: Schema,
+def _lower_partial(node: P.Aggregate, ctx, base: Schema,
                    keyer, kschema: str | None) -> R.RDD:
     """Map-side-combine lowering: rows fold into per-key PARTIAL tuples
     before they ever reach the wire; reduceByKey merges slot-wise with
-    associative ops (sum/min/max — avg rides as (sum, count))."""
+    associative ops (sum/min/max — avg rides as (sum, count)). Under
+    vectorize=True the whole map side (chain + keyer + per-key slot fold)
+    fuses into one batch operator emitting pre-combined partials."""
     slot_ops: list = []
     inits: list = []
     layout: list = []  # (op, first slot, slot count) per aggregate
@@ -236,17 +390,37 @@ def _lower_partial(node: P.Aggregate, child: R.RDD, base: Schema,
                 out.append(vals[off])
         return key + tuple(out)
 
+    def vec_emit(schema):
+        key_fns = [e.bind_vec(schema) for _, e in node.keys]
+        slot_fns: list = []
+        for _name, a in node.aggs:
+            argf = (a.child.bind_vec(schema)
+                    if a.child is not None else None)
+            if a.op == "count":
+                slot_fns.append(_vec_one)
+            elif a.op == "avg":
+                slot_fns += [argf, _vec_one]
+            else:
+                slot_fns.append(argf)
+        return V.make_kv_agg_emit(key_fns, slot_fns, slot_ops,
+                                  ctx.config.vector_backend)
+
+    mapped = _fused_kv(node.child, ctx, mapper, vec_emit)
+    if mapped is None:
+        mapped = _lower_engine(node.child, ctx).map(mapper)
     vschema = "t(%s)" % ",".join(vchars) if vchars else None
-    agged = child.map(mapper).reduceByKey(
-        merge, node.nparts or child.nparts, transport=node.transport,
+    agged = mapped.reduceByKey(
+        merge, node.nparts or mapped.nparts, transport=node.transport,
         batch_schema=(kschema, vschema) if kschema else None)
     return agged.map(finalize)
 
 
-def _lower_full(node: P.Aggregate, child: R.RDD, base: Schema,
+def _lower_full(node: P.Aggregate, ctx, base: Schema,
                 keyer, kschema: str | None) -> R.RDD:
     """groupByKey lowering (collect_list, or optimize=False): full rows
-    ship to the reducers; aggregates evaluate over each group."""
+    ship to the reducers; aggregates evaluate over each group. The map
+    side (chain + key computation + columnar (key, row) emission) still
+    fuses under vectorize=True; the per-group fold stays row-level."""
     aggfns = []
     for name, a in node.aggs:
         arg = a.child.bind(base) if a.child is not None else None
@@ -260,10 +434,66 @@ def _lower_full(node: P.Aggregate, child: R.RDD, base: Schema,
         return key + tuple(f(rows) for f in aggfns)
 
     vschema = _tuple_schema(base, base.names)
-    grouped = child.map(mapper).groupByKey(
-        node.nparts or child.nparts, transport=node.transport,
+
+    def vec_emit(schema):
+        key_fns = [e.bind_vec(schema) for _, e in node.keys]
+        return V.make_kv_plain_emit(key_fns,
+                                    list(range(len(schema.names))),
+                                    kschema, vschema)
+
+    mapped = None
+    if kschema and vschema:
+        mapped = _fused_kv(node.child, ctx, mapper, vec_emit)
+    if mapped is None:
+        mapped = _lower_engine(node.child, ctx).map(mapper)
+    grouped = mapped.groupByKey(
+        node.nparts or mapped.nparts, transport=node.transport,
         batch_schema=(kschema, vschema) if kschema else None)
     return grouped.map(finalize)
+
+
+# ---------------------------------------------------------- explain marks
+
+
+def vector_markers(plan: P.Plan, config) -> dict:
+    """id(node) -> ``" [vectorized]"`` / ``" [row-fallback: <reason>]"``
+    suffixes for explain(): a dry-run of the same bind_vec compilation the
+    lowering performs, so the rendered plan shows which operators will run
+    on the array path. Empty when vectorization is off."""
+    if config is None or not getattr(config, "vectorize", False):
+        return {}
+    marks: dict = {}
+
+    def mark(node, exprs, schema):
+        try:
+            for e in exprs:
+                e.bind_vec(schema)
+            marks[id(node)] = " [vectorized]"
+        except V.VectorizeUnsupported as ex:
+            marks[id(node)] = f" [row-fallback: {ex.reason}]"
+
+    def walk(node):
+        if isinstance(node, P.Scan):
+            marks[id(node)] = " [vectorized]"
+        elif isinstance(node, P.Project):
+            mark(node, [e for _, e in node.cols], node.child.schema())
+        elif isinstance(node, P.Filter):
+            mark(node, [node.pred], node.child.schema())
+        elif isinstance(node, P.Aggregate):
+            base = node.child.schema()
+            exprs = [e for _, e in node.keys]
+            exprs += [a.child for _, a in node.aggs if a.child is not None]
+            if any(a.op == "collect_list" for _, a in node.aggs):
+                marks[id(node)] = " [row-fallback: collect_list]"
+            else:
+                mark(node, exprs, base)
+        elif isinstance(node, P.Join):
+            marks[id(node)] = " [vectorized]"
+        for c in node.children():
+            walk(c)
+
+    walk(plan)
+    return marks
 
 
 def _group_agg_fn(op: str, arg):

@@ -50,11 +50,15 @@ class Plan:
         return explain_str(self)
 
 
-def explain_str(plan: Plan) -> str:
+def explain_str(plan: Plan, markers: dict | None = None) -> str:
+    """Render the tree; ``markers`` (id(node) -> suffix, from
+    repro.sql.lower.vector_markers) annotates operators with their
+    execution mode, e.g. ``[vectorized]`` / ``[row-fallback: udf]``."""
     lines: list[str] = []
+    marks = markers or {}
 
     def walk(node: Plan, depth: int):
-        lines.append("  " * depth + node.describe())
+        lines.append("  " * depth + node.describe() + marks.get(id(node), ""))
         for c in node.children():
             walk(c, depth + 1)
 

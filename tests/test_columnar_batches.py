@@ -11,7 +11,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core import serde
 from repro.core.costs import CostLedger
 from repro.core.queues import ObjectStoreSim, SpillPointer, pack_records
-from repro.core.shuffle import is_columnar, pack_batch, unpack_batch
+from repro.core.shuffle import (KVBatch, is_columnar, pack_batch,
+                                pack_batch_columns, unpack_batch)
 
 
 def roundtrip(records, **kw):
@@ -197,6 +198,57 @@ def test_declared_schema_skips_sniffing_and_survives_violation():
     overflow = [((1,), (2**70, 0.0))]
     bodies, out = roundtrip(overflow, schema=("t(i)", "t(i,f)"))
     assert out == overflow  # fallback path, still exact
+
+
+def test_declared_schema_resumes_columnar_after_midstream_fallback():
+    """Regression: a violating record mid-stream must not demote the REST
+    of the batch to pickles — conforming runs on both sides of it keep
+    the declared columnar framing, only the violating run rides a pickle
+    frame."""
+    good = [((i,), (i, float(i))) for i in range(40)]
+    bad = [((98,), (2**70, 0.5)), ((99,), (2**70 + 1, 1.5))]
+    records = good[:20] + bad + good[20:]
+    bodies, out = roundtrip(records, schema=("t(i)", "t(i,f)"))
+    assert out == records
+    kinds = [is_columnar(b) for b in bodies]
+    assert kinds.count(True) >= 2, kinds   # columnar resumed after the run
+    assert kinds.count(False) >= 1, kinds  # the violating run fell back
+    # all-conforming tail after an all-violating batch: same story
+    bodies2, out2 = roundtrip(bad + good, schema=("t(i)", "t(i,f)"))
+    assert out2 == bad + good
+    assert is_columnar(bodies2[-1])
+
+
+def test_kvbatch_column_pack_is_byte_identical_to_row_pack():
+    """pack_batch_columns over a KVBatch (the vectorized map side's
+    column-major carrier) must produce the SAME wire bytes as pack_batch
+    over the equivalent row records — (src, seq) dedup and lineage
+    recovery rely on re-emissions being byte-identical regardless of
+    which path built the batch."""
+    rows = [((i % 5, f"h{i % 3:02d}"), (i, float(i) * 0.5))
+            for i in range(500)]
+    batch = KVBatch([[r[0][0] for r in rows], [r[0][1] for r in rows]],
+                    [[r[1][0] for r in rows], [r[1][1] for r in rows]],
+                    "t(i,s)", "t(i,f)")
+    assert (pack_batch_columns(batch)
+            == pack_batch(rows, schema=("t(i,s)", "t(i,f)")))
+    # identical under a tight cap too: same chunk boundaries, same bodies
+    assert (pack_batch_columns(batch, limit=4 * 1024)
+            == pack_batch(rows, limit=4 * 1024,
+                          schema=("t(i,s)", "t(i,f)")))
+
+
+def test_kvbatch_nonconforming_falls_back_like_rows():
+    """A KVBatch whose columns violate the declared schema (int64
+    overflow) packs exactly as the row path would: declared runs split,
+    everything round-trips."""
+    rows = [((i,), (i if i != 3 else 2**70, float(i))) for i in range(8)]
+    batch = KVBatch([[r[0][0] for r in rows]],
+                    [[r[1][0] for r in rows], [r[1][1] for r in rows]],
+                    "t(i)", "t(i,f)")
+    got = pack_batch_columns(batch)
+    assert got == pack_batch(rows, schema=("t(i)", "t(i,f)"))
+    assert [r for b in got for r in unpack_batch(b)] == rows
 
 
 @given(st.lists(st.tuples(

@@ -52,18 +52,18 @@ def test_filter_pushes_through_project_and_prunes_scan():
            .agg(sum_(col("tip_cents")).alias("tips"),
                 count_().alias("n")))
     assert q.explain() == golden("""
-        Aggregate[keys=[hour], aggs=[tips:=sum(tip_cents), n:=count(*)], combine=map_side, transport=sqs]
-          Project[hour:=substr(pickup, 12, 2), tip_cents:=cast((tip * 100.0) as int)]
-            Filter[(payment_type = 'credit')]
-              Scan[taxi.csv, cols=[pickup, payment_type, tip], parts=4]
+        Aggregate[keys=[hour], aggs=[tips:=sum(tip_cents), n:=count(*)], combine=map_side, transport=sqs] [vectorized]
+          Project[hour:=substr(pickup, 12, 2), tip_cents:=cast((tip * 100.0) as int)] [vectorized]
+            Filter[(payment_type = 'credit')] [vectorized]
+              Scan[taxi.csv, cols=[pickup, payment_type, tip], parts=4] [vectorized]
     """)
     # the raw plan keeps the user's op order and the full scan
     assert q.explain(optimize=False) == golden("""
-        Aggregate[keys=[hour], aggs=[tips:=sum(tip_cents), n:=count(*)], combine=none]
-          Filter[(payment_type = 'credit')]
-            Project[pickup, dropoff, dropoff_lon, dropoff_lat, trip_miles, payment_type, tip, total, precip, color, hour, tip_cents:=cast((tip * 100.0) as int)]
-              Project[pickup, dropoff, dropoff_lon, dropoff_lat, trip_miles, payment_type, tip, total, precip, color, hour:=substr(pickup, 12, 2)]
-                Scan[taxi.csv, cols=[pickup, dropoff, dropoff_lon, dropoff_lat, trip_miles, payment_type, tip, total, precip, color], parts=4]
+        Aggregate[keys=[hour], aggs=[tips:=sum(tip_cents), n:=count(*)], combine=none] [vectorized]
+          Filter[(payment_type = 'credit')] [vectorized]
+            Project[pickup, dropoff, dropoff_lon, dropoff_lat, trip_miles, payment_type, tip, total, precip, color, hour, tip_cents:=cast((tip * 100.0) as int)] [vectorized]
+              Project[pickup, dropoff, dropoff_lon, dropoff_lat, trip_miles, payment_type, tip, total, precip, color, hour:=substr(pickup, 12, 2)] [vectorized]
+                Scan[taxi.csv, cols=[pickup, dropoff, dropoff_lon, dropoff_lat, trip_miles, payment_type, tip, total, precip, color], parts=4] [vectorized]
     """)
 
 
@@ -79,21 +79,21 @@ def test_filter_splits_below_join_by_side():
     # lv-conjunct -> left, rv-conjunct -> right, key-only conjunct -> BOTH
     # (ls stays: it is part of the join's output)
     assert q.explain() == golden("""
-        Join[on=[k], how=inner, transport=sqs]
-          Filter[((lv > 1) and (k != 0))]
+        Join[on=[k], how=inner, transport=sqs] [vectorized]
+          Filter[((lv > 1) and (k != 0))] [vectorized]
             RddScan[cols=[k, ls, lv], parts=2]
-          Filter[((rv < 9) and (k != 0))]
+          Filter[((rv < 9) and (k != 0))] [vectorized]
             RddScan[cols=[k, rv], parts=2]
     """)
     # selecting away ls narrows the left shuffle input below the filter
     q2 = q.select("k", "lv", "rv")
     assert q2.explain() == golden("""
-        Project[k, lv, rv]
-          Join[on=[k], how=inner, transport=sqs]
-            Project[k, lv]
-              Filter[((lv > 1) and (k != 0))]
+        Project[k, lv, rv] [vectorized]
+          Join[on=[k], how=inner, transport=sqs] [vectorized]
+            Project[k, lv] [vectorized]
+              Filter[((lv > 1) and (k != 0))] [vectorized]
                 RddScan[cols=[k, ls, lv], parts=2]
-            Filter[((rv < 9) and (k != 0))]
+            Filter[((rv < 9) and (k != 0))] [vectorized]
               RddScan[cols=[k, rv], parts=2]
     """)
 
@@ -105,9 +105,9 @@ def test_filter_on_keys_pushes_below_aggregate_but_agg_output_stays():
     q = (df.groupBy("k").agg(sum_(col("v")).alias("total"))
          .where((col("k") > lit(0)) & (col("total") > lit(10))))
     assert q.explain() == golden("""
-        Filter[(total > 10)]
-          Aggregate[keys=[k], aggs=[total:=sum(v)], combine=map_side, transport=sqs]
-            Filter[(k > 0)]
+        Filter[(total > 10)] [vectorized]
+          Aggregate[keys=[k], aggs=[total:=sum(v)], combine=map_side, transport=sqs] [vectorized]
+            Filter[(k > 0)] [vectorized]
               RddScan[cols=[k, v], parts=2]
     """)
 
@@ -122,8 +122,8 @@ def test_nondeterministic_predicate_blocks_pushdown():
     q = df.select("k", (col("v") * lit(2)).alias("w")) \
           .where(flaky(col("w")))
     assert q.explain() == golden("""
-        Filter[flaky!(w)]
-          Project[k, w:=(v * 2)]
+        Filter[flaky!(w)] [row-fallback: udf]
+          Project[k, w:=(v * 2)] [vectorized]
             RddScan[cols=[k, v], parts=2]
     """)
     # ... and a deterministic predicate over a NON-deterministic projected
@@ -131,8 +131,8 @@ def test_nondeterministic_predicate_blocks_pushdown():
     rnd = udf(lambda k: k * 3, "int", name="rnd", deterministic=False)
     q2 = df.select("k", rnd(col("k")).alias("r")).where(col("r") > lit(0))
     assert q2.explain() == golden("""
-        Filter[(r > 0)]
-          Project[k, r:=rnd!(k)]
+        Filter[(r > 0)] [vectorized]
+          Project[k, r:=rnd!(k)] [row-fallback: udf]
             RddScan[cols=[k, v], parts=2]
     """)
 
@@ -147,9 +147,9 @@ def test_pruning_drops_unused_aggregates_and_narrows_join_inputs():
            .select("k", "sv"))
     # sw/ms are never used: dropped, and the scan narrows to k,v
     assert q.explain() == golden("""
-        Project[k, sv]
-          Aggregate[keys=[k], aggs=[sv:=sum(v)], combine=map_side, transport=sqs]
-            Project[k, v]
+        Project[k, sv] [vectorized]
+          Aggregate[keys=[k], aggs=[sv:=sum(v)], combine=map_side, transport=sqs] [vectorized]
+            Project[k, v] [vectorized]
               RddScan[cols=[k, s, v, w], parts=2]
     """)
 
