@@ -52,8 +52,17 @@
    (failed 5xx attempts bill nothing; recovery re-bills only work that
    actually ran).
 
-``--quick`` runs a reduced-size pass of (1), (2), (5), (6), (7) and (8)
-with hard assertions — the CI smoke gate for transport regressions.
+9. MULTI-TENANT SERVICE A/B (docs/multi_tenant.md): 4 tenants x 2 taxi
+   queries through one FlintService on both transports vs serial
+   single-tenant runs. Hard gates: identical results, duplicate
+   concurrent submissions share one producer stage (strictly fewer
+   invocations than 2x serial), the byte-capped shared cache evicts and
+   ends under its cap, a seeded chaos leg (FLINT_CHAOS_SEED) reproduces
+   fault-free answers with per-tenant retry budgets isolated, and zero
+   leaked keys after every session closes.
+
+``--quick`` runs a reduced-size pass of (1), (2), (5), (6), (7), (8) and
+(9) with hard assertions — the CI smoke gate for transport regressions.
 """
 
 from __future__ import annotations
@@ -552,6 +561,205 @@ def run_chaos_ab(rows=None):
     return out, identical
 
 
+def run_service_ab(rows=None):
+    """Multi-tenant service A/B (docs/multi_tenant.md). Hard gates:
+
+    * 4 tenants x 2 taxi queries over one shared slot pool return
+      results identical to serial single-tenant runs, on BOTH
+      transports, with zero transient keys left after close;
+    * duplicate concurrent submissions of the same query (s3) share one
+      producer stage — strictly fewer lambda invocations than 2x the
+      serial single-run count;
+    * a byte-capped shared cache sees evictions and ends under its cap;
+    * a seeded chaos leg (FLINT_CHAOS_SEED) reproduces the fault-free
+      answers with per-tenant retry budgets spent only by the tenants
+      that retried.
+
+    Returns (summary rows, all_gates_passed)."""
+    import threading
+
+    from repro.svc import FlintService
+
+    n = rows or N_ROWS
+    data = taxi_csv(n, seed=17)
+    out = []
+    ok = True
+
+    def svc_cfg(backend, **kw):
+        kw = {"concurrency": 8, "visibility_timeout_s": 1.0,
+              "drain_timeout_s": 4.0, "flush_records": 2000, **kw}
+        return FlintConfig(shuffle_backend=backend, **kw)
+
+    def serial_answers(backend):
+        ctx = FlintContext("flint", svc_cfg(backend))
+        ctx.upload("taxi.csv", data)
+        return ({"groupby": sorted(groupby_query(ctx)),
+                 "join": sorted(join_query(ctx))}, ctx.cost_report())
+
+    # ---- leg 1: 4 tenants x 2 queries, both transports, serial-equal
+    for backend in ("sqs", "s3"):
+        expected, _ = serial_answers(backend)
+        svc = FlintService(svc_cfg(backend), slot_capacity=16)
+        for t, w in (("t0", 2), ("t1", 1), ("t2", 1), ("t3", 1)):
+            svc.register_tenant(t, weight=w)
+        svc.upload("taxi.csv", data)
+        results, errors = {}, []
+
+        def run_tenant(name):
+            try:
+                with svc.session(name) as s:
+                    results[name] = {"groupby": sorted(groupby_query(s)),
+                                     "join": sorted(join_query(s))}
+            except Exception as e:
+                errors.append((name, repr(e)))
+
+        t0 = time.monotonic()
+        threads = [threading.Thread(target=run_tenant, args=(t,))
+                   for t in ("t0", "t1", "t2", "t3")]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.monotonic() - t0
+        rep = svc.report()
+        svc.close()
+        leaks = sum(svc.leak_report().values())
+        equal = (not errors
+                 and all(results[t] == expected for t in results)
+                 and len(results) == 4)
+        ok = ok and equal and leaks == 0
+        out.append({"leg": "tenants4x2", "backend": backend,
+                    "wall_s": round(wall, 4), "serial_equal": equal,
+                    "leaked_keys": leaks,
+                    "pool_peak": rep["pool"]["peak_held"],
+                    "share_hits": rep["share"]["hits"],
+                    "account_usd": rep["account"]["total_usd"]})
+        assert equal, f"service {backend}: tenant results != serial " \
+                      f"({errors or 'result mismatch'})"
+        assert leaks == 0, f"service {backend}: {leaks} leaked keys"
+
+    # ---- leg 2: duplicate submissions share one producer stage (s3)
+    _, serial_rep = serial_answers("s3")
+    svc = FlintService(svc_cfg("s3"), slot_capacity=16)
+    svc.upload("taxi.csv", data)
+
+    def slow_parts(it):
+        time.sleep(0.2)  # keep the producer stage alive for the joiner
+        return it
+
+    def dup_query(sess):
+        return sorted(sess.textFile("taxi.csv", 8)
+                      .mapPartitions(slow_parts)
+                      .map(lambda x: x.split(","))
+                      .map(lambda x: ((x[0][11:13], x[5]), 1))
+                      .reduceByKey(lambda a, b: a + b, 8)
+                      .collect())
+
+    dup_out = {}
+
+    def run_first():
+        with svc.session("first") as s:
+            dup_out["first"] = dup_query(s)
+
+    ta = threading.Thread(target=run_first)
+    ta.start()
+    deadline = time.monotonic() + 10.0
+    while (svc.share.stats["published"] == 0
+           and time.monotonic() < deadline):
+        time.sleep(0.005)
+    with svc.session("second") as s:
+        dup_out["second"] = dup_query(s)
+    ta.join()
+    rep = svc.report()
+    dup_requests = rep["account"]["lambda_requests"]
+    svc.close()
+    # 8 producer + 8 consumer tasks serial: two shared runs must invoke
+    # strictly fewer than two private ones
+    dup_serial = 2 * (8 + 8)
+    dedup_ok = (dup_out["first"] == dup_out["second"]
+                and rep["share"]["hits"] >= 1
+                and dup_requests < dup_serial
+                and sum(svc.leak_report().values()) == 0)
+    ok = ok and dedup_ok
+    out.append({"leg": "dup-query", "backend": "s3",
+                "lambda_requests": dup_requests,
+                "serial_2x": dup_serial,
+                "share_hits": rep["share"]["hits"],
+                "serial_equal": dup_out["first"] == dup_out["second"]})
+    assert dedup_ok, \
+        f"duplicate submissions did not share: {dup_requests} invocations" \
+        f" vs 2x serial {dup_serial}, hits={rep['share']['hits']}"
+
+    # ---- leg 3: byte-capped shared cache evicts and stays under cap
+    svc = FlintService(svc_cfg("s3"), slot_capacity=8, cache_bytes=4096)
+    svc.upload("taxi.csv", data)
+    with svc.session("cachey") as s:
+        hours = (s.textFile("taxi.csv", 4)
+                 .map(lambda x: (x.split(",")[0][11:13], 1)).cache())
+        r1 = sorted(hours.reduceByKey(lambda a, b: a + b, 4).collect())
+        months = (s.textFile("taxi.csv", 4)
+                  .map(lambda x: (x.split(",")[0][5:7], 1)).cache())
+        sorted(months.reduceByKey(lambda a, b: a + b, 4).collect())
+        r2 = sorted(hours.reduceByKey(lambda a, b: a + b, 4).collect())
+    cache_ok = (r1 == r2 and svc.cache.stats["evictions"] >= 1
+                and svc.cache.total_bytes() <= 4096)
+    ok = ok and cache_ok
+    out.append({"leg": "cache-cap", "backend": "s3",
+                "evictions": svc.cache.stats["evictions"],
+                "cache_bytes": svc.cache.total_bytes(), "cap": 4096,
+                "serial_equal": r1 == r2})
+    svc.close()
+    assert cache_ok, \
+        f"cache cap not enforced: {svc.cache.stats} " \
+        f"bytes={svc.cache.total_bytes()}"
+
+    # ---- leg 4: seeded account-wide chaos, per-tenant retry budgets
+    seed = int(os.environ.get("FLINT_CHAOS_SEED", "1337"))
+    expected, _ = serial_answers("s3")
+    plan = FaultPlan(seed=seed, s3_error_prob=0.02, sqs_error_prob=0.02,
+                     invoke_throttle_prob=0.02, lose_object_prob=0.005,
+                     account_concurrency=12)
+    svc = FlintService(svc_cfg("s3", max_stage_retries=5,
+                               retry_base_s=0.001, retry_cap_s=0.01),
+                       fault_plan=plan, slot_capacity=12)
+    svc.register_tenant("ca", retry_budget=2000)
+    svc.register_tenant("cb", retry_budget=2000)
+    svc.register_tenant("idle", retry_budget=2000)
+    svc.upload("taxi.csv", data)
+    chaos_results, chaos_errors = {}, []
+
+    def run_chaos_tenant(name):
+        try:
+            with svc.session(name) as s:
+                chaos_results[name] = {"groupby": sorted(groupby_query(s)),
+                                       "join": sorted(join_query(s))}
+        except Exception as e:
+            chaos_errors.append((name, repr(e)))
+
+    threads = [threading.Thread(target=run_chaos_tenant, args=(t,))
+               for t in ("ca", "cb")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    spent = {t: svc._tenants[t].retry_budget.spent
+             for t in ("ca", "cb", "idle")}
+    svc.close()
+    chaos_ok = (not chaos_errors
+                and all(chaos_results[t] == expected for t in ("ca", "cb"))
+                and spent["idle"] == 0
+                and sum(svc.leak_report().values()) == 0)
+    ok = ok and chaos_ok
+    out.append({"leg": "chaos", "backend": "s3", "seed": seed,
+                "serial_equal": not chaos_errors and all(
+                    chaos_results.get(t) == expected for t in ("ca", "cb")),
+                "retry_spent": spent, "gauge_peak": svc.gauge.peak,
+                "leaked_keys": sum(svc.leak_report().values())})
+    assert chaos_ok, \
+        f"chaos service leg failed: errors={chaos_errors} spent={spent}"
+    return out, ok
+
+
 def _print_transport_rows(rows, agreement):
     print("workload,backend,wall_s,modeled_service_s,total_usd,"
           "shuffle_requests,shuffled_bytes")
@@ -619,6 +827,11 @@ def main(argv=None):
               f"{r['total_usd']},{r['service_faults']},{r['recovery']}")
     print(f"# chaos runs identical to fault-free: {chaos_identical}")
 
+    service_rows, service_ok = run_service_ab(rows)
+    for r in service_rows:
+        print("service," + ",".join(f"{k}={v}" for k, v in r.items()))
+    print(f"# multi-tenant service gates passed: {service_ok}")
+
     # hard gates — make transport regressions fail loudly (CI --quick)
     assert agreement, "transports disagree on query results"
     assert col_identical, "columnar framing changed query results"
@@ -632,6 +845,7 @@ def main(argv=None):
         "vectorized execution changed SQL query results"
     assert chaos_identical, \
         "chaos runs differ from the fault-free reference"
+    assert service_ok, "multi-tenant service gates failed"
     if quick:
         print("# quick smoke passed")
         return ab, agreement

@@ -54,11 +54,13 @@ class FlintContext:
                  fault_plan: FaultPlan | dict | None = None,
                  elastic_retries: int = 2,
                  store: ObjectStoreSim | None = None,
+                 ledger: CostLedger | None = None,
+                 cache_index=None,
                  verbose: bool = False):
         self.config = config or FlintConfig()
         self.config.validate()  # reject incoherent resilience knobs early
         self.backend_name = backend
-        self.ledger = CostLedger()
+        self.ledger = ledger if ledger is not None else CostLedger()
         self.store = store or ObjectStoreSim(self.ledger)
         self.fault_plan = fault_plan or {}
         self.elastic_retries = elastic_retries
@@ -68,8 +70,11 @@ class FlintContext:
         self._collection_counter = 0
         # RDD.cache() registry: lineage token -> {"nparts", "ready"}.
         # Owned by the context (caches span actions/schedulers); the
-        # job-scoped GC keeps only keys registered here.
-        self._cache_index: dict[str, dict] = {}
+        # job-scoped GC keeps only keys registered here. The multi-tenant
+        # service substitutes its byte-capped SharedCache (repro.svc) —
+        # same mapping protocol, shared across every session
+        self._cache_index = (cache_index if cache_index is not None
+                             else {})
 
     # -------------------------------------------------------------- data
     def upload(self, key: str, data: bytes):
@@ -120,12 +125,7 @@ class FlintContext:
         # lineage from source — bounded like any stage resubmission
         cache_replans_left = self.config.max_stage_retries
         while True:
-            plan = build_plan(rdd, action, save_prefix,
-                              partition_multiplier=mult,
-                              cse=self.config.plan_cse,
-                              cache_index=self._cache_index,
-                              default_transport=self.config.shuffle_backend,
-                              limit=limit)
+            plan = self._build_plan(rdd, action, save_prefix, mult, limit)
             sched = self._make_scheduler()
             self.last_scheduler = sched
             try:
@@ -168,15 +168,30 @@ class FlintContext:
             finally:
                 sched.shutdown()
 
+    def _build_plan(self, rdd, action, save_prefix, mult, limit):
+        """Planning hook: the service session overrides this to thread
+        its cross-job share-registry view into the planner."""
+        return build_plan(rdd, action, save_prefix,
+                          partition_multiplier=mult,
+                          cse=self.config.plan_cse,
+                          cache_index=self._cache_index,
+                          default_transport=self.config.shuffle_backend,
+                          limit=limit)
+
     def _plan_cache_tokens(self, plan):
         return {arg[0] for stage in plan for task in stage.tasks
                 for kind, arg in task.ops if kind == "cache"}
 
     def _mark_caches_ready(self, plan):
+        committed = getattr(self._cache_index, "committed", None)
         for token in self._plan_cache_tokens(plan):
             entry = self._cache_index.get(token)
             if entry is not None:
                 entry["ready"] = True
+                if committed is not None:
+                    # byte-capped shared cache (repro.svc): size the new
+                    # materialization and evict LRU entries over the cap
+                    committed(token)
 
     def _unregister_pending_caches(self, plan):
         for token in self._plan_cache_tokens(plan):
@@ -186,9 +201,25 @@ class FlintContext:
 
     def clear_cache(self) -> int:
         """Drop every RDD.cache() materialization (billed free DELETEs);
-        returns the number of keys removed."""
+        returns the number of keys removed. A byte-capped shared index
+        (repro.svc.SharedCache) clears through its own ``drop_all`` so
+        entries pinned by running jobs survive."""
+        drop_all = getattr(self._cache_index, "drop_all", None)
+        if drop_all is not None:
+            return drop_all()
         self._cache_index.clear()
         return self.store.delete_prefix("_cache/")
+
+    def uncache(self, token: str) -> int:
+        """Drop ONE cached lineage's materialization by token (see
+        ``RDD.uncache``); returns the number of keys removed. No-op on
+        an unknown or already-dropped token."""
+        drop = getattr(self._cache_index, "drop", None)
+        if drop is not None:
+            return drop(token)
+        if self._cache_index.pop(token, None) is None:
+            return 0
+        return self.store.delete_prefix(f"_cache/{token}/")
 
     # ------------------------------------------------------------- costs
     def cost_report(self) -> dict:

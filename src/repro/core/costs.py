@@ -97,7 +97,13 @@ def sqs_request_units(payload_bytes: int) -> int:
 
 @dataclasses.dataclass
 class CostLedger:
-    """Thread-safe usage accumulator shared by the simulated services."""
+    """Thread-safe usage accumulator shared by the simulated services.
+
+    ``child()`` creates a TENANT-SCOPED sub-ledger: everything billed to
+    the child is billed to this (parent) ledger too, so a multi-tenant
+    service can show each tenant its own bill while the root ledger stays
+    the account-wide total (docs/multi_tenant.md). Chaining is one level
+    deep in practice but composes to any depth."""
 
     lambda_gb_seconds: float = 0.0
     lambda_requests: int = 0
@@ -119,6 +125,16 @@ class CostLedger:
 
     def __post_init__(self):
         self._lock = threading.Lock()
+        self._parent: "CostLedger | None" = None
+
+    def child(self) -> "CostLedger":
+        """A sub-ledger whose every charge also lands here. The service
+        layer hands one to each tenant so per-tenant cost reports and
+        dollar quotas come from real metered usage, not attribution
+        heuristics."""
+        c = CostLedger()
+        c._parent = self
+        return c
 
     def add_lambda(self, duration_s: float, memory_mb: int):
         with self._lock:
@@ -126,6 +142,8 @@ class CostLedger:
             # AWS billed per 100ms slices in 2018
             slices = math.ceil(duration_s / 0.1)
             self.lambda_gb_seconds += slices * 0.1 * (memory_mb / 1024.0)
+        if self._parent is not None:
+            self._parent.add_lambda(duration_s, memory_mb)
 
     def add_sqs(self, payload_bytes: int, receive: bool = False):
         with self._lock:
@@ -134,11 +152,15 @@ class CostLedger:
                 self.bytes_from_sqs += payload_bytes
             else:
                 self.bytes_to_sqs += payload_bytes
+        if self._parent is not None:
+            self._parent.add_sqs(payload_bytes, receive)
 
     def add_sqs_control(self):
         """Queue create/delete/empty-receive — one billable request."""
         with self._lock:
             self.sqs_requests += 1
+        if self._parent is not None:
+            self._parent.add_sqs_control()
 
     def add_s3(self, nbytes: int, put: bool = False):
         if put:
@@ -147,6 +169,8 @@ class CostLedger:
             with self._lock:
                 self.s3_gets += 1
                 self.bytes_from_s3 += nbytes
+            if self._parent is not None:
+                self._parent.add_s3(nbytes)
 
     def add_s3_put(self, nbytes: int):
         """A PUT; above the multipart threshold it bills as a multipart
@@ -160,25 +184,35 @@ class CostLedger:
                     nbytes / S3_MULTIPART_PART_SIZE)
             else:
                 self.s3_puts += 1
+        if self._parent is not None:
+            self._parent.add_s3_put(nbytes)
 
     def add_s3_list(self):
         with self._lock:
             self.s3_lists += 1
+        if self._parent is not None:
+            self._parent.add_s3_list()
 
     def add_s3_delete(self):
         """DELETE requests are free on the price sheet; counted anyway."""
         with self._lock:
             self.s3_deletes += 1
+        if self._parent is not None:
+            self._parent.add_s3_delete()
 
     def add_service_fault(self):
         """An injected transient service error (unbilled, counted)."""
         with self._lock:
             self.service_faults += 1
+        if self._parent is not None:
+            self._parent.add_service_fault()
 
     def add_lambda_throttle(self):
         """A 429-rejected invocation: no container, no GB-seconds."""
         with self._lock:
             self.lambda_throttles += 1
+        if self._parent is not None:
+            self._parent.add_lambda_throttle()
 
     # ------------------------------------------------------------- report
     @property
@@ -213,6 +247,12 @@ class CostLedger:
         }
 
     def report(self) -> dict:
+        # snapshot under the lock: concurrent jobs bill from many threads
+        # and a torn read here would misreport a live tenant's totals
+        with self._lock:
+            return self._report_locked()
+
+    def _report_locked(self) -> dict:
         return {
             "lambda_usd": round(self.lambda_usd, 6),
             "sqs_usd": round(self.sqs_usd, 6),

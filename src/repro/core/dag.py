@@ -227,15 +227,23 @@ class _Planner:
     closed shuffles, and the cache registry shared with the context."""
 
     def __init__(self, mult: int, cse: bool, cache_index: dict | None,
-                 default_transport: str = ""):
+                 default_transport: str = "", share=None):
         self.stages: list[StagePlan] = []
         self.mult = mult
         self.cse = cse
         self.cache_index = cache_index
         self.default_transport = default_transport
+        # service-wide CSE (docs/multi_tenant.md): a per-job view of the
+        # share registry. ``lookup(key)`` answers with another LIVE job's
+        # identical shuffle — this plan then reads it as a FOREIGN input
+        # (no producer stage of its own) via a fresh consumer group;
+        # ``publish`` offers this plan's own closed shuffles in return
+        self.share = share
         self._fps: dict[int, bytes] = {}
         # close-site key -> (sid, n_producer_tasks, ShuffleWrite)
         self._shared: dict[tuple, tuple] = {}
+        # close-site key -> (sid, n_prod) for foreign (cross-job) hits
+        self._foreign: dict[tuple, tuple] = {}
         self._materializing: set[str] = set()
         self._est_memo: dict[int, float] = {}
 
@@ -450,6 +458,20 @@ class _Planner:
                 sid, n_prod, write = hit
                 write.consumer_groups += 1
                 return sid, n_prod, write.consumer_groups - 1
+            if self.share is not None:
+                fhit = self._foreign.get(key)
+                if fhit is None:
+                    fhit = self.share.lookup(key)
+                    if fhit is not None:
+                        self._foreign[key] = fhit
+                if fhit is not None:
+                    # another live job already plans (or ran) this exact
+                    # shuffle: skip the producer stage entirely and drain
+                    # its stream through a fresh consumer group. Only
+                    # S3-routed shuffles resolve here — the registry
+                    # refuses destructive (queue) transports
+                    sid, n_prod = fhit
+                    return sid, n_prod, self.share.join_group(sid)
         write = ShuffleWrite(next(_next_shuffle), nparts, mode,
                              combine_fn=combine, key_side=key_side,
                              transport=transport,
@@ -465,6 +487,8 @@ class _Planner:
         n_prod = len(tasks)
         if key is not None:
             self._shared[key] = (sid, n_prod, write)
+            if self.share is not None:
+                self.share.publish(key, sid, n_prod, write)
         return sid, n_prod, 0
 
 
@@ -479,7 +503,7 @@ def build_plan(node, action: str, save_prefix: str | None = None,
                partition_multiplier: int = 1, *, cse: bool = True,
                cache_index: dict | None = None,
                default_transport: str = "",
-               limit: int | None = None) -> list[StagePlan]:
+               limit: int | None = None, share=None) -> list[StagePlan]:
     """Physical plan for one action. ``partition_multiplier`` scales wide-op
     partition counts — the paper's elasticity answer to the executor memory
     cap. ``cse=False`` restores the one-consumer-per-shuffle planner (kept
@@ -490,9 +514,11 @@ def build_plan(node, action: str, save_prefix: str | None = None,
     shuffle to SQS or the S3 exchange via the cost model (estimated volume
     x the ledger's price constants); any other value leaves unhinted
     shuffles to the runtime fallback (FlintConfig.shuffle_backend).
-    ``limit`` caps the action merge (RDD.take / DataFrame.limit)."""
+    ``limit`` caps the action merge (RDD.take / DataFrame.limit).
+    ``share`` is a per-job view of the multi-tenant service's cross-job
+    CSE registry (repro.svc.share) — None outside the service."""
     planner = _Planner(partition_multiplier, cse, cache_index,
-                       default_transport)
+                       default_transport, share=share)
     chain = planner.visit(node)
     stages = planner.stages
     stage_id = len(stages)

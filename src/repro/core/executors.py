@@ -44,6 +44,7 @@ from repro.core.costs import (LAMBDA_PAYLOAD_LIMIT,
                               S3_EXCHANGE_BATCH_LIMIT, CostLedger)
 from repro.core.dag import (CacheInput, CollectionInput, ShuffleRead,
                             SourceInput, TaskDef)
+from repro.core.faults import ConcurrencyGauge
 from repro.core.queues import ObjectStoreSim, SQSSim
 from repro.core.retry import (RetryBudget, RetryBudgetExhausted,
                               RetryExhausted, RetryingStore, RetryPolicy,
@@ -239,7 +240,8 @@ class LambdaSim:
     def __init__(self, cfg: FlintConfig, ledger: CostLedger,
                  store: ObjectStoreSim, sqs: SQSSim,
                  transports: TransportSet | None = None, *,
-                 faults=None, budget: RetryBudget | None = None):
+                 faults=None, budget: RetryBudget | None = None,
+                 gauge=None):
         self.cfg = cfg
         self.ledger = ledger
         self.store = store
@@ -253,7 +255,14 @@ class LambdaSim:
             cfg, budget=budget))
         self._warm = 0
         self._lock = threading.Lock()
-        self._inflight = 0
+        # account-concurrency gauge: private by default; the multi-tenant
+        # service passes ONE shared ConcurrencyGauge so every session's
+        # in-flight invocations count against the same account cap
+        self.gauge = gauge if gauge is not None else ConcurrencyGauge()
+        # key-space scope for this sim's transient spill keys ("" outside
+        # the service; "j{n}/" per job under it, so the job-scoped GC can
+        # sweep _payload/_result without touching other live jobs' keys)
+        self.scope = ""
         self.invocations = 0
         self.cold_starts = 0
         self.throttles = 0
@@ -276,14 +285,11 @@ class LambdaSim:
         # the account-concurrency gauge counts this invocation from request
         # arrival (incremented BEFORE the admission check, so simultaneous
         # dispatches see each other) until the response is produced
-        with self._lock:
-            self._inflight += 1
-            running = self._inflight
+        running = self.gauge.enter()
         try:
             return self._invoke(payload, running)
         finally:
-            with self._lock:
-                self._inflight -= 1
+            self.gauge.exit()
 
     def _invoke(self, payload: dict, running: int) -> dict:
         if self.faults is not None:
@@ -301,7 +307,8 @@ class LambdaSim:
         blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
         if len(blob) > LAMBDA_PAYLOAD_LIMIT:
             # paper §III-B: split/spill oversized payloads through S3
-            key = f"_payload/{payload['stage']}/{payload['index']}/{time.monotonic_ns()}"
+            key = (f"_payload/{self.scope}{payload['stage']}/"
+                   f"{payload['index']}/{time.monotonic_ns()}")
             try:
                 self.rstore.put(key, blob)
             except (RetryExhausted, RetryBudgetExhausted) as e:
@@ -342,7 +349,7 @@ class LambdaSim:
         resp.setdefault("duration_s", time.monotonic() - t0)
         blob = pickle.dumps(resp, protocol=pickle.HIGHEST_PROTOCOL)
         if len(blob) > LAMBDA_PAYLOAD_LIMIT:
-            key = f"_result/{time.monotonic_ns()}"
+            key = f"_result/{self.scope}{time.monotonic_ns()}"
             try:
                 self.rstore.put(key, blob)
             except (RetryExhausted, RetryBudgetExhausted) as e:

@@ -124,6 +124,34 @@ class FaultPlan:
         return not (self.tasks or self.has_service_faults)
 
 
+class ConcurrencyGauge:
+    """Account-level in-flight invocation counter. Each ``LambdaSim``
+    owns one by default; the multi-tenant service (repro.svc) shares a
+    single gauge across every session's LambdaSim so that
+    ``FaultPlan.account_concurrency`` caps the ACCOUNT — the paper's
+    per-account Lambda limit — rather than each job independently
+    (docs/multi_tenant.md). ``peak`` is observability for tests and
+    benchmarks asserting the shared cap was actually exercised."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0
+        self.peak = 0
+
+    def enter(self) -> int:
+        """Count an invocation in; returns the in-flight total including
+        it (the admission check compares this against the cap)."""
+        with self._lock:
+            self.value += 1
+            if self.value > self.peak:
+                self.peak = self.value
+            return self.value
+
+    def exit(self):
+        with self._lock:
+            self.value -= 1
+
+
 class FaultInjector:
     """Seeded, reproducible fault decisions over one FaultPlan. Installed
     on the sims as a ``.faults`` attribute for the duration of one

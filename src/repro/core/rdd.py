@@ -101,6 +101,22 @@ class RDD:
         self.cached = True
         return self
 
+    def cache_token(self) -> str | None:
+        """Content-addressed identity of this lineage's cache() entry
+        (None when the lineage holds an unserializable callable — such
+        lineages never materialize)."""
+        from repro.core.dag import cache_token  # lazy: dag imports rdd
+        return cache_token(self)
+
+    def uncache(self) -> int:
+        """Drop this RDD's cache() materialization and registration
+        (clears the ``cached`` mark too, so the next action recomputes
+        from source without re-materializing); returns the number of
+        store keys removed."""
+        self.cached = False
+        token = self.cache_token()
+        return self.ctx.uncache(token) if token else 0
+
     def toDF(self, schema) -> "Any":
         """Lift an RDD whose records are tuples matching ``schema`` (a
         repro.sql Schema or a list of (name, dtype) pairs) onto the

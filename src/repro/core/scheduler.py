@@ -67,7 +67,7 @@ from repro.core.dag import ShuffleRead, StagePlan, TaskDef
 from repro.core.executors import FlintConfig, LambdaSim, serialize_task
 from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.queues import ObjectStoreSim, SQSSim
-from repro.core.retry import RetryBudget
+from repro.core.retry import RetryBudget, TransientServiceError
 from repro.core.shuffle import TransportSet
 
 #: transient object-store prefixes swept by the job-end GC (the S3
@@ -100,6 +100,35 @@ class StageFailure(RuntimeError):
         self.detail = detail or {}
 
 
+class _NullSlots:
+    """Solo-mode slot source: the in-process pool (``cfg.concurrency``)
+    is the only launch bound, so every slot request succeeds instantly.
+    The multi-tenant service replaces this with a ``JobSlots`` lease on
+    its weighted fair-share pool (repro.svc.fairshare) — same protocol,
+    but ``try_acquire`` can say no and ``wait`` can block."""
+
+    def try_acquire(self) -> bool:
+        return True
+
+    def acquire(self):
+        pass
+
+    def release(self):
+        pass
+
+    def set_demand(self, n: int):
+        pass
+
+    def contended(self) -> bool:
+        return False
+
+    def wait(self, timeout: float):
+        pass
+
+    def detach(self):
+        pass
+
+
 def _consumed_shuffles(stage: StagePlan) -> set[int]:
     sids: set[int] = set()
     for task in stage.tasks:
@@ -112,7 +141,7 @@ class FlintScheduler:
     def __init__(self, cfg: FlintConfig, ledger: CostLedger | None = None,
                  store: ObjectStoreSim | None = None, *,
                  fault_plan: dict | None = None, verbose: bool = False,
-                 cache_index: dict | None = None):
+                 cache_index: dict | None = None, binding=None):
         cfg.validate()
         if (cfg.shuffle_backend in ("sqs", "auto")
                 and cfg.visibility_timeout_s >= cfg.drain_timeout_s):
@@ -128,20 +157,43 @@ class FlintScheduler:
         self.store = store or ObjectStoreSim(self.ledger)
         self.sqs = SQSSim(self.ledger, duplicate_prob=cfg.duplicate_prob,
                           visibility_timeout=cfg.visibility_timeout_s)
+        # service-mode binding (repro.svc): per-job slice of the shared
+        # pool — slot lease, shuffle-share registry, account concurrency
+        # gauge, tenant quota guard, per-job key scope. Solo mode runs
+        # with inert defaults and behaves exactly as before.
+        self._binding = binding
+        self._slots = binding.slots if binding is not None else _NullSlots()
+        self._share = binding.share if binding is not None else None
+        self._job_id = binding.job_id if binding is not None else 0
+        self._scope = binding.scope if binding is not None else ""
+        self._cost_guard = (binding.cost_guard
+                            if binding is not None else None)
         # the chaos layer: one seeded injector consulted by every service
         # sim, one job-wide retry budget every retry layer draws from
         plan = FaultPlan.coerce(fault_plan)
         self.faults = FaultInjector(plan, self.ledger)
-        self.retry_budget = RetryBudget(cfg.retry_budget)
+        if binding is not None and binding.retry_budget is not None:
+            # per-tenant budget: every job the tenant runs draws from it
+            self.retry_budget = binding.retry_budget
+        else:
+            self.retry_budget = RetryBudget(cfg.retry_budget)
         if plan.has_service_faults:
-            self.store.faults = self.faults
+            # the per-scheduler SQS sim is always ours to chaos; the
+            # object store is ours ONLY solo — in service mode it is
+            # shared across live jobs and carries ONE service-wide
+            # injector, installed (and detached) by the service itself
             self.sqs.faults = self.faults
+            if binding is None:
+                self.store.faults = self.faults
         self.transports = TransportSet(cfg, self.ledger, self.store,
                                        self.sqs, budget=self.retry_budget)
         self.lam = LambdaSim(cfg, self.ledger, self.store, self.sqs,
                              self.transports,
                              faults=None if plan.empty else self.faults,
-                             budget=self.retry_budget)
+                             budget=self.retry_budget,
+                             gauge=(binding.gauge
+                                    if binding is not None else None))
+        self.lam.scope = self._scope
         self.pool = cf.ThreadPoolExecutor(max_workers=cfg.concurrency)
         self.verbose = verbose
         self.stage_stats: list[dict] = []
@@ -183,6 +235,18 @@ class FlintScheduler:
                 (s.write.nparts,
                  s.write.transport or self.cfg.fallback_backend)
             for s in stages if s.write is not None}
+        for stage in stages:
+            for sid_tr in (t.input.transports or {} for t in stage.tasks
+                           if isinstance(t.input, ShuffleRead)):
+                for sid, tname in sid_tr.items():
+                    if sid not in self._sid_meta:
+                        # FOREIGN shuffle: produced by another job's
+                        # scheduler, joined through the service share
+                        # registry (docs/multi_tenant.md) — drainable
+                        # here, never produced, released, or destroyed
+                        # here (nparts 0 keeps destroy a no-op)
+                        self._sid_meta[sid] = (
+                            0, tname or self.cfg.fallback_backend)
         self._sid_consumers = {}
         for si, stage in enumerate(stages):
             for sid in _consumed_shuffles(stage):
@@ -208,8 +272,15 @@ class FlintScheduler:
     def _open_shuffle(self, write):
         """Create the shuffle's channels before any producer launches."""
         name = write.transport or self.cfg.fallback_backend
-        self.transports.get(name).open(write.shuffle_id, write.nparts,
-                                       groups=write.consumer_groups)
+        tr = self.transports.get(name)
+        tr.open(write.shuffle_id, write.nparts,
+                groups=write.consumer_groups)
+        if self._share is not None:
+            # a service-shared shuffle: record the owning transport so a
+            # consumer group joining from ANOTHER job's plan after this
+            # point can raise the all-groups-released reclaim threshold
+            # (transport.add_group) through the registry
+            self._share.notify_open(write.shuffle_id, tr, write)
 
     def _destroy_shuffles(self, sids):
         """All-consumers-done sweep — the transport skips partitions
@@ -230,7 +301,12 @@ class FlintScheduler:
             drained = self._sid_drained[sid]
             drained.add(si)
             if drained >= self._sid_consumers[sid]:
-                dead.append(sid)
+                if self._share is not None and self._share.manages(sid):
+                    # service-shared: other jobs may still be draining —
+                    # the registry destroys once every participant is done
+                    self._share.job_drained(sid, self._job_id)
+                else:
+                    dead.append(sid)
         self._destroy_shuffles(dead)
 
     def _release_task_partitions(self, task: TaskDef):
@@ -379,18 +455,44 @@ class FlintScheduler:
         and rewrites the content-addressed keys in place, so the retried
         consumer's deferred GETs pick them up without reopening the
         channel. This keeps recovery cost proportional to what was lost,
-        not to the stage width.
+        not to the stage width. A quorum-incomplete drain timeout with
+        every producing stage finished (a LOST EOS MANIFEST) is targeted
+        too: the drain reports which producers' manifests DID arrive
+        (detail["have_eos"]) and the absent ones are the targets. And when
+        a target sits MID-CHAIN — its own shuffle input was already
+        released, tombstoned, and reclaimed by its first successful run —
+        the replay expands deepest-first: the upstream producing stage is
+        resubmitted in full (every producer feeds every partition) behind
+        a channel ``reopen``, or the replayed task would abort on its own
+        stale tombstone.
 
-        FULL path (no srcs — e.g. a lost EOS manifest surfacing as a
-        drain timeout): reopen and replay the whole upstream lineage
-        deepest-first; consumers still mid-drain dedup the byte-identical
-        overlap instead of double-counting.
+        FULL path (no producer names at all): reopen and replay the whole
+        upstream lineage deepest-first; consumers still mid-drain dedup
+        the byte-identical overlap instead of double-counting.
 
         Both paths charge the per-stage resubmission budget; returns
         False when max_stage_retries is exhausted."""
+        if any(sid not in self._producer_stage_of
+               for sid, _ in task.input.parts):
+            # a service-shared input produced by ANOTHER job's scheduler:
+            # no lineage here to replay it with. Fail structured — the
+            # service answers with one solo re-plan (sharing disabled)
+            return False
+        detail = detail or {}
         targets: dict[int, set[int]] = {}
         stage_by_id = {s.id: i for i, s in enumerate(self._stages)}
-        for src in (detail or {}).get("srcs") or ():
+        srcs = detail.get("srcs") or ()
+        if not srcs and "have_eos" in detail:
+            # every producing stage is done (the caller checked), yet the
+            # EOS quorum never completed: the missing manifests' writers
+            # are exactly the producers not named in have_eos
+            psi = self._producer_stage_of.get(detail.get("sid"))
+            if psi is not None:
+                have = set(detail["have_eos"])
+                pstage = self._stages[psi]
+                srcs = [s for s in (f"s{pstage.id}t{t.index}"
+                                    for t in pstage.tasks) if s not in have]
+        for src in srcs:
             m = re.fullmatch(r"s(\d+)t(\d+)", src)
             psi = stage_by_id.get(int(m.group(1))) if m else None
             if psi is None:
@@ -398,14 +500,63 @@ class FlintScheduler:
                 break
             targets.setdefault(psi, set()).add(int(m.group(2)))
         if targets:
-            for psi in targets:
-                n = self._stage_retries.get(psi, 0) + 1
+            replay_order: list[int] = []
+            only: dict[int, set[int] | None] = {}  # None = full stage
+            reopen_sids: list[int] = []
+            scanned: set[tuple[int, int]] = set()
+
+            def require(psi: int, indices: set[int] | None):
+                stage = self._stages[psi]
+                for t in stage.tasks:
+                    if indices is not None and t.index not in indices:
+                        continue
+                    if (psi, t.index) in scanned:
+                        continue
+                    scanned.add((psi, t.index))
+                    inp = t.input
+                    if not isinstance(inp, ShuffleRead):
+                        continue
+                    for k, (sid, _mode) in enumerate(inp.parts):
+                        up = self._producer_stage_of.get(sid)
+                        if up is None:
+                            continue
+                        g = inp.groups[k] if inp.groups else 0
+                        if not self._transport_of(sid).partition_drainable(
+                                sid, inp.partition, g):
+                            if sid not in reopen_sids:
+                                reopen_sids.append(sid)
+                            require(up, None)
+                if psi not in only:
+                    only[psi] = set() if indices is not None else None
+                    replay_order.append(psi)
+                if indices is None:
+                    only[psi] = None
+                elif only[psi] is not None:
+                    only[psi] |= indices
+            for psi, indices in sorted(targets.items()):
+                require(psi, indices)
+            # only the NAMED target stages are charged: an upstream stage
+            # replayed solely to re-produce a reclaimed input rides its
+            # target's charge (every recovery still charges >= 1 stage,
+            # so a black-hole loss loop stays bounded), or deep chains
+            # would bill the innermost stage for every downstream incident.
+            # The charge is keyed per (stage, task set): a permanently
+            # black-holed object re-targets the SAME tasks every time and
+            # exhausts at max_stage_retries, while independent losses on
+            # different producers of a wide stage don't share one counter
+            for psi, indices in targets.items():
+                key = (psi, tuple(sorted(indices)))
+                n = self._stage_retries.get(key, 0) + 1
                 if n > self.cfg.max_stage_retries:
                     return False
-                self._stage_retries[psi] = n
-            for psi, indices in sorted(targets.items()):
-                self._replay_stage(psi, only=indices)
-            self.recovery_stats["stage_resubmits"] += len(targets)
+                self._stage_retries[key] = n
+            for sid in reopen_sids:
+                write = self._stages[self._producer_stage_of[sid]].write
+                self._transport_of(sid).reopen(
+                    sid, write.nparts, groups=write.consumer_groups)
+            for psi in replay_order:
+                self._replay_stage(psi, only=only[psi])
+            self.recovery_stats["stage_resubmits"] += len(replay_order)
             return True
         order: list[int] = []
         seen: set[int] = set()
@@ -508,6 +659,19 @@ class FlintScheduler:
         finally:
             pool.shutdown(wait=False)
 
+    def _invoke_slotted(self, payload):
+        """Barrier-mode fair-share gate, applied INSIDE the worker thread
+        (safe to block there: a barrier stage's inputs are complete, so a
+        task holding a slot never waits on another that wants one).
+        Pipelined mode gates at the launch frontier instead — its
+        consumers block mid-drain on producers that may be slot-starved,
+        so blocking a worker thread on a slot could deadlock."""
+        self._slots.acquire()
+        try:
+            return self.lam.invoke(payload)
+        finally:
+            self._slots.release()
+
     def _run_stage(self, stage: StagePlan) -> Any:
         t0 = time.monotonic()
         n = len(stage.tasks)
@@ -532,7 +696,7 @@ class FlintScheduler:
             payload = self._payload_for(
                 task, stage, attempts[task.index],
                 dict(extra or {}, _speculative=speculative))
-            fut = self.pool.submit(self.lam.invoke, payload)
+            fut = self.pool.submit(self._invoke_slotted, payload)
             inflight[fut] = (task.index, speculative, time.monotonic())
 
         for task in stage.tasks:
@@ -560,6 +724,8 @@ class FlintScheduler:
         start_allowance = self.cfg.cold_start_s * self.cfg.start_latency_scale
 
         while inflight or delayed:
+            if self._cost_guard is not None:
+                self._cost_guard()
             now = time.monotonic()
             due = [e for e in delayed if e[0] <= now]
             if due:
@@ -652,7 +818,8 @@ class FlintScheduler:
                 self._open_shuffle(stage.write)
 
         deps = [sorted(self._producer_stage_of[sid]
-                       for sid in _consumed_shuffles(stage))
+                       for sid in _consumed_shuffles(stage)
+                       if sid in self._producer_stage_of)
                 for stage in stages]
 
         n_stages = len(stages)
@@ -687,10 +854,26 @@ class FlintScheduler:
             for task in stage.tasks:
                 push(si, task)
 
+        # fair-share slot accounting (service mode; _NullSlots solo). One
+        # slot is held per inflight invocation. Retries and chained
+        # continuations CARRY their predecessor's slot instead of
+        # re-queueing for one — a continuation re-entering the general
+        # scramble could starve behind other tenants' consumers that are
+        # blocked mid-drain on exactly this producer's output. Carried
+        # slots not consumed by launch_ready are returned at the end of
+        # the event-loop iteration (invariant: held == inflight + carry).
+        slots = self._slots
+        carry = [0]
+
         def launch_ready():
             while pending and len(inflight) < cfg.concurrency:
+                if carry[0] > 0:
+                    carry[0] -= 1
+                elif not slots.try_acquire():
+                    break
                 si, _, task, extra, speculative = heapq.heappop(pending)
                 if task.index in results[si]:
+                    carry[0] += 1
                     continue  # stale: original already won
                 if stage_t0[si] is None:
                     stage_t0[si] = time.monotonic()
@@ -700,6 +883,11 @@ class FlintScheduler:
                 fut = self.pool.submit(self.lam.invoke, payload)
                 inflight[fut] = (si, task.index, speculative,
                                  time.monotonic())
+            # advertise EFFECTIVE demand — what could launch right now.
+            # A job whose local pool is saturated must not hold the
+            # fair-share pool idle against other tenants
+            slots.set_demand(min(len(pending),
+                                 max(0, cfg.concurrency - len(inflight))))
 
         def deps_done(si) -> bool:
             return all(stage_done[d] for d in deps[si])
@@ -746,6 +934,8 @@ class FlintScheduler:
         launch_ready()
         try:
             while inflight or pending or delayed:
+                if self._cost_guard is not None:
+                    self._cost_guard()
                 now = time.monotonic()
                 due = [e for e in delayed if e[0] <= now]
                 if due:
@@ -759,9 +949,14 @@ class FlintScheduler:
                         time.sleep(max(0.001, min(
                             0.25,
                             min(e[0] for e in delayed) - time.monotonic())))
+                    elif pending:
+                        # slot-starved: every runnable task is waiting on
+                        # the fair-share pool — block until a slot frees
+                        slots.wait(0.05)
                     continue
                 done, _ = cf.wait(list(inflight),
-                                  timeout=0.05 if (spec_armed() or delayed)
+                                  timeout=0.05 if (spec_armed() or delayed
+                                                   or slots.contended())
                                   else 5.0,
                                   return_when=cf.FIRST_COMPLETED)
                 now = time.monotonic()
@@ -794,10 +989,15 @@ class FlintScheduler:
                             self.lam.rstore.get(resp["spilled"]))
                     if idx in results[si]:
                         dup_dropped[si] += 1  # speculative dup lost the race
+                        slots.release()
                         continue
                     if resp.get("status") == "throttled":
                         # 429: never ran, never billed — re-dispatch after
-                        # a decorrelated-jitter pause, no attempt charged
+                        # a decorrelated-jitter pause, no attempt charged.
+                        # The slot goes back to the pool for the duration
+                        # of the pause: a throttled tenant holding slots
+                        # it cannot use would starve the others
+                        slots.release()
                         self.recovery_stats["throttled"] += 1
                         delayed.append(
                             (time.monotonic()
@@ -809,7 +1009,9 @@ class FlintScheduler:
                         # a dead consumer's unacked messages redeliver
                         # after the visibility timeout — retry like any
                         # task; lost durable input triggers lineage
-                        # resubmission instead (triage raises if terminal)
+                        # resubmission instead (triage raises if terminal).
+                        # The retry carries the failed attempt's slot
+                        carry[0] += 1
                         self._on_task_error(stages[si], stages[si].tasks[idx],
                                             resp, attempts[si])
                         push(si, stages[si].tasks[idx],
@@ -818,7 +1020,9 @@ class FlintScheduler:
                     self._dispatch_sleep = 0.0  # concurrency healthy again
                     if "continuation" in resp:
                         # chaining: the producer has NOT emitted EOS yet —
-                        # the re-invoked link (or its last successor) will
+                        # the re-invoked link (or its last successor) will.
+                        # The next link carries this one's slot
+                        carry[0] += 1
                         chained[si] += 1
                         self._merge_partial(resp, idx, partials[si])
                         cursors[si][idx] = resp["continuation"]
@@ -827,6 +1031,7 @@ class FlintScheduler:
                              extra=dict(resp["continuation"],
                                         _link=links[si][idx]))
                         continue
+                    slots.release()
                     durations[si].append(now - started)
                     self._merge_partial(resp, idx, partials[si])
                     results[si][idx] = True
@@ -834,6 +1039,11 @@ class FlintScheduler:
                     if len(results[si]) == len(stages[si].tasks):
                         finish_stage(si, stages[si])
                 launch_ready()
+                # carried slots launch_ready could not use this iteration
+                # (frontier empty / local pool full) go back to the pool
+                while carry[0] > 0:
+                    carry[0] -= 1
+                    slots.release()
         except BaseException:
             # unblock any consumer still waiting on queues we now know
             # will never complete (fatal failure / elastic re-plan)
@@ -874,24 +1084,53 @@ class FlintScheduler:
         ``shutdown``, i.e. on every query completion or failure; the
         removal counts land in ``gc_report`` so benchmarks/tests can both
         assert zero leaks and see that the GC actually had work to do."""
-        if self._gc_done:
-            return self.gc_report
-        self._gc_done = True
+        with self._lock:
+            if self._gc_done:
+                return self.gc_report
+            self._gc_done = True
         report: dict[str, int] = {}
-        for transport in self.transports.active():
-            for resource, n in transport.gc().items():
-                report[resource] = report.get(resource, 0) + n
-        for prefix in GC_PREFIXES:
-            n = self.store.delete_prefix(prefix)
-            if n:
-                report[prefix] = n
+        if self._binding is None:
+            for transport in self.transports.active():
+                for resource, n in transport.gc().items():
+                    report[resource] = report.get(resource, 0) + n
+            for prefix in GC_PREFIXES:
+                n = self.store.delete_prefix(prefix)
+                if n:
+                    report[prefix] = n
+        else:
+            # SERVICE mode: the store is shared with concurrently-running
+            # jobs, so the blanket sweeps above would destroy their live
+            # state. Sweep only what this job owns: its own (non-shared)
+            # shuffle ids per transport, and its job-scoped payload/result
+            # spill prefixes. ``_spill/`` keys are content-addressed and
+            # cross-job shareable — the service sweeps them at close
+            by_tr: dict[str, list[int]] = {}
+            for sid, psi in self._producer_stage_of.items():
+                if self._share is not None and self._share.manages(sid):
+                    continue  # the share registry owns its lifecycle
+                by_tr.setdefault(self._sid_meta[sid][1], []).append(sid)
+            for tname, sids in by_tr.items():
+                for resource, n in self.transports.get(
+                        tname).gc_sids(sids).items():
+                    report[resource] = report.get(resource, 0) + n
+            for prefix in (f"_payload/{self._scope}",
+                           f"_result/{self._scope}"):
+                n = self.store.delete_prefix(prefix)
+                if n:
+                    report[prefix] = n
         # RDD.cache() materializations outlive the job on purpose (they
         # feed later actions) — but only while their token is registered;
         # stale content (cleared caches, elastic re-plans that changed the
-        # partition count) is swept here like any other transient key
+        # partition count) is swept here like any other transient key.
+        # Keys are listed BEFORE the live set is computed: a concurrent
+        # job registers a token at plan time, before its first cache
+        # write, so any key this listing sees belongs to a token that is
+        # either already registered (kept live) or genuinely dead
+        keys = self._retry_transient(self.store.list, "_cache/",
+                                     default=())
         live = {f"_cache/{t}/{e['nparts']}/"
-                for t, e in (self._cache_index or {}).items()}
-        stale = [k for k in self.store.list("_cache/")
+                for t, e in self._cache_items()}
+        stale = [k for k in keys
                  if not any(k.startswith(p) for p in live)]
         for k in stale:
             self.store.delete(k)
@@ -899,6 +1138,28 @@ class FlintScheduler:
             report["_cache/"] = len(stale)
         self.gc_report = report
         return report
+
+    def _cache_items(self):
+        """Snapshot of the cache registry — the service's shared index
+        takes its lock for a consistent copy; a plain dict is iterated
+        over a list copy for the same reason."""
+        index = self._cache_index or {}
+        items = getattr(index, "items", None)
+        return list(items()) if items else []
+
+    def _retry_transient(self, fn, *args, default=None):
+        """GC-time store calls must survive a still-attached chaos
+        injector: solo mode detaches its own in ``shutdown`` before GC,
+        but the service-wide injector stays attached while other jobs
+        are mid-flight. Deletes bypass injection by design; only LIST
+        needs this shield. Gives up with ``default`` (a soft leak, swept
+        again at service close) rather than failing the job."""
+        for i in range(8):
+            try:
+                return fn(*args)
+            except TransientServiceError:
+                time.sleep(min(0.25, 0.002 * (2 ** i)))
+        return default
 
     def shutdown(self):
         # detach the chaos layer FIRST: job-end GC must not be failed by
@@ -911,5 +1172,13 @@ class FlintScheduler:
             self.sqs.faults = None
         self.lam.faults = None
         self.sqs.close()  # release any consumer blocked on arrival
+        if self._share is not None:
+            # retire this job's published shuffles and mark its
+            # cross-job participations done; the registry destroys each
+            # shared shuffle once its owner retired AND every
+            # participating job is done with it
+            self._share.run_closed(self._job_id,
+                                   set(self._producer_stage_of))
         self.gc_job()
+        self._slots.detach()
         self.pool.shutdown(wait=False)

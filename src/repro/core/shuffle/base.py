@@ -172,6 +172,16 @@ class ShuffleTransport:
         """Create channels before any producer of this shuffle launches.
         ``groups`` consumer groups will each drain the full stream."""
 
+    def partition_drainable(self, shuffle_id: int, partition: int,
+                            consumer_group: int = 0) -> bool:
+        """True while a FRESH drain of this (partition, group) could still
+        complete — i.e. the group has not released it. Lineage recovery
+        consults this before resubmitting a mid-chain task: a released
+        partition's channel aborts new drains (and its data may be
+        reclaimed), so the upstream producers must be replayed through
+        ``reopen`` first."""
+        return True
+
     def release_partition(self, shuffle_id: int, partition: int,
                           consumer_group: int = 0):
         """A consumer completed this partition for its group: free that
@@ -193,6 +203,14 @@ class ShuffleTransport:
 
     def gc(self) -> dict[str, int]:
         """Job-end cleanup; returns {resource: count} actually removed."""
+        return {}
+
+    def gc_sids(self, sids) -> dict[str, int]:
+        """Targeted job-end sweep of ONLY the named shuffles' channels.
+        Service mode (docs/multi_tenant.md) shares the backing store
+        across concurrently-running jobs, so the blanket ``gc`` — which
+        reaps the whole channel namespace — would destroy other jobs'
+        live shuffles; each job sweeps just the shuffle ids it owns."""
         return {}
 
     def service_cost(self) -> float:

@@ -154,6 +154,22 @@ class S3ExchangeTransport(ShuffleTransport):
         self._groups[shuffle_id] = groups
         self._sid_index(shuffle_id)  # prefixes are implicit; index is not
 
+    def add_group(self, shuffle_id, groups):
+        """A consumer group joined AFTER ``open`` — a cross-job reader of
+        a service-shared shuffle (docs/multi_tenant.md). Reads are
+        non-destructive so the newcomer needs no channel setup; only the
+        all-groups-released data reclaim in ``release_partition`` must
+        learn to wait for it."""
+        self._groups[shuffle_id] = max(self._groups.get(shuffle_id, 1),
+                                       groups)
+
+    def partition_drainable(self, shuffle_id, partition, consumer_group=0):
+        """False once this group released the partition: the tombstone
+        aborts any new drain and the data objects may already be deleted,
+        so a replayed consumer needs ``reopen`` + upstream re-production
+        first."""
+        return (shuffle_id, partition, consumer_group) not in self._released
+
     def release_partition(self, shuffle_id, partition, consumer_group=0):
         key = (shuffle_id, partition, consumer_group)
         if key in self._released:
@@ -212,6 +228,20 @@ class S3ExchangeTransport(ShuffleTransport):
         self._released.clear()
         with self._index_lock:
             self._index.clear()
+        return {EXCHANGE_PREFIX: n} if n else {}
+
+    def gc_sids(self, sids):
+        """Targeted sweep of only the named shuffles (service mode: the
+        blanket ``gc`` reaps ``_exchange/`` wholesale and would delete
+        shuffles other live jobs are still draining). ``delete_prefix``
+        bypasses fault injection, so this sweep cannot flake under a
+        service-wide chaos plan."""
+        n = 0
+        for sid in sids:
+            n += self.store.delete_prefix(_shuffle_prefix(sid))
+            self._released = {k for k in self._released if k[0] != sid}
+            with self._index_lock:
+                self._index.pop(sid, None)
         return {EXCHANGE_PREFIX: n} if n else {}
 
     def service_cost(self):
@@ -346,10 +376,18 @@ class _S3Drain(DrainHandle):
                     f"exchange object(s) lost after write")
                 err.detail = {"srcs": sorted(short)}
                 raise err
-            raise TimeoutError(
+            # quorum incomplete: name the producers whose EOS manifest DID
+            # arrive so the scheduler — once it knows every producing
+            # stage finished — can resubmit exactly the absent ones (a
+            # lost eos-{src} manifest is indistinguishable from a slow
+            # producer down here; the scheduler has the stage ledger)
+            err2 = TimeoutError(
                 f"s3 exchange {self.prefix} incomplete: "
                 f"{len(self.state.seen)} batches, eos "
                 f"{len(self.state.eos_total)}/{self.state.quorum}")
+            err2.detail = {"sid": self.sid,
+                           "have_eos": sorted(self.state.eos_total)}
+            raise err2
         time.sleep(self._backoff)
         self._backoff = min(self._backoff * 2, 0.1)
 

@@ -91,6 +91,13 @@ class SQSTransport(ShuffleTransport):
                 self._live.add(name)
                 self.sqs.create_queue(name)
 
+    def partition_drainable(self, shuffle_id, partition, consumer_group=0):
+        """False once this group's queue was deleted — its messages are
+        gone with it, so a replayed consumer needs ``reopen`` + upstream
+        re-production first."""
+        return (queue_name(shuffle_id, partition, consumer_group)
+                not in self._released)
+
     def release_partition(self, shuffle_id, partition, consumer_group=0):
         """Delete this GROUP's queue so a losing speculative duplicate (or
         a late retry of a task that already won) aborts on QueueGone
@@ -125,6 +132,19 @@ class SQSTransport(ShuffleTransport):
         """Queues normally die with their consuming stage; after an abort
         some survive — sweep them so nothing leaks past the job."""
         doomed = list(self._live)
+        for name in doomed:
+            self._released.add(name)
+            self._live.discard(name)
+            self.sqs.delete_queue(name)
+        return {"queues": len(doomed)} if doomed else {}
+
+    def gc_sids(self, sids):
+        """Targeted sweep of only the named shuffles' surviving queues
+        (service mode: the blanket ``gc`` would also count queues of
+        shuffles this job never owned)."""
+        want = {f"shuffle{sid}-" for sid in sids}
+        doomed = [name for name in list(self._live)
+                  if any(name.startswith(w) for w in want)]
         for name in doomed:
             self._released.add(name)
             self._live.discard(name)

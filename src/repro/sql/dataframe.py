@@ -178,6 +178,27 @@ class DataFrame:
         self._require_open("cache")
         return self._derive(P.Cached(self.plan))
 
+    def uncache(self, optimize: bool = True) -> int:
+        """Drop the materializations behind every cache() point in this
+        frame's lineage (``ctx.uncache`` per token — a shared byte-capped
+        cache index honors its pins); returns the number of store keys
+        removed, 0 when nothing was materialized."""
+        rdd, _, _ = lower(self._planned(optimize), self.ctx)
+        removed = 0
+        stack, seen = [rdd], set()
+        while stack:
+            node = stack.pop()
+            if id(node) in seen:
+                continue
+            seen.add(id(node))
+            if getattr(node, "cached", False):
+                removed += node.uncache()
+            for attr in ("parent", "left", "right", "a", "b"):
+                child = getattr(node, attr, None)
+                if child is not None:
+                    stack.append(child)
+        return removed
+
     # ------------------------------------------------------------ actions
     def _planned(self, optimize_flag: bool) -> P.Plan:
         return optimize(self.plan, self.ctx) if optimize_flag else self.plan

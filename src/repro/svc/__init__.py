@@ -1,0 +1,21 @@
+"""Multi-tenant query service over the Flint engine
+(docs/multi_tenant.md): driver-as-a-service with admission control,
+weighted fair-share slot scheduling, cross-job CSE of shuffle streams,
+a byte-capped shared cache, and per-tenant cost/retry quotas.
+
+    from repro.svc import FlintService
+    svc = FlintService(config, slot_capacity=16)
+    svc.register_tenant("acme", weight=2, max_usd=0.02)
+    with svc.session("acme") as s:
+        rows = s.read_csv("taxi.csv", schema, 8).collect()
+"""
+
+from repro.svc.admission import AdmissionController, AdmissionRejected
+from repro.svc.fairshare import FairSharePool, JobSlots
+from repro.svc.session import FlintService, Session, TenantQuota
+from repro.svc.share import ShareRegistry, SharedCache
+
+__all__ = ["FlintService", "Session", "TenantQuota",
+           "AdmissionController", "AdmissionRejected",
+           "FairSharePool", "JobSlots",
+           "ShareRegistry", "SharedCache"]

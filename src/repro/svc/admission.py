@@ -1,0 +1,95 @@
+"""Admission control for the multi-tenant query service
+(docs/multi_tenant.md).
+
+Job submission passes through one gate before any planning happens:
+
+  * tenants already over a quota (dollar budget spent, retry budget
+    exhausted) are REJECTED outright — running them would only burn
+    the shared pool to hit the same wall mid-job;
+  * up to ``max_running`` jobs execute concurrently (the fair-share
+    pool then splits invocation slots among them);
+  * the next ``max_queued`` submissions WAIT at the gate;
+  * anything beyond that is rejected with a structured
+    ``AdmissionRejected`` the client can branch on (back off and
+    resubmit vs. give up), never an opaque timeout.
+
+Rejection is an exception rather than a status code so a session's
+``collect()`` call site fails loudly — a serverless driver has no
+partially-started state to clean up at this point, by construction.
+"""
+
+from __future__ import annotations
+
+import threading
+
+
+class AdmissionRejected(RuntimeError):
+    """A job was refused at the service gate. ``reason`` is "capacity"
+    (running + queued limits are both full) or "quota" (the tenant's
+    own budget is spent); ``detail`` carries the numbers."""
+
+    def __init__(self, msg: str, *, reason: str, tenant: str,
+                 detail: dict | None = None):
+        super().__init__(msg)
+        self.reason = reason
+        self.tenant = tenant
+        self.detail = detail or {}
+
+
+class AdmissionController:
+    def __init__(self, max_running: int = 8, max_queued: int = 16):
+        if max_running < 1:
+            raise ValueError("max_running must be >= 1")
+        if max_queued < 0:
+            raise ValueError("max_queued must be >= 0")
+        self.max_running = max_running
+        self.max_queued = max_queued
+        self._cond = threading.Condition()
+        self.running = 0
+        self.queued = 0
+        self.stats = {"admitted": 0, "queued": 0, "rejected_capacity": 0,
+                      "rejected_quota": 0, "peak_running": 0,
+                      "peak_queued": 0}
+
+    def admit(self, tenant: str, quota_check=None):
+        """Block until the job may start (or raise AdmissionRejected).
+        ``quota_check`` is a callable returning an error string when the
+        tenant is over budget — checked at submission AND again after
+        any queueing wait (budgets drain while a job waits)."""
+        with self._cond:
+            self._quota_gate(tenant, quota_check)
+            if self.running >= self.max_running:
+                if self.queued >= self.max_queued:
+                    self.stats["rejected_capacity"] += 1
+                    raise AdmissionRejected(
+                        f"service at capacity: {self.running} running, "
+                        f"{self.queued} queued (max_queued="
+                        f"{self.max_queued}) — resubmit later",
+                        reason="capacity", tenant=tenant,
+                        detail={"running": self.running,
+                                "queued": self.queued})
+                self.queued += 1
+                self.stats["queued"] += 1
+                self.stats["peak_queued"] = max(self.stats["peak_queued"],
+                                                self.queued)
+                try:
+                    while self.running >= self.max_running:
+                        self._cond.wait(0.05)
+                finally:
+                    self.queued -= 1
+                self._quota_gate(tenant, quota_check)
+            self.running += 1
+            self.stats["admitted"] += 1
+            self.stats["peak_running"] = max(self.stats["peak_running"],
+                                             self.running)
+
+    def release(self):
+        with self._cond:
+            self.running -= 1
+            self._cond.notify_all()
+
+    def _quota_gate(self, tenant: str, quota_check):
+        msg = quota_check() if quota_check is not None else None
+        if msg:
+            self.stats["rejected_quota"] += 1
+            raise AdmissionRejected(msg, reason="quota", tenant=tenant)

@@ -1,0 +1,189 @@
+"""Weighted fair-share allocation of executor-invocation slots across
+tenants (docs/multi_tenant.md).
+
+The solo engine bounds launches with ``FlintConfig.concurrency`` alone —
+its thread pool IS the capacity. The service runs MANY jobs over one
+account, so the account's invocation capacity becomes a first-class
+shared resource: a ``FairSharePool`` of slots, leased per job through
+``JobSlots`` handles that plug into the scheduler's ``_NullSlots``
+protocol (try_acquire / acquire / release / set_demand / contended /
+wait / detach).
+
+Allocation is weighted MAX-MIN: a tenant may take a slot only while no
+OTHER tenant with unmet demand sits at a strictly lower held/weight
+ratio (integer cross-multiplication — no float drift). The rule is
+work-conserving: with a single demanding tenant every slot is
+grantable; denial only happens in favor of a concrete lower-share
+tenant, which the scheduler's short contended-mode wakeups let claim
+the slot within one poll interval.
+
+Liveness notes (why this cannot deadlock):
+
+  * the pipelined scheduler CARRIES slots across retries and chained
+    continuations, so in-flight producer work never re-enters the
+    scramble behind other tenants' blocked consumers;
+  * lineage-recovery replays bypass slots entirely — a replay must not
+    starve behind the very consumers waiting for its output;
+  * ``set_demand`` advertises only EFFECTIVE demand (launchable now),
+    so a tenant whose local pool is saturated does not pin the global
+    pool idle;
+  * ``detach`` (scheduler shutdown, including failure paths) returns
+    everything a job still holds.
+"""
+
+from __future__ import annotations
+
+import threading
+
+
+class JobSlots:
+    """One job's lease on a FairSharePool — the scheduler-facing handle.
+    Slot accounting is per-lease, fairness accounting per-tenant (all of
+    a tenant's concurrent jobs draw from the tenant's one share)."""
+
+    def __init__(self, pool: "FairSharePool", tenant: str):
+        self.pool = pool
+        self.tenant = tenant
+        self.held = 0      # slots this lease holds
+        self.demand = 0    # launchable-now tasks wanting a slot
+        self.waiting = 0   # threads blocked in acquire() (barrier mode)
+        self.detached = False
+
+    # ------------------------------------------- scheduler-facing protocol
+    def try_acquire(self) -> bool:
+        pool = self.pool
+        with pool._cond:
+            if self.detached or not pool._grantable(self.tenant):
+                pool.denials += 1
+                return False
+            self._take()
+            return True
+
+    def acquire(self):
+        """Blocking acquire (barrier mode, called inside worker threads —
+        safe there because barrier-stage inputs are complete). Returns on
+        detach too, so a shut-down job never wedges its pool threads."""
+        pool = self.pool
+        with pool._cond:
+            self.waiting += 1
+            try:
+                while not self.detached and not pool._grantable(self.tenant):
+                    pool._cond.wait(0.1)
+            finally:
+                self.waiting -= 1
+            if not self.detached:
+                self._take()
+
+    def release(self):
+        pool = self.pool
+        with pool._cond:
+            if self.held > 0:
+                self.held -= 1
+                pool._held[self.tenant] -= 1
+                pool._cond.notify_all()
+
+    def set_demand(self, n: int):
+        pool = self.pool
+        with pool._cond:
+            if n != self.demand:
+                self.demand = n
+                # falling demand can make OTHER tenants grantable
+                pool._cond.notify_all()
+
+    def contended(self) -> bool:
+        """True while any other lease wants slots — the scheduler
+        shortens its event-loop wait so releases redistribute fast."""
+        pool = self.pool
+        with pool._cond:
+            return any(ls is not self and (ls.demand or ls.waiting)
+                       for ls in pool._leases)
+
+    def wait(self, timeout: float):
+        """Block (bounded) until a slot could be grantable — the
+        slot-starved idle path of the pipelined event loop."""
+        pool = self.pool
+        with pool._cond:
+            if not self.detached and not pool._grantable(self.tenant):
+                pool._cond.wait(timeout)
+
+    def detach(self):
+        """Job over (success or failure): return every slot still held,
+        drop demand, unblock any waiter. Idempotent."""
+        pool = self.pool
+        with pool._cond:
+            if self.detached:
+                return
+            self.detached = True
+            if self.held:
+                pool._held[self.tenant] -= self.held
+                self.held = 0
+            self.demand = 0
+            pool._leases.discard(self)
+            pool._cond.notify_all()
+
+    # ------------------------------------------------------------ internal
+    def _take(self):
+        """Caller holds the pool lock and verified grantability."""
+        pool = self.pool
+        self.held += 1
+        pool._held[self.tenant] = pool._held.get(self.tenant, 0) + 1
+        pool.grants += 1
+        total = sum(pool._held.values())
+        if total > pool.peak_held:
+            pool.peak_held = total
+
+
+class FairSharePool:
+    """The service-wide slot pool. ``capacity`` models the account's
+    concurrent-invocation budget the service chooses to spend; tenant
+    ``weight`` skews the max-min split (weight 2 deserves twice the
+    slots of weight 1 under contention)."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("FairSharePool capacity must be >= 1")
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._weights: dict[str, int] = {}
+        self._held: dict[str, int] = {}
+        self._leases: set[JobSlots] = set()
+        self.grants = 0
+        self.denials = 0
+        self.peak_held = 0
+
+    def set_weight(self, tenant: str, weight: int):
+        if weight < 1:
+            raise ValueError("tenant weight must be >= 1")
+        with self._cond:
+            self._weights[tenant] = weight
+            self._cond.notify_all()
+
+    def lease(self, tenant: str) -> JobSlots:
+        ls = JobSlots(self, tenant)
+        with self._cond:
+            self._leases.add(ls)
+        return ls
+
+    def held(self, tenant: str | None = None) -> int:
+        with self._cond:
+            if tenant is not None:
+                return self._held.get(tenant, 0)
+            return sum(self._held.values())
+
+    # ------------------------------------------------------------ internal
+    def _grantable(self, tenant: str) -> bool:
+        """Caller holds the lock. Weighted max-min: grant unless some
+        OTHER tenant with unmet demand holds a strictly smaller
+        normalized share — that tenant claims the slot first."""
+        if sum(self._held.values()) >= self.capacity:
+            return False
+        ht = self._held.get(tenant, 0)
+        wt = self._weights.get(tenant, 1)
+        for ls in self._leases:
+            o = ls.tenant
+            if o == tenant or not (ls.demand or ls.waiting):
+                continue
+            if ht * self._weights.get(o, 1) > self._held.get(o, 0) * wt:
+                return False
+        return True

@@ -1,0 +1,430 @@
+"""FlintService: the serverless driver AS A SERVICE
+(docs/multi_tenant.md).
+
+The solo ``FlintContext`` is one driver owning one store, one ledger and
+one scheduler at a time. ``FlintService`` runs MANY of them: each tenant
+opens ``Session`` objects whose context speaks the unchanged
+RDD/DataFrame surface, while underneath every job draws from ONE shared
+substrate —
+
+  * one object store (inputs uploaded once serve every tenant) under one
+    account-wide chaos injector when a fault plan is set;
+  * one invocation-slot pool split by weighted fair share
+    (svc.fairshare) and one account concurrency gauge, so
+    ``FaultPlan.account_concurrency`` caps the account, not each job;
+  * one admission gate (svc.admission) bounding concurrent + queued
+    jobs and pre-rejecting over-quota tenants;
+  * one cross-job CSE registry and one byte-capped cache (svc.share):
+    two tenants submitting the same query plan ONE producer stage and
+    share one ``cache()`` materialization;
+  * one root ``CostLedger`` with per-tenant child ledgers — every
+    charge lands on both, so tenant bills sum to the account bill.
+
+Billing attribution: Lambda and SQS sims are created per scheduler with
+the TENANT's ledger, so compute and queue traffic meter per tenant. The
+shared store bills its OWNER — the service root ledger — i.e. S3 is
+"bucket owner pays"; per-tenant dollar quotas therefore meter
+lambda + sqs, which is where serverless analytics money goes (paper
+Table I).
+
+Failure containment: a job whose plan leaned on ANOTHER job's shuffle
+stream (``used_foreign``) can be failed by that foreign producer's
+death. The service answers with a SOLO FALLBACK — one replan with
+sharing disabled — before surfacing the error; tenant-quota failures
+are never retried this way (the budget is spent either way).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+from repro.core import FlintContext
+from repro.core.costs import CostLedger
+from repro.core.dag import CacheInput
+from repro.core.dag import build_plan
+from repro.core.executors import FlintConfig
+from repro.core.faults import ConcurrencyGauge, FaultInjector, FaultPlan
+from repro.core.queues import ObjectStoreSim
+from repro.core.retry import RetryBudget, TransientServiceError
+from repro.core.scheduler import GC_PREFIXES, FlintScheduler, StageFailure
+from repro.svc.admission import AdmissionController
+from repro.svc.fairshare import FairSharePool
+from repro.svc.share import ShareRegistry, SharedCache
+
+#: default shared-cache byte cap — roomy for tests, small enough that a
+#: benchmark caching a few taxi derivations actually sees evictions
+DEFAULT_CACHE_BYTES = 64 * 2**20
+
+
+@dataclasses.dataclass
+class TenantQuota:
+    """Per-tenant limits. ``weight`` skews the fair-share slot split;
+    ``max_usd`` caps metered lambda+sqs spend (checked at admission and
+    again between task launches mid-job); ``retry_budget`` bounds
+    service-call retries across ALL the tenant's jobs together (the solo
+    engine's per-job budget, lifted to tenant scope)."""
+    weight: int = 1
+    max_usd: float | None = None
+    retry_budget: int | None = None
+
+
+class _Tenant:
+    def __init__(self, name: str, quota: TenantQuota, ledger: CostLedger):
+        self.name = name
+        self.quota = quota
+        self.ledger = ledger
+        self.retry_budget = (RetryBudget(quota.retry_budget)
+                             if quota.retry_budget is not None else None)
+        self.jobs = 0
+
+    def quota_error(self) -> str | None:
+        """Admission-time pre-check: the reason this tenant may not start
+        another job, or None."""
+        q = self.quota
+        if q.max_usd is not None and self.ledger.total_usd >= q.max_usd:
+            return (f"tenant {self.name!r} over budget: "
+                    f"${self.ledger.total_usd:.6f} spent of "
+                    f"${q.max_usd:.6f}")
+        if (self.retry_budget is not None
+                and self.retry_budget.remaining <= 0):
+            return (f"tenant {self.name!r} retry budget exhausted "
+                    f"({self.retry_budget.total} service-call retries)")
+        return None
+
+    def cost_guard(self):
+        """Mid-job enforcement, called by the scheduler between task
+        launches: a tenant that crosses its dollar cap WHILE running is
+        stopped, not just refused next time. Non-retryable — elastic
+        replans would bill the same budget again."""
+        q = self.quota
+        if q.max_usd is not None and self.ledger.total_usd >= q.max_usd:
+            raise StageFailure(
+                f"tenant {self.name!r} exceeded ${q.max_usd:.6f} quota "
+                f"mid-job (spent ${self.ledger.total_usd:.6f})",
+                error_type="TenantQuotaExceeded", retryable=False,
+                detail={"tenant": self.name, "max_usd": q.max_usd,
+                        "spent_usd": self.ledger.total_usd})
+
+
+class _JobBinding:
+    """What one scheduler receives from the service: its slice of every
+    shared resource (FlintScheduler reads exactly these attributes)."""
+
+    __slots__ = ("job_id", "scope", "slots", "share", "gauge",
+                 "retry_budget", "cost_guard")
+
+    def __init__(self, job_id, scope, slots, share, gauge, retry_budget,
+                 cost_guard):
+        self.job_id = job_id
+        self.scope = scope
+        self.slots = slots
+        self.share = share
+        self.gauge = gauge
+        self.retry_budget = retry_budget
+        self.cost_guard = cost_guard
+
+
+class _Job:
+    """One run_action: a service-unique id, a share-registry view, the
+    cache tokens its plans pinned, and the solo-fallback latch."""
+
+    def __init__(self, job_id: int, view):
+        self.job_id = job_id
+        self.view = view
+        self.solo = False
+        self.pinned: list[str] = []
+
+
+class _ServiceContext(FlintContext):
+    """A tenant session's engine: the stock FlintContext pointed at the
+    service's shared store/cache/ledger, with the three service hooks
+    filled in — scheduler binding, share-aware planning, and admission
+    around every action."""
+
+    def __init__(self, service: "FlintService", tenant: _Tenant):
+        super().__init__("flint", service.config,
+                         fault_plan=service.fault_plan,
+                         store=service.store, ledger=tenant.ledger,
+                         cache_index=service.cache,
+                         verbose=service.verbose)
+        self.service = service
+        self.tenant = tenant
+        self._job: _Job | None = None
+        # one action at a time per session — concurrency comes from many
+        # sessions, and an unsynchronized second action would race the
+        # per-job state below
+        self._action_lock = threading.Lock()
+
+    # ------------------------------------------------------ service hooks
+    def _make_scheduler(self):
+        svc = self.service
+        job = self._job
+        binding = _JobBinding(
+            job_id=job.job_id,
+            scope=f"j{job.job_id}/",
+            # a fresh lease per scheduler: elastic replans detach the old
+            # one at shutdown and re-enter the pool cleanly
+            slots=svc.pool.lease(self.tenant.name),
+            share=None if job.solo else job.view,
+            gauge=svc.gauge,
+            retry_budget=self.tenant.retry_budget,
+            cost_guard=self.tenant.cost_guard)
+        return FlintScheduler(self.config, self.tenant.ledger, self.store,
+                              fault_plan=self.fault_plan,
+                              verbose=self.verbose,
+                              cache_index=self._cache_index,
+                              binding=binding)
+
+    def _build_plan(self, rdd, action, save_prefix, mult, limit):
+        job = self._job
+        plan = build_plan(rdd, action, save_prefix,
+                          partition_multiplier=mult,
+                          cse=self.config.plan_cse,
+                          cache_index=self._cache_index,
+                          default_transport=self.config.shuffle_backend,
+                          limit=limit,
+                          share=None if job.solo else job.view)
+        # pin every cache token this plan touches (reads AND pending
+        # materializations) so the byte-cap eviction and other tenants'
+        # uncache() cannot delete batches a resolved plan will fetch
+        for token in self._plan_tokens(plan):
+            self._cache_index.pin(token)
+            job.pinned.append(token)
+        return plan
+
+    def _plan_tokens(self, plan) -> set:
+        tokens = set(self._plan_cache_tokens(plan))
+        for stage in plan:
+            for task in stage.tasks:
+                if isinstance(task.input, CacheInput):
+                    tokens.add(task.input.token)
+        return tokens
+
+    def run_action(self, rdd, action, save_prefix=None, limit=None):
+        svc = self.service
+        tenant = self.tenant
+        with self._action_lock:
+            svc.admission.admit(tenant.name,
+                                quota_check=tenant.quota_error)
+            try:
+                job = svc._new_job(tenant)
+                self._job = job
+                try:
+                    return super().run_action(rdd, action, save_prefix,
+                                              limit)
+                except StageFailure as e:
+                    if (job.view.used_foreign and not job.solo
+                            and e.error_type != "TenantQuotaExceeded"):
+                        # SOLO FALLBACK: this plan consumed another job's
+                        # stream and that dependency (not this job's own
+                        # work) may be what died — replan once with
+                        # sharing off, correctness over sharing
+                        job.solo = True
+                        svc.stats["solo_fallbacks"] += 1
+                        if self.verbose:
+                            print(f"[svc] job {job.job_id} foreign-input "
+                                  f"failure -> solo replan")
+                        return super().run_action(rdd, action,
+                                                  save_prefix, limit)
+                    raise
+                finally:
+                    for token in job.pinned:
+                        self._cache_index.unpin(token)
+                    job.pinned.clear()
+                    self._job = None
+            finally:
+                svc.admission.release()
+
+
+class Session:
+    """One tenant's handle on the service — the object application code
+    holds. ``.ctx`` is a full FlintContext (textFile / read_csv /
+    parallelize / cache / collect ... all unchanged); the common entry
+    points are re-exported here for convenience."""
+
+    def __init__(self, service: "FlintService", tenant: _Tenant):
+        self.service = service
+        self.tenant = tenant
+        self.ctx = _ServiceContext(service, tenant)
+        self.closed = False
+
+    # convenience delegation — the surface tests and benchmarks touch
+    def textFile(self, key, numPartitions: int = 8):
+        return self.ctx.textFile(key, numPartitions)
+
+    def read_csv(self, key, schema, numPartitions: int = 8):
+        return self.ctx.read_csv(key, schema, numPartitions)
+
+    def parallelize(self, data, numPartitions: int = 8):
+        return self.ctx.parallelize(data, numPartitions)
+
+    def upload(self, key, data: bytes):
+        self.service.upload(key, data)
+
+    def cost_report(self) -> dict:
+        """THIS tenant's bill (the child ledger): shared with the
+        tenant's other sessions, disjoint from other tenants'."""
+        return self.tenant.ledger.report()
+
+    def close(self):
+        self.closed = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class FlintService:
+    """The multi-tenant driver service. Typical shape:
+
+        svc = FlintService(config, slot_capacity=16)
+        svc.register_tenant("acme", weight=2, max_usd=0.02)
+        svc.upload("taxi.csv", data)
+        with svc.session("acme") as s:
+            rows = s.read_csv("taxi.csv", schema, 8).collect()
+        print(svc.report()["tenants"]["acme"]["total_usd"])
+        svc.close()   # sweeps transient state; leak_report() then
+                      # shows zero keys under every transient prefix
+    """
+
+    def __init__(self, config: FlintConfig | None = None, *,
+                 fault_plan: FaultPlan | dict | None = None,
+                 slot_capacity: int | None = None,
+                 max_running: int = 8, max_queued: int = 16,
+                 cache_bytes: int = DEFAULT_CACHE_BYTES,
+                 verbose: bool = False):
+        self.config = config or FlintConfig()
+        self.config.validate()
+        self.verbose = verbose
+        self.ledger = CostLedger()  # the account-wide (root) ledger
+        self.store = ObjectStoreSim(self.ledger)
+        self.fault_plan = FaultPlan.coerce(fault_plan)
+        # ONE service-wide injector chaoses the shared store for the
+        # service's whole lifetime (each scheduler still injects its own
+        # private SQS + Lambda faults); detached at close so the final
+        # sweep and post-mortem leak checks run fault-free
+        self.injector = None
+        if self.fault_plan.has_service_faults:
+            self.injector = FaultInjector(self.fault_plan, self.ledger)
+            self.store.faults = self.injector
+        self.gauge = ConcurrencyGauge()
+        self.pool = FairSharePool(slot_capacity
+                                  or self.config.concurrency)
+        self.admission = AdmissionController(max_running=max_running,
+                                             max_queued=max_queued)
+        self.share = ShareRegistry(self.store)
+        self.cache = SharedCache(self.store, cache_bytes)
+        self._tenants: dict[str, _Tenant] = {}
+        self._lock = threading.Lock()
+        self._job_counter = 0
+        self.stats = {"jobs": 0, "solo_fallbacks": 0}
+        self.closed = False
+
+    # ----------------------------------------------------------- tenants
+    def register_tenant(self, name: str, *, weight: int = 1,
+                        max_usd: float | None = None,
+                        retry_budget: int | None = None) -> None:
+        with self._lock:
+            if name in self._tenants:
+                raise ValueError(f"tenant {name!r} already registered")
+            quota = TenantQuota(weight=weight, max_usd=max_usd,
+                                retry_budget=retry_budget)
+            self._tenants[name] = _Tenant(name, quota,
+                                          self.ledger.child())
+        self.pool.set_weight(name, weight)
+
+    def session(self, tenant: str) -> Session:
+        """Open a session for ``tenant`` (auto-registered with default
+        quotas on first sight)."""
+        if self.closed:
+            raise RuntimeError("FlintService is closed")
+        with self._lock:
+            t = self._tenants.get(tenant)
+        if t is None:
+            try:
+                self.register_tenant(tenant)
+            except ValueError:
+                pass  # lost a registration race — use the winner's
+            with self._lock:
+                t = self._tenants[tenant]
+        return Session(self, t)
+
+    def _new_job(self, tenant: _Tenant) -> _Job:
+        with self._lock:
+            self._job_counter += 1
+            jid = self._job_counter
+            self.stats["jobs"] += 1
+            tenant.jobs += 1
+        return _Job(jid, self.share.view(jid, self.config.shuffle_backend))
+
+    # -------------------------------------------------------------- data
+    def upload(self, key: str, data: bytes):
+        """Put shared input data, riding out the service-wide chaos
+        injector the way a real driver's SDK retries a 503."""
+        for i in range(8):
+            try:
+                return self.store.put(key, data)
+            except TransientServiceError:
+                time.sleep(min(0.25, 0.002 * (2 ** i)))
+        return self.store.put(key, data)  # last try surfaces the error
+
+    # ------------------------------------------------------ observability
+    def report(self) -> dict:
+        with self._lock:
+            tenants = dict(self._tenants)
+        return {
+            "account": self.ledger.report(),
+            "tenants": {n: t.ledger.report() for n, t in tenants.items()},
+            "jobs": dict(self.stats),
+            "admission": dict(self.admission.stats),
+            "pool": {"capacity": self.pool.capacity,
+                     "grants": self.pool.grants,
+                     "denials": self.pool.denials,
+                     "peak_held": self.pool.peak_held},
+            "gauge_peak": self.gauge.peak,
+            "share": dict(self.share.stats),
+            "cache": {"entries": len(self.cache),
+                      "bytes": self.cache.total_bytes(),
+                      "cap": self.cache.byte_cap,
+                      **self.cache.stats},
+        }
+
+    def leak_report(self) -> dict:
+        """Keys still present under every transient prefix — all zero
+        after ``close()``. Reads the sim's key set directly: leak
+        accounting must not itself bill requests or draw chaos faults."""
+        prefixes = GC_PREFIXES + ("_exchange/",)
+        keys = list(self.store._objects)
+        return {p: sum(k.startswith(p) for k in keys) for p in prefixes}
+
+    # ------------------------------------------------------------ closing
+    def close(self) -> dict:
+        """Shut the service: detach chaos, destroy surviving shared
+        shuffles, sweep every transient prefix (content-addressed
+        ``_spill/`` keys are shared across jobs, so only now is it safe).
+        Cache materializations PERSIST (a service restart can reuse
+        them); call ``clear_cache()`` first for a full wipe. Returns the
+        sweep counts."""
+        self.closed = True
+        self.store.faults = None
+        report = {"_exchange/": self.share.sweep()}
+        for prefix in GC_PREFIXES + ("_exchange/",):
+            n = self.store.delete_prefix(prefix)
+            if n:
+                report[prefix] = report.get(prefix, 0) + n
+        return report
+
+    def clear_cache(self) -> int:
+        return self.cache.drop_all()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

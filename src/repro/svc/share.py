@@ -1,0 +1,351 @@
+"""Cross-query sharing for the multi-tenant service
+(docs/multi_tenant.md): one producer stage and one cache
+materialization can feed MANY concurrent jobs, across tenants.
+
+``ShareRegistry`` lifts the planner's per-plan CSE memo (core.dag) to
+service scope. When job B plans a shuffle whose close-site key —
+lineage fingerprint, mode, partition count, combiner, transport, batch
+schema — matches one job A already published, B plans NO producer
+stage: it reads A's stream as a FOREIGN input through a fresh consumer
+group, exactly the multi-consumer fan-out the transports already speak
+(docs/dag_fanout.md). Only S3-routed shuffles share: the exchange's
+reads are non-destructive and its per-partition EOS manifests serve
+any number of groups, while SQS queues are destroyed by consumption —
+a late-joining job would race the owner's acks for messages.
+
+Lifecycle is reference-counted per JOB: a shared shuffle dies only
+once its owner's run closed (retired) AND every participating job
+drained or closed. The registry deletes the data itself
+(``delete_prefix`` — exempt from fault injection, so cleanup cannot
+flake under a service-wide chaos plan); the owning scheduler is told
+via ``manages()`` to keep its hands off.
+
+``SharedCache`` is the service-wide ``RDD.cache()`` index: the same
+mapping protocol contexts already use, plus an LRU byte cap. Entries
+are sized when their materialization commits; overflowing the cap
+evicts least-recently-planned READY entries — never entries PINNED by
+a running job (a plan that resolved a CacheInput must find its batches
+until the job ends) and never still-materializing ones.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import MutableMapping
+
+#: close-key element that names the shuffle's transport hint (see
+#: core.dag._close_key); "" defers to the job's configured fallback
+_KEY_TRANSPORT = 4
+
+
+class _Entry:
+    __slots__ = ("sid", "key", "owner", "n_prod", "write", "transport",
+                 "nparts", "participants", "done", "retired", "destroyed")
+
+    def __init__(self, sid, key, owner, n_prod, write):
+        self.sid = sid
+        self.key = key
+        self.owner = owner
+        self.n_prod = n_prod
+        self.write = write
+        self.transport = None   # set at notify_open (owner's instance)
+        self.nparts = write.nparts
+        self.participants = {owner}
+        self.done: set = set()
+        self.retired = False
+        self.destroyed = False
+
+
+class ShareRegistry:
+    """Service-wide shuffle-share state. Jobs talk to it through
+    ``view(job_id, fallback)`` handles — one per job — that stamp the
+    job identity on every call."""
+
+    def __init__(self, store):
+        self.store = store
+        self._lock = threading.RLock()
+        self._by_key: dict[tuple, int] = {}   # close key -> sid
+        self._entries: dict[int, _Entry] = {}
+        self.stats = {"published": 0, "hits": 0, "joined_groups": 0,
+                      "destroyed": 0}
+
+    def view(self, job_id: int, fallback: str) -> "ShareView":
+        return ShareView(self, job_id, fallback)
+
+    # ----------------------------------------------------- plan-time hooks
+    def _resolved(self, key: tuple, fallback: str) -> str:
+        return key[_KEY_TRANSPORT] or fallback
+
+    def publish(self, job_id: int, key: tuple, sid: int, n_prod: int,
+                write, fallback: str):
+        if self._resolved(key, fallback) != "s3":
+            return  # destructive transports cannot fan out across jobs
+        with self._lock:
+            if key in self._by_key:
+                # two jobs planned the same shuffle concurrently before
+                # either published: first wins, the later one runs its
+                # own producer privately (double work, never wrong)
+                return
+            self._by_key[key] = sid
+            self._entries[sid] = _Entry(sid, key, job_id, n_prod, write)
+            self.stats["published"] += 1
+
+    def lookup(self, job_id: int, key: tuple, fallback: str):
+        if self._resolved(key, fallback) != "s3":
+            return None
+        with self._lock:
+            sid = self._by_key.get(key)
+            if sid is None:
+                return None
+            entry = self._entries[sid]
+            if entry.retired or entry.owner == job_id:
+                return None
+            entry.participants.add(job_id)
+            # a re-planning job (elastic retry) joins afresh
+            entry.done.discard(job_id)
+            self.stats["hits"] += 1
+            return sid, entry.n_prod
+
+    def join_group(self, job_id: int, sid: int) -> int:
+        """Allocate one more consumer group on a shared shuffle — one
+        per read site of the joining plan. Bumps the OWNER's write (its
+        ``open`` creates channels for every group known by then) and,
+        once the owner's transport is known, raises its all-groups-
+        released data-reclaim threshold too (``add_group``)."""
+        with self._lock:
+            entry = self._entries[sid]
+            g = entry.write.consumer_groups
+            entry.write.consumer_groups += 1
+            if entry.transport is not None:
+                entry.transport.add_group(sid, entry.write.consumer_groups)
+            self.stats["joined_groups"] += 1
+            return g
+
+    # ------------------------------------------------------ run-time hooks
+    def notify_open(self, sid: int, transport, write):
+        with self._lock:
+            entry = self._entries.get(sid)
+            if entry is None:
+                return
+            entry.transport = transport
+            entry.nparts = write.nparts
+            # groups joined between the owner's open() reading the count
+            # and this call are folded in here, under the same lock that
+            # join_group takes
+            transport.add_group(sid, write.consumer_groups)
+
+    def manages(self, sid: int) -> bool:
+        with self._lock:
+            return sid in self._entries
+
+    def job_drained(self, job_id: int, sid: int):
+        """Every one of ``job_id``'s consuming stages drained this
+        shared shuffle."""
+        with self._lock:
+            entry = self._entries.get(sid)
+            if entry is None:
+                return
+            entry.done.add(job_id)
+            self._maybe_destroy(entry)
+
+    def run_closed(self, job_id: int, produced_sids: set):
+        """A job's scheduler shut down (success or failure): retire the
+        entries it owned — no NEW job may plan against a stream whose
+        producer run is over — and count it done everywhere it
+        participated."""
+        with self._lock:
+            for entry in list(self._entries.values()):
+                if entry.owner == job_id:
+                    entry.retired = True
+                    self._by_key.pop(entry.key, None)
+                if job_id in entry.participants:
+                    entry.done.add(job_id)
+                self._maybe_destroy(entry)
+
+    def sweep(self) -> int:
+        """Service-close backstop: destroy anything still alive (there
+        are no jobs left to drain it). Returns keys deleted."""
+        n = 0
+        with self._lock:
+            for entry in self._entries.values():
+                if not entry.destroyed:
+                    entry.destroyed = True
+                    n += self.store.delete_prefix(f"_exchange/{entry.sid}/")
+        return n
+
+    def _maybe_destroy(self, entry: _Entry):
+        """Caller holds the lock."""
+        if (entry.retired and not entry.destroyed
+                and entry.participants <= entry.done):
+            entry.destroyed = True
+            self.stats["destroyed"] += 1
+            # delete_prefix bypasses fault injection by design — the
+            # sweep cannot flake under the service-wide chaos injector
+            self.store.delete_prefix(f"_exchange/{entry.sid}/")
+
+
+class ShareView:
+    """One job's handle on the registry: what the planner (lookup /
+    join_group / publish) and the scheduler (notify_open / manages /
+    job_drained / run_closed) receive. ``used_foreign`` records whether
+    this job's plan leaned on another job's stream — the service's solo
+    fallback re-plans without sharing when such a job fails."""
+
+    def __init__(self, registry: ShareRegistry, job_id: int, fallback: str):
+        self.registry = registry
+        self.job_id = job_id
+        self.fallback = fallback
+        self.used_foreign = False
+
+    # planner side
+    def lookup(self, key: tuple):
+        return self.registry.lookup(self.job_id, key, self.fallback)
+
+    def join_group(self, sid: int) -> int:
+        self.used_foreign = True
+        return self.registry.join_group(self.job_id, sid)
+
+    def publish(self, key: tuple, sid: int, n_prod: int, write):
+        self.registry.publish(self.job_id, key, sid, n_prod, write,
+                              self.fallback)
+
+    # scheduler side
+    def notify_open(self, sid: int, transport, write):
+        self.registry.notify_open(sid, transport, write)
+
+    def manages(self, sid: int) -> bool:
+        return self.registry.manages(sid)
+
+    def job_drained(self, sid: int, job_id: int):
+        self.registry.job_drained(job_id, sid)
+
+    def run_closed(self, job_id: int, produced_sids: set):
+        self.registry.run_closed(job_id, produced_sids)
+
+
+class SharedCache(MutableMapping):
+    """Service-wide ``RDD.cache()`` registry with an LRU byte cap.
+
+    Drop-in for the context's plain-dict ``_cache_index`` (same mapping
+    protocol — the planner and GC never know the difference), plus:
+
+      * ``committed(token)`` — called by the context once a
+        materialization is durable; sizes it and evicts LRU unpinned
+        READY entries while the total exceeds ``byte_cap``;
+      * ``pin``/``unpin`` — jobs pin every token their plan touches for
+        the duration of the run, so eviction never deletes batches a
+        live plan resolved;
+      * ``drop(token)`` / ``drop_all()`` — explicit ``uncache()`` /
+        ``clear_cache()``, refusing pinned entries the same way.
+
+    Cache identity is the content-addressed lineage token, so two
+    tenants caching the same derivation share one materialization —
+    cross-tenant hits are the point of the shared service.
+    """
+
+    def __init__(self, store, byte_cap: int):
+        self.store = store
+        self.byte_cap = byte_cap
+        self._lock = threading.RLock()
+        self._entries: "OrderedDict[str, dict]" = OrderedDict()
+        self._sizes: dict[str, int] = {}
+        self._pins: dict[str, int] = {}
+        self.stats = {"evictions": 0, "evicted_bytes": 0, "dropped": 0}
+
+    # ----------------------------------------------------- dict protocol
+    def __getitem__(self, token):
+        with self._lock:
+            entry = self._entries[token]
+            if entry.get("ready"):
+                self._entries.move_to_end(token)  # LRU touch
+            return entry
+
+    def __setitem__(self, token, entry):
+        with self._lock:
+            self._entries[token] = entry
+
+    def __delitem__(self, token):
+        with self._lock:
+            del self._entries[token]
+            self._sizes.pop(token, None)
+
+    def __iter__(self):
+        with self._lock:
+            return iter(list(self._entries))
+
+    def __len__(self):
+        with self._lock:
+            return len(self._entries)
+
+    def items(self):
+        with self._lock:
+            return list(self._entries.items())
+
+    # ------------------------------------------------------ service hooks
+    def pin(self, token: str):
+        with self._lock:
+            self._pins[token] = self._pins.get(token, 0) + 1
+
+    def unpin(self, token: str):
+        with self._lock:
+            n = self._pins.get(token, 0) - 1
+            if n <= 0:
+                self._pins.pop(token, None)
+                # a pin may have carried the total over the cap (the
+                # running job's own fresh materialization often does) —
+                # releasing the last pin is the moment to re-check
+                self._evict_over_cap()
+            else:
+                self._pins[token] = n
+
+    def pinned(self, token: str) -> bool:
+        with self._lock:
+            return self._pins.get(token, 0) > 0
+
+    def total_bytes(self) -> int:
+        with self._lock:
+            return sum(self._sizes.values())
+
+    def committed(self, token: str):
+        """A materialization finished: size it and enforce the cap."""
+        with self._lock:
+            entry = self._entries.get(token)
+            if entry is None:
+                return
+            self._sizes[token] = self.store.prefix_bytes(
+                f"_cache/{token}/{entry['nparts']}/")
+            self._entries.move_to_end(token)
+            self._evict_over_cap()
+
+    def drop(self, token: str) -> int:
+        """Explicit uncache; refuses (returns 0) while a running job has
+        the entry pinned — its plan already resolved these batches."""
+        with self._lock:
+            if self._pins.get(token, 0) > 0:
+                return 0
+            if self._entries.pop(token, None) is None:
+                return 0
+            self._sizes.pop(token, None)
+            self.stats["dropped"] += 1
+            return self.store.delete_prefix(f"_cache/{token}/")
+
+    def drop_all(self) -> int:
+        with self._lock:
+            return sum(self.drop(t) for t in list(self._entries))
+
+    def _evict_over_cap(self):
+        """Caller holds the lock. Oldest-planned-first over READY,
+        UNPINNED entries; pinned or in-flight entries may carry the
+        total over the cap transiently — the next commit re-checks."""
+        for token in list(self._entries):
+            if sum(self._sizes.values()) <= self.byte_cap:
+                break
+            entry = self._entries[token]
+            if not entry.get("ready") or self._pins.get(token, 0) > 0:
+                continue
+            size = self._sizes.pop(token, 0)
+            del self._entries[token]
+            self.store.delete_prefix(f"_cache/{token}/")
+            self.stats["evictions"] += 1
+            self.stats["evicted_bytes"] += size

@@ -1,0 +1,484 @@
+"""Multi-tenant service suite (docs/multi_tenant.md): N concurrent
+sessions over one FlintService must produce serial-single-tenant
+answers on both transports, share producer stages and cache
+materializations across tenants, enforce admission and quota limits,
+keep the shared cache under its byte cap without evicting pinned
+entries, stay correct under seeded account-wide chaos with isolated
+per-tenant retry budgets, and leak nothing once every session closes."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import FlintConfig, FlintContext
+from repro.core.costs import CostLedger
+from repro.core.faults import FaultPlan
+from repro.core.scheduler import StageFailure
+from repro.svc import (AdmissionController, AdmissionRejected,
+                       FairSharePool, FlintService, SharedCache)
+
+BACKENDS = ["sqs", "s3"]
+
+TAXI_ROWS = "\n".join(
+    f"2013-01-01 {i % 24:02d}:{i % 60:02d}:00,"
+    f"{'credit' if i % 3 else 'cash'},{i % 7},{(i * 7) % 100 / 10}"
+    for i in range(600)).encode()
+
+
+def _cfg(backend, **kw):
+    kw = {"concurrency": 8, "visibility_timeout_s": 0.5,
+          "drain_timeout_s": 2.0, **kw}
+    return FlintConfig(shuffle_backend=backend, **kw)
+
+
+# module-level row functions: cross-tenant CSE keys on the lineage
+# fingerprint, which hashes the SERIALIZED function — sessions must
+# submit literally the same derivation, as one client library would
+def _split(line):
+    return line.split(",")
+
+
+def _by_hour(row):
+    # integer tenths: keyed sums must not depend on float merge order
+    return (row[0][11:13], int(float(row[3]) * 10 + 0.5))
+
+
+def _by_payment(row):
+    return (row[1], 1)
+
+
+def _add(a, b):
+    return a + b
+
+
+def _q_tips_by_hour(sess, nparts=4):
+    return sorted(sess.textFile("taxi.csv", nparts).map(_split)
+                  .map(_by_hour).reduceByKey(_add, 3).collect())
+
+
+def _q_count_by_payment(sess, nparts=4):
+    return sorted(sess.textFile("taxi.csv", nparts).map(_split)
+                  .map(_by_payment).reduceByKey(_add, 2).collect())
+
+
+def _serial_expected(backend):
+    ctx = FlintContext(config=_cfg(backend))
+    ctx.upload("taxi.csv", TAXI_ROWS)
+    return {"hour": _q_tips_by_hour(ctx), "pay": _q_count_by_payment(ctx)}
+
+
+def _slow_split(line):
+    time.sleep(0.05)
+    return line.split(",")
+
+
+def _q_slow(sess):
+    """_q_tips_by_hour with a deliberately slow producer, so a second
+    tenant reliably submits while the producer stage is still live."""
+    return sorted(sess.textFile("taxi.csv", 4).map(_slow_split)
+                  .map(_by_hour).reduceByKey(_add, 3).collect())
+
+
+# --------------------------------------------------------- concurrency
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_concurrent_tenants_match_serial(backend):
+    """3 tenants x 2 mixed queries at once == serial single-tenant runs;
+    afterwards the service closes with zero transient keys left."""
+    expected = _serial_expected(backend)
+    svc = FlintService(_cfg(backend), slot_capacity=12)
+    for name, w in (("a", 2), ("b", 1), ("c", 1)):
+        svc.register_tenant(name, weight=w)
+    svc.upload("taxi.csv", TAXI_ROWS)
+
+    results, errors = {}, []
+
+    def run(name):
+        try:
+            with svc.session(name) as s:
+                results[name] = {"hour": _q_tips_by_hour(s),
+                                 "pay": _q_count_by_payment(s)}
+        except Exception as e:  # surfaced after join
+            errors.append((name, repr(e)))
+
+    threads = [threading.Thread(target=run, args=(n,)) for n in "abc"]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert not errors, errors
+    for name in "abc":
+        assert results[name] == expected, name
+    rep = svc.report()
+    # tenant compute is metered per child ledger and sums upward
+    for field in ("lambda_requests", "sqs_requests"):
+        assert (sum(r[field] for r in rep["tenants"].values())
+                == rep["account"][field])
+    assert rep["pool"]["peak_held"] <= 12
+    svc.close()
+    assert all(v == 0 for v in svc.leak_report().values()), \
+        svc.leak_report()
+
+
+def test_cross_tenant_cse_shares_one_producer():
+    """Two tenants submitting the same query while it runs: the second
+    plans NO producer stage (strictly fewer lambda invocations) and both
+    read the same answer; the shared stream is destroyed afterwards."""
+    svc = FlintService(_cfg("s3"), slot_capacity=12)
+    svc.register_tenant("a")
+    svc.register_tenant("b")
+    svc.upload("taxi.csv", TAXI_ROWS)
+    expected, out = None, {}
+
+    def run_a():
+        with svc.session("a") as s:
+            out["a"] = _q_slow(s)
+
+    ta = threading.Thread(target=run_a)
+    ta.start()
+    # wait for tenant a's plan to publish its shuffle, then submit b's
+    # identical query while a's slow producer stage is still running
+    deadline = time.time() + 5.0
+    while svc.share.stats["published"] == 0 and time.time() < deadline:
+        time.sleep(0.005)
+    assert svc.share.stats["published"] >= 1, "a never published"
+    with svc.session("b") as s:
+        out["b"] = _q_slow(s)
+    ta.join()
+
+    assert out["a"] == out["b"]
+    assert svc.share.stats["hits"] >= 1
+    assert svc.share.stats["joined_groups"] >= 1
+    assert svc.share.stats["destroyed"] == svc.share.stats["published"]
+    rep = svc.report()["tenants"]
+    # b ran only the consumer stage — strictly fewer invocations than a
+    assert rep["b"]["lambda_requests"] < rep["a"]["lambda_requests"]
+    svc.close()
+    assert all(v == 0 for v in svc.leak_report().values())
+
+
+def test_sqs_shuffles_never_shared_cross_job():
+    """SQS queues are destroyed by consumption, so the registry must
+    refuse to share them: two sequential identical SQS queries each run
+    their own producer."""
+    svc = FlintService(_cfg("sqs"), slot_capacity=8)
+    svc.upload("taxi.csv", TAXI_ROWS)
+    with svc.session("a") as s:
+        r1 = _q_tips_by_hour(s)
+    with svc.session("b") as s:
+        r2 = _q_tips_by_hour(s)
+    assert r1 == r2
+    assert svc.share.stats["published"] == 0
+    assert svc.share.stats["hits"] == 0
+    svc.close()
+    assert all(v == 0 for v in svc.leak_report().values())
+
+
+# ------------------------------------------------------------- caching
+
+
+def _cached_hours(sess):
+    cached = (sess.textFile("taxi.csv", 4).map(_split)
+              .map(_by_hour).cache())
+    return sorted(cached.reduceByKey(_add, 3).collect())
+
+
+def test_shared_cache_hits_across_tenants():
+    """Tenant a materializes a cache(); tenant b's identical derivation
+    plans from the shared materialization — no source rescan."""
+    svc = FlintService(_cfg("s3"), slot_capacity=8)
+    svc.upload("taxi.csv", TAXI_ROWS)
+    with svc.session("a") as s:
+        ra = _cached_hours(s)
+    assert len(svc.cache) == 1 and svc.cache.total_bytes() > 0
+    with svc.session("b") as s:
+        # the planner resolves b's identical derivation to a's
+        # materialized partitions — no source scan, no map chain
+        from repro.core.dag import CacheInput, build_plan
+        node = (s.textFile("taxi.csv", 4).map(_split)
+                .map(_by_hour).cache().reduceByKey(_add, 3))
+        plan = build_plan(node, "collect", cache_index=svc.cache)
+        inputs = [t.input for st in plan for t in st.tasks]
+        assert any(isinstance(i, CacheInput) for i in inputs)
+        rb = _cached_hours(s)
+    assert ra == rb
+    assert len(svc.cache) == 1  # still ONE shared materialization
+    svc.close()
+    assert all(v == 0 for v in svc.leak_report().values())
+
+
+def test_cache_eviction_under_byte_cap_spares_pinned():
+    """Unit-level SharedCache contract: commits evict LRU ready entries
+    over the cap, pinned entries survive both eviction and drop()."""
+    ledger = CostLedger()
+    from repro.core.queues import ObjectStoreSim
+    store = ObjectStoreSim(ledger)
+    cache = SharedCache(store, byte_cap=2500)
+
+    def materialize(token, nbytes):
+        cache[token] = {"nparts": 1, "ready": False}
+        store.put(f"_cache/{token}/1/p0/b0", b"x" * nbytes)
+        cache[token]["ready"] = True
+        cache.committed(token)
+
+    materialize("t1", 1000)
+    cache.pin("t1")
+    materialize("t2", 1000)
+    materialize("t3", 1000)  # over cap: t2 (LRU, unpinned) evicted
+    assert cache.stats["evictions"] == 1
+    assert "t2" not in cache and not store.list("_cache/t2/")
+    assert "t1" in cache and store.list("_cache/t1/")  # pinned survivor
+    assert cache.total_bytes() <= 2500
+    assert cache.drop("t1") == 0          # pinned: refused
+    cache.unpin("t1")
+    assert cache.drop("t1") > 0           # unpinned: deleted
+    assert not store.list("_cache/t1/")
+    assert cache.drop_all() > 0           # t3 goes too
+    assert len(cache) == 0
+
+
+def test_service_cache_eviction_end_to_end():
+    """A byte cap smaller than two materializations: caching a second
+    dataset evicts the first, and re-running the first query still
+    answers correctly by re-materializing."""
+    svc = FlintService(_cfg("s3"), slot_capacity=8, cache_bytes=1)
+    svc.upload("taxi.csv", TAXI_ROWS)
+    with svc.session("a") as s:
+        r1 = _cached_hours(s)
+        assert svc.cache.stats["evictions"] >= 1  # cap is tiny
+        assert _cached_hours(s) == r1  # re-materializes, same answer
+    svc.close()
+    assert all(v == 0 for v in svc.leak_report().values())
+
+
+# ------------------------------------------------- admission and quotas
+
+
+def test_admission_rejects_at_capacity():
+    ac = AdmissionController(max_running=2, max_queued=1)
+    ac.admit("t1")
+    ac.admit("t2")
+    queued_in = threading.Event()
+    admitted = threading.Event()
+
+    def queue_third():
+        queued_in.set()
+        ac.admit("t3")
+        admitted.set()
+
+    t = threading.Thread(target=queue_third)
+    t.start()
+    queued_in.wait(2.0)
+    deadline = time.time() + 2.0
+    while ac.queued == 0 and time.time() < deadline:
+        time.sleep(0.002)
+    with pytest.raises(AdmissionRejected) as ei:
+        ac.admit("t4")  # 2 running + 1 queued: over both limits
+    assert ei.value.reason == "capacity" and ei.value.tenant == "t4"
+    ac.release()
+    assert admitted.wait(2.0)
+    t.join()
+    assert ac.stats["rejected_capacity"] == 1
+    assert ac.stats["peak_running"] == 2 and ac.stats["peak_queued"] == 1
+
+
+def test_quota_rejection_and_mid_job_enforcement():
+    """A tenant over its dollar budget is refused at the gate; a tenant
+    that crosses the budget while running is stopped mid-job with a
+    structured, non-retryable failure. Other tenants are unaffected."""
+    svc = FlintService(_cfg("s3"), slot_capacity=8)
+    svc.register_tenant("broke", max_usd=1e-9)
+    svc.register_tenant("rich")
+    svc.upload("taxi.csv", TAXI_ROWS)
+    with svc.session("broke") as s:
+        # budget > 0 spent of 1e-9: first admit passes, the mid-job
+        # guard halts the run after the first billed launches
+        with pytest.raises(StageFailure) as ei:
+            _q_tips_by_hour(s)
+        assert ei.value.error_type == "TenantQuotaExceeded"
+        assert not ei.value.retryable
+        with pytest.raises(AdmissionRejected) as ei:  # now gated
+            _q_tips_by_hour(s)
+        assert ei.value.reason == "quota"
+    with svc.session("rich") as s:
+        assert _q_tips_by_hour(s)  # unaffected by the neighbor's quota
+    assert svc.report()["admission"]["rejected_quota"] == 1
+    svc.close()
+    assert all(v == 0 for v in svc.leak_report().values())
+
+
+def test_fair_share_respects_weights():
+    """Deterministic max-min check: capacity 4 split between weight-3
+    and weight-1 tenants lands on 3/1 no matter the acquisition order."""
+    pool = FairSharePool(4)
+    pool.set_weight("a", 3)
+    pool.set_weight("b", 1)
+    la, lb = pool.lease("a"), pool.lease("b")
+    la.set_demand(4)
+    lb.set_demand(4)
+    for _ in range(8):  # greedy alternation, b first
+        lb.try_acquire()
+        la.try_acquire()
+    assert pool.held("a") == 3 and pool.held("b") == 1
+    assert pool.held() == 4
+    # releases rebalance: a gives one back, b still can't exceed its
+    # share while a has unmet demand
+    la.release()
+    assert lb.try_acquire() is False
+    assert la.try_acquire() is True
+    la.detach()
+    lb.detach()
+    assert pool.held() == 0
+
+
+def test_fair_share_pool_stress():
+    """Hammer one pool from many leases: capacity is never exceeded and
+    every slot comes back after detach."""
+    pool = FairSharePool(6)
+    stop = threading.Event()
+
+    def worker(tenant):
+        ls = pool.lease(tenant)
+        ls.set_demand(3)
+        while not stop.is_set():
+            if ls.try_acquire():
+                time.sleep(0.0005)
+                ls.release()
+        ls.detach()
+
+    threads = [threading.Thread(target=worker, args=(f"t{i % 3}",))
+               for i in range(9)]
+    for t in threads:
+        t.start()
+    time.sleep(0.4)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert pool.peak_held <= 6
+    assert pool.held() == 0
+    assert pool.grants > 0
+
+
+# ----------------------------------------------------------------- chaos
+
+
+def test_service_chaos_serial_equal_and_zero_leaks():
+    """Seeded account-wide chaos (shared store 5xx + lost objects, per-
+    scheduler SQS/Lambda faults, shared account concurrency cap): two
+    concurrent tenants still produce fault-free answers, the shared
+    gauge sees the real account-wide peak, and nothing leaks."""
+    expected = _serial_expected("s3")
+    plan = FaultPlan(seed=int(__import__("os").environ.get(
+        "FLINT_CHAOS_SEED", "20260808")),
+        s3_error_prob=0.02, sqs_error_prob=0.02,
+        invoke_throttle_prob=0.02, lose_object_prob=0.01,
+        account_concurrency=6)
+    svc = FlintService(_cfg("s3", max_stage_retries=5, retry_base_s=0.001,
+                            retry_cap_s=0.01),
+                       fault_plan=plan, slot_capacity=10)
+    svc.register_tenant("a", retry_budget=400)
+    svc.register_tenant("b", retry_budget=400)
+    svc.upload("taxi.csv", TAXI_ROWS)
+    results, errors = {}, []
+
+    def run(name):
+        try:
+            with svc.session(name) as s:
+                results[name] = {"hour": _q_tips_by_hour(s),
+                                 "pay": _q_count_by_payment(s)}
+        except Exception as e:
+            errors.append((name, repr(e)))
+
+    threads = [threading.Thread(target=run, args=(n,)) for n in "ab"]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert results["a"] == expected and results["b"] == expected
+    assert svc.gauge.peak <= 10  # slots bound the account in-flight peak
+    svc.close()
+    assert all(v == 0 for v in svc.leak_report().values()), \
+        svc.leak_report()
+
+
+def test_retry_budgets_are_isolated_per_tenant():
+    """Chaos retries spend only the retrying tenant's budget: after a
+    runs under heavy store faults, b's untouched budget is still full."""
+    plan = FaultPlan(seed=7, s3_error_prob=0.15)
+    svc = FlintService(_cfg("s3", retry_base_s=0.001, retry_cap_s=0.01),
+                       fault_plan=plan, slot_capacity=8)
+    svc.register_tenant("a", retry_budget=500)
+    svc.register_tenant("b", retry_budget=500)
+    svc.upload("taxi.csv", TAXI_ROWS)
+    with svc.session("a") as s:
+        _q_tips_by_hour(s)
+    ta = svc._tenants["a"].retry_budget
+    tb = svc._tenants["b"].retry_budget
+    assert ta.spent > 0      # the chaos made a retry at least once
+    assert tb.spent == 0     # none of it billed to the idle tenant
+    svc.close()
+
+
+# -------------------------------------------- shared-state thread safety
+
+
+def test_cost_ledger_children_sum_to_parent_under_contention():
+    root = CostLedger()
+    kids = [root.child() for _ in range(4)]
+
+    def bill(ledger):
+        for _ in range(300):
+            ledger.add_lambda(0.05, 1024)
+            ledger.add_s3(100)
+            ledger.add_s3_put(50)
+            ledger.add_sqs(64)
+
+    threads = [threading.Thread(target=bill, args=(k,)) for k in kids]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for field in ("lambda_requests", "s3_gets", "s3_puts", "sqs_requests",
+                  "bytes_to_s3", "bytes_from_s3"):
+        assert getattr(root, field) == sum(getattr(k, field) for k in kids)
+    assert root.report()["lambda_requests"] == 1200
+
+
+def test_shared_cache_concurrent_mutation_stays_consistent():
+    """Concurrent register/commit/read/drop/pin from many threads: no
+    exceptions, byte accounting never goes negative, and a full drain
+    leaves the cache and the store empty."""
+    from repro.core.queues import ObjectStoreSim
+    store = ObjectStoreSim(CostLedger())
+    cache = SharedCache(store, byte_cap=5000)
+    errors = []
+
+    def churn(i):
+        try:
+            for j in range(40):
+                token = f"t{i}-{j % 5}"
+                cache[token] = {"nparts": 1, "ready": False}
+                store.put(f"_cache/{token}/1/p0/b0", b"y" * 100)
+                cache[token]["ready"] = True
+                cache.committed(token)
+                cache.pin(token)
+                _ = cache.total_bytes()
+                _ = list(cache.items())
+                cache.unpin(token)
+                cache.drop(token)
+        except Exception as e:
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=churn, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    cache.drop_all()
+    assert len(cache) == 0 and cache.total_bytes() == 0
+    assert not store.list("_cache/")

@@ -418,10 +418,13 @@ def _chaos_ctx(backend, plan, vectorize=True):
 
 def _chaos_job(ctx):
     """One fused-kv aggregation (scan->filter->partial-agg emitting
-    pre-combined partials) and one join whose map sides ship KVBatch
-    columnar carriers — each a single shuffle, the shape the repo's chaos
-    sweep guarantees (chained multi-shuffle pipelines have their own
-    pre-existing flakes on s3 independent of vectorization)."""
+    pre-combined partials), one join whose map sides ship KVBatch
+    columnar carriers, and one CHAINED multi-shuffle pipeline (two
+    aggregations feeding a join — consumers that are themselves
+    producers). The chained shape used to be excluded for an s3 recovery
+    flake (timed-out consumer reopening only the shallowest lost input);
+    with lost-input recovery now expanding reopens deepest-first it is
+    part of the guaranteed chaos surface."""
     data = [(i % 7, i, float(i % 5)) for i in range(300)]
     df = (ctx.parallelize(data, 4)
           .toDF([("k", "int"), ("v", "int"), ("w", "float")]))
@@ -434,7 +437,10 @@ def _chaos_job(ctx):
     right = (ctx.parallelize([(i % 7, float(i)) for i in range(50)], 4)
              .toDF([("k", "int"), ("b", "float")]))
     joined = sorted(left.join(right, on="k").collect())
-    return agg, joined
+    chained = sorted(df.groupBy("k").agg(sum_(col("v")).alias("t"))
+                     .join(right.groupBy("k").agg(count_().alias("m")),
+                           on="k", numPartitions=3).collect())
+    return agg, joined, chained
 
 
 TRANSIENT_PREFIXES = ("_exchange/", "_spill/", "_payload/", "_result/")
