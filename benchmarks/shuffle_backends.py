@@ -61,12 +61,23 @@
    fault-free answers with per-tenant retry budgets isolated, and zero
    leaked keys after every session closes.
 
-``--quick`` runs a reduced-size pass of (1), (2), (5), (6), (7), (8) and
-(9) with hard assertions — the CI smoke gate for transport regressions.
+10. ADAPTIVE EXECUTION A/B (docs/adaptive_execution.md): a skewed
+    taxi join whose build side aggregates to a handful of keys, run
+    with runtime replanning on vs ``FlintConfig.adaptive=False``, plus
+    a groupBy+orderBy query. Hard gates: bit-identical results, the
+    adaptive join converts to a broadcast hash join with STRICTLY
+    fewer shuffled bytes and fewer Lambda invocations, the orderBy
+    executes as a distributed range-partitioned sort (no driver ops,
+    >1 sort task), and zero leaks. Emits ``BENCH_9.json``.
+
+``--quick`` runs a reduced-size pass of (1), (2), (5), (6), (7), (8),
+(9) and (10) with hard assertions — the CI smoke gate for transport
+regressions.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -82,7 +93,8 @@ S3_LIST_LATENCY = 0.050
 
 N_ROWS = int(os.environ.get("TAXI_ROWS", "40000"))
 
-TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/")
+TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/",
+                      "_broadcast/")
 
 
 def groupby_query(ctx):
@@ -776,6 +788,100 @@ def _print_transport_rows(rows, agreement):
     print(f"# transports agree: {agreement}")
 
 
+def adaptive_join_query(ctx):
+    """Skewed build side: the per-hour tip aggregate (24 keys, a few
+    hundred bytes) joined against every raw trip row (the probe side,
+    ~the whole file). A static plan shuffles BOTH sides into join
+    partitions; adaptive measures the aggregate's output as it
+    completes, converts to a broadcast hash join, and the probe rows
+    never cross the wire at all — the join runs inside the probe side's
+    map stage."""
+    def trips():
+        return ctx.textFile("taxi.csv", 8).map(lambda x: x.split(","))
+
+    tips = (trips().map(lambda x: (x[0][11:13],
+                                   int(round(float(x[6]) * 100))))
+            .reduceByKey(lambda a, b: a + b, 8))
+    probe = trips().map(lambda x: (x[0][11:13], ",".join(x)))
+    return probe.join(tips, 8).collect()
+
+
+def adaptive_sort_query(ctx):
+    """groupBy + total-order orderBy (unique (tips, hour) tie-break so
+    the full row order is deterministic across strategies)."""
+    df = ctx.read_csv("taxi.csv", TAXI_SCHEMA, 8)
+    q = (df.withColumn("hour", col("pickup").substr(12, 2))
+           .withColumn("tip_cents", (col("tip") * lit(100.0)).cast("int"))
+           .groupBy("hour")
+           .agg(sum_(col("tip_cents")).alias("tips"),
+                count_().alias("n"))
+           .orderBy("tips", "hour", ascending=[False, True]))
+    return q.collect()
+
+
+def run_adaptive_ab(rows=None):
+    """Adaptive execution A/B (docs/adaptive_execution.md). Hard gates:
+    identical results per workload, the adaptive join leg converts to a
+    broadcast join with strictly fewer shuffled bytes AND fewer Lambda
+    invocations, the orderBy leg runs as a distributed range sort, and
+    zero leaks everywhere. Returns (rows, all-gates-ok)."""
+    data = taxi_csv(rows or N_ROWS, seed=13)
+    out = []
+    cells: dict = {}
+    for workload, query in (("broadcast_join", adaptive_join_query),
+                            ("orderby", adaptive_sort_query)):
+        for adaptive in (True, False):
+            ctx = FlintContext(
+                "flint",
+                FlintConfig(concurrency=16, flush_records=2000,
+                            adaptive=adaptive))
+            ctx.upload("taxi.csv", data)
+            uploaded = ctx.ledger.bytes_to_s3
+            t0 = time.monotonic()
+            ans = query(ctx)
+            wall = time.monotonic() - t0
+            rep = ctx.cost_report()
+            sched = ctx.last_scheduler
+            shuffled = (rep["bytes_to_sqs"]
+                        + rep["bytes_to_s3"] - uploaded)
+            assert_no_leaks(ctx)
+            cell = {
+                "workload": workload, "adaptive": adaptive,
+                "wall_s": round(wall, 4), "shuffled_bytes": shuffled,
+                "lambda_requests": rep["lambda_requests"],
+                "total_usd": round(rep["total_usd"], 6),
+                "adaptive_stats": dict(sched.adaptive_stats),
+                "sort_tasks": sched.stage_stats[-1]["tasks"],
+            }
+            out.append(cell)
+            # the join's row ORDER is partitioning-dependent (canon by
+            # sort); the orderBy leg is compared EXACTLY — the total
+            # order is the result
+            if workload == "broadcast_join":
+                ans = sorted(ans)
+            cells[(workload, adaptive)] = (ans, cell)
+
+    for workload in ("broadcast_join", "orderby"):
+        on_ans, on = cells[(workload, True)]
+        off_ans, off = cells[(workload, False)]
+        assert on_ans == off_ans, \
+            f"{workload}: adaptive changed query results"
+    on = cells[("broadcast_join", True)][1]
+    off = cells[("broadcast_join", False)][1]
+    assert on["adaptive_stats"]["broadcast_joins"] >= 1, \
+        "join did not convert to a broadcast join"
+    assert on["shuffled_bytes"] < off["shuffled_bytes"], \
+        f"broadcast join did not shrink shuffled bytes " \
+        f"({on['shuffled_bytes']} vs {off['shuffled_bytes']})"
+    assert on["lambda_requests"] < off["lambda_requests"], \
+        f"broadcast join did not cut invocations " \
+        f"({on['lambda_requests']} vs {off['lambda_requests']})"
+    sort_on = cells[("orderby", True)][1]
+    assert sort_on["sort_tasks"] > 1, \
+        "adaptive orderBy did not run as a distributed sort"
+    return out, True
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
     quick = "--quick" in argv
@@ -832,6 +938,21 @@ def main(argv=None):
         print("service," + ",".join(f"{k}={v}" for k, v in r.items()))
     print(f"# multi-tenant service gates passed: {service_ok}")
 
+    adaptive_rows, adaptive_ok = run_adaptive_ab(rows)
+    print("workload,adaptive,wall_s,shuffled_bytes,lambda_requests,"
+          "total_usd,broadcast_joins")
+    for r in adaptive_rows:
+        print(f"{r['workload']},{r['adaptive']},{r['wall_s']},"
+              f"{r['shuffled_bytes']},{r['lambda_requests']},"
+              f"{r['total_usd']},"
+              f"{r['adaptive_stats']['broadcast_joins']}")
+    print(f"# adaptive gates passed: {adaptive_ok}")
+    bench_path = os.path.join(os.path.dirname(__file__), os.pardir,
+                              "BENCH_9.json")
+    with open(os.path.abspath(bench_path), "w") as f:
+        json.dump({"adaptive_ab": adaptive_rows}, f, indent=2)
+        f.write("\n")
+
     # hard gates — make transport regressions fail loudly (CI --quick)
     assert agreement, "transports disagree on query results"
     assert col_identical, "columnar framing changed query results"
@@ -846,6 +967,7 @@ def main(argv=None):
     assert chaos_identical, \
         "chaos runs differ from the fault-free reference"
     assert service_ok, "multi-tenant service gates failed"
+    assert adaptive_ok, "adaptive execution gates failed"
     if quick:
         print("# quick smoke passed")
         return ab, agreement

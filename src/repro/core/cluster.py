@@ -72,8 +72,16 @@ class ClusterScheduler:
                 left[k].append(v)
             for k, v in shuffles[sr][inp.partition]:
                 right[k].append(v)
-            return iter([(k, (lv, rv)) for k in left if k in right
-                         for lv in left[k] for rv in right[k]])
+            how = inp.join_how
+            pairs = [(k, (lv, rv)) for k in left if k in right
+                     for lv in left[k] for rv in right[k]]
+            if how in ("left", "outer"):
+                pairs += [(k, (lv, None)) for k in left if k not in right
+                          for lv in left[k]]
+            if how in ("right", "outer"):
+                pairs += [(k, (None, rv)) for k in right if k not in left
+                          for rv in right[k]]
+            return iter(pairs)
         sid, mode = inp.parts[0]
         records = shuffles[sid][inp.partition]
         if mode == "agg":
@@ -104,8 +112,12 @@ class ClusterScheduler:
                 w = stage.write
                 out: dict[int, list] = defaultdict(list)
                 if w.mode == "repart":
-                    for i, rec in enumerate(it):
-                        out[i % w.nparts].append(rec)
+                    if w.partition_fn is not None:
+                        for rec in it:
+                            out[w.partition_fn(rec) % w.nparts].append(rec)
+                    else:
+                        for i, rec in enumerate(it):
+                            out[i % w.nparts].append(rec)
                 elif w.mode == "agg" and w.combine_fn is not None:
                     combined: dict = {}
                     for k, v in it:

@@ -85,6 +85,36 @@ def pick_shuffle_transport(est_bytes: float, n_producers: int,
     return "s3" if costs["s3"] < costs["sqs"] else "sqs"
 
 
+def broadcast_join_cost(small_bytes: float, n_readers: int) -> float:
+    """Modeled USD for shipping a measured small join side as a
+    content-addressed broadcast object: the driver drains it once (the
+    GETs are already paid by the shuffle it replaces), PUTs ~one object
+    (+ manifest), and every map task of the large side LISTs + GETs it
+    back. Per-reader cost is a couple of requests — no per-byte shuffle
+    chunking on either side."""
+    n_objects = max(1, math.ceil(small_bytes / S3_EXCHANGE_BATCH_LIMIT))
+    return ((n_objects + 1) * S3_PER_PUT
+            + n_readers * (S3_PER_LIST + n_objects * S3_PER_GET))
+
+
+def pick_join_strategy(small_bytes: float, large_bytes: float,
+                       n_producers: int, nparts: int, n_readers: int,
+                       threshold_bytes: int) -> str:
+    """The adaptive scheduler's runtime join choice, from MEASURED sizes:
+    "broadcast" when the small side fits the configured threshold AND the
+    modeled broadcast cost undercuts shuffling BOTH sides; else
+    "shuffle". The threshold is the memory guard (every map task holds
+    the whole build side); the cost comparison is what keeps a small
+    side with thousands of readers on the shuffle path."""
+    if small_bytes > threshold_bytes:
+        return "shuffle"
+    shuffle_cost = min(shuffle_transport_costs(
+        small_bytes + large_bytes, n_producers, nparts).values())
+    return ("broadcast"
+            if broadcast_join_cost(small_bytes, n_readers) < shuffle_cost
+            else "shuffle")
+
+
 def cluster_cost(wall_seconds: float, instances: int = CLUSTER_INSTANCES) -> float:
     """Per-second billing of a provisioned cluster — accrues while idle,
     which is exactly what the paper's pay-as-you-go goal removes."""

@@ -88,6 +88,14 @@ class ShuffleRead:
     # a self-join reads ONE shared shuffle and uses the drained aggregate
     # as both sides, instead of shipping the same data twice
     self_join: bool = False
+    # join semantics: inner | left | right | outer — which side's
+    # unmatched rows survive (paired with None)
+    join_how: str = "inner"
+    # adaptive partition coalescing (runtime rewrite only — never set at
+    # plan time): the CONTIGUOUS list of producer partitions this task
+    # drains instead of just ``partition``; order is preserved so an
+    # index-ordered merge still yields globally sorted output
+    partitions: list | None = None
 
 
 @dataclasses.dataclass
@@ -108,6 +116,16 @@ class ShuffleWrite:
     # columnar batches (serde schema grammar); None => per-batch sniffing.
     # The SQL lowering sets this — it knows row types at plan time.
     batch_schema: tuple | None = None
+    # repart mode: explicit record -> partition routing (range
+    # partitioner for distributed orderBy); None => round-robin
+    partition_fn: Any = None
+    # planner's shuffle-volume estimate (bytes) — the adaptive scheduler
+    # compares it against measured stage output at runtime
+    est_bytes: float = 0.0
+    # True when ``transport`` was resolved by the cost model ("auto"
+    # default, no per-shuffle hint): only those choices may be revisited
+    # at runtime from measured volume — explicit hints stay pinned
+    auto_transport: bool = False
 
 
 @dataclasses.dataclass
@@ -181,9 +199,11 @@ def lineage_fingerprint(node, _memo: dict | None = None) -> bytes:
                  lineage_fingerprint(node.parent, memo))
     elif isinstance(node, R.Repartition):
         parts = (b"repart", node.nparts, node.transport or "",
+                 _fn_fingerprint(getattr(node, "partition_fn", None), memo),
                  lineage_fingerprint(node.parent, memo))
     elif isinstance(node, R.Join):
         parts = (b"join", node.nparts, node.transport or "",
+                 getattr(node, "how", "inner"),
                  lineage_fingerprint(node.left, memo),
                  lineage_fingerprint(node.right, memo))
     elif isinstance(node, R.Union):
@@ -245,7 +265,12 @@ class _Planner:
         # close-site key -> (sid, n_prod) for foreign (cross-job) hits
         self._foreign: dict[tuple, tuple] = {}
         self._materializing: set[str] = set()
-        self._est_memo: dict[int, float] = {}
+        # id(node) -> (node, estimate). The node reference is kept ON
+        # PURPOSE: a memo keyed by bare id() could hand a GC'd node's
+        # reused id the estimate of an unrelated lineage; pinning the
+        # node makes the id stable for this planner's lifetime and the
+        # identity check below rejects any entry that isn't ours.
+        self._est_memo: dict[int, tuple] = {}
 
     def fp(self, node) -> bytes:
         return lineage_fingerprint(node, self._fps)
@@ -264,13 +289,22 @@ class _Planner:
         Drives the cost-model transport choice — it only has to land on
         the right side of the SQS/S3 crossover, not be exact."""
         got = self._est_memo.get(id(node))
-        if got is not None:
-            return got
+        if got is not None and got[0] is node:
+            return got[1]
+        val = None
         entry = self._cache_entry(node)
         if entry is not None:
             token = cache_token(node)
-            val = float(node.ctx.store.prefix_bytes(
+            stored = float(node.ctx.store.prefix_bytes(
                 f"_cache/{token}/{entry['nparts']}/"))
+            # staleness check: a just-uncache()d token can linger in the
+            # index while its prefix is already swept — 0 stored bytes
+            # for a "ready" entry means fall through to the lineage walk
+            # instead of estimating a non-empty dataset at zero
+            if stored > 0:
+                val = stored
+        if val is not None:
+            pass
         elif isinstance(node, R.Source):
             val = float(node.ctx.store.size(node.key))
         elif isinstance(node, R.ParallelCollection):
@@ -290,7 +324,7 @@ class _Planner:
             val = self._est_bytes(node.a) + self._est_bytes(node.b)
         else:
             raise TypeError(f"unknown RDD node {type(node).__name__}")
-        self._est_memo[id(node)] = val
+        self._est_memo[id(node)] = (node, val)
         return val
 
     def _est_producers(self, node) -> int:
@@ -323,11 +357,14 @@ class _Planner:
                                             nparts)
 
     def _transport_for(self, node_hint: str | None, parent,
-                       nparts: int) -> str:
+                       nparts: int) -> tuple[str, bool]:
+        """Resolve one shuffle's transport; the second element records
+        whether the COST MODEL chose it (vs an explicit hint / engine
+        default), i.e. whether the adaptive runtime may re-choose it."""
         tr = node_hint or ""
         if not tr and self.default_transport == "auto":
-            tr = self._auto_transport(parent, nparts)
-        return tr
+            return self._auto_transport(parent, nparts), True
+        return tr, False
 
     # ------------------------------------------------------------- visit
     def visit(self, node) -> _Chain:
@@ -383,74 +420,85 @@ class _Planner:
         if isinstance(node, R.ShuffleAgg):
             mode = "agg" if node.map_side_combine else "group"
             nparts = node.nparts * self.mult
-            tr = self._transport_for(node.transport, node.parent, nparts)
+            tr, auto = self._transport_for(node.transport, node.parent,
+                                           nparts)
             sid, n_prod, group = self._close_shared(
                 node.parent, mode, nparts, node.fn, tr,
-                batch_schema=node.batch_schema)
+                batch_schema=node.batch_schema, auto_transport=auto)
             inputs = [ShuffleRead([(sid, mode)], p, combine_fn=node.fn,
                                   transports={sid: tr}, groups=[group])
                       for p in range(nparts)]
             return _Chain(inputs, {sid: n_prod})
         if isinstance(node, R.Repartition):
             nparts = node.nparts * self.mult
-            tr = self._transport_for(node.transport, node.parent, nparts)
+            tr, auto = self._transport_for(node.transport, node.parent,
+                                           nparts)
             sid, n_prod, group = self._close_shared(
-                node.parent, "repart", nparts, None, tr)
+                node.parent, "repart", nparts, None, tr,
+                partition_fn=node.partition_fn, auto_transport=auto)
             inputs = [ShuffleRead([(sid, "repart")], p,
                                   transports={sid: tr}, groups=[group])
                       for p in range(nparts)]
             return _Chain(inputs, {sid: n_prod})
         if isinstance(node, R.Join):
             nparts = node.nparts * self.mult
-            tr_l = self._transport_for(node.transport, node.left, nparts)
-            tr_r = self._transport_for(node.transport, node.right, nparts)
+            how = node.how
+            tr_l, auto_l = self._transport_for(node.transport, node.left,
+                                               nparts)
+            tr_r, auto_r = self._transport_for(node.transport, node.right,
+                                               nparts)
             schemas = node.batch_schemas or (None, None, None)
             bs_l = (schemas[0], schemas[1]) if schemas[0] else None
             bs_r = (schemas[0], schemas[2]) if schemas[0] else None
             sid_l, n_left, g_l = self._close_shared(
                 node.left, "join", nparts, None, tr_l, key_side="left",
-                batch_schema=bs_l)
+                batch_schema=bs_l, auto_transport=auto_l)
             if (self.cse and self._close_key(node.right, "join", nparts,
                                              None, tr_r, bs_r)
                     == self._close_key(node.left, "join", nparts, None,
                                        tr_l, bs_l)):
                 # SELF-JOIN: both sides are the same lineage — one shared
-                # shuffle, drained once, used as left AND right
+                # shuffle, drained once, used as left AND right (every
+                # outer-join variant degenerates to inner here: a key
+                # always matches itself)
                 inputs = [ShuffleRead([(sid_l, "join")], p,
                                       transports={sid_l: tr_l},
-                                      groups=[g_l], self_join=True)
+                                      groups=[g_l], self_join=True,
+                                      join_how=how)
                           for p in range(nparts)]
                 return _Chain(inputs, {sid_l: n_left})
             sid_r, n_right, g_r = self._close_shared(
                 node.right, "join", nparts, None, tr_r, key_side="right",
-                batch_schema=bs_r)
+                batch_schema=bs_r, auto_transport=auto_r)
             inputs = [ShuffleRead([(sid_l, "join"), (sid_r, "join")], p,
                                   transports={sid_l: tr_l, sid_r: tr_r},
-                                  groups=[g_l, g_r])
+                                  groups=[g_l, g_r], join_how=how)
                       for p in range(nparts)]
             return _Chain(inputs, {sid_l: n_left, sid_r: n_right})
         raise TypeError(f"unknown RDD node {type(node).__name__}")
 
     # ------------------------------------------------------- shuffle CSE
     def _close_key(self, node, mode: str, nparts: int, combine,
-                   transport: str, batch_schema: tuple | None = None
-                   ) -> tuple:
+                   transport: str, batch_schema: tuple | None = None,
+                   partition_fn=None) -> tuple:
         """What makes two shuffles interchangeable: identical input
-        lineage, mode, partition count, combiner, transport, and declared
-        batch schema. A join's ``key_side`` is deliberately EXCLUDED — a
-        self-join's two sides carry identical data."""
+        lineage, mode, partition count, combiner, transport, declared
+        batch schema, and (repart) partition function. A join's
+        ``key_side`` is deliberately EXCLUDED — a self-join's two sides
+        carry identical data."""
         return (self.fp(node), mode, nparts, _fn_fingerprint(combine),
-                transport, batch_schema)
+                transport, batch_schema, _fn_fingerprint(partition_fn))
 
     def _close_shared(self, node, mode: str, nparts: int, combine,
                       transport: str, key_side: str = "",
-                      batch_schema: tuple | None = None
-                      ) -> tuple[int, int, int]:
+                      batch_schema: tuple | None = None,
+                      partition_fn=None,
+                      auto_transport: bool = False) -> tuple[int, int, int]:
         """Close (or reuse) the producer stage for one shuffle. Returns
         (shuffle_id, producer task count, consumer-group index for this
         read site)."""
         key = self._close_key(node, mode, nparts, combine, transport,
-                              batch_schema) \
+                              batch_schema, partition_fn) \
             if self.cse else None
         if key is not None:
             hit = self._shared.get(key)
@@ -472,10 +520,17 @@ class _Planner:
                     # refuses destructive (queue) transports
                     sid, n_prod = fhit
                     return sid, n_prod, self.share.join_group(sid)
+        try:
+            est = float(self._est_bytes(node))
+        except Exception:
+            est = 0.0
         write = ShuffleWrite(next(_next_shuffle), nparts, mode,
                              combine_fn=combine, key_side=key_side,
                              transport=transport,
-                             batch_schema=batch_schema)
+                             batch_schema=batch_schema,
+                             partition_fn=partition_fn,
+                             est_bytes=est,
+                             auto_transport=auto_transport)
         chain = self.visit(node)
         sid = write.shuffle_id
         stage_id = len(self.stages)

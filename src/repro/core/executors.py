@@ -79,6 +79,18 @@ class LostCacheInput(RuntimeError):
         self.detail = {"token": token}
 
 
+class LostBroadcastInput(RuntimeError):
+    """A broadcast object's manifest disagrees with the batches actually
+    on the store: the small-side data a broadcast hash join depends on
+    was acknowledged and then lost. Retrying the reading task cannot
+    help — the scheduler must re-run the small side's lineage and
+    re-publish the broadcast (docs/adaptive_execution.md)."""
+
+    def __init__(self, msg: str, prefix: str = ""):
+        super().__init__(msg)
+        self.detail = {"broadcast_prefix": prefix}
+
+
 class MemoryCapExceeded(RuntimeError):
     """Aggregation state outgrew the executor memory cap — the paper's
     answer is elasticity: raise the partition count and re-run."""
@@ -110,6 +122,23 @@ class FlintConfig:
     # stage with per-read-site consumer groups. False restores the
     # one-consumer-per-shuffle planner (A/B comparison).
     plan_cse: bool = True
+    # adaptive query execution (docs/adaptive_execution.md): collect
+    # per-stage shuffle-output statistics and re-optimize the REMAINING
+    # plan at stage boundaries — broadcast-join conversion, tiny-partition
+    # coalescing, measured-volume transport re-choice, and the sampled
+    # range partitioner behind distributed orderBy. False freezes the
+    # static plan (A/B comparison).
+    adaptive: bool = dataclasses.field(
+        default_factory=lambda: os.environ.get("FLINT_ADAPTIVE",
+                                               "1") not in ("0", "false"))
+    # measured small-side cap for switching a planned shuffle join to a
+    # broadcast hash join (the small side ships as a content-addressed
+    # _broadcast/ object every map task reads — no shuffle for either
+    # side, the join fuses into the large side's producer stage)
+    broadcast_threshold_bytes: int = 512 * 2**10
+    # coalesce adjacent reduce partitions whose measured input falls
+    # below this floor into one consumer task (0 disables)
+    coalesce_min_bytes: int = 16 * 2**10
     # vectorized columnar execution (docs/vectorized_execution.md): the SQL
     # lowering fuses scan→filter→project→partial-agg chains into one
     # batch-in/batch-out operator evaluating whole column arrays; False
@@ -196,6 +225,12 @@ class FlintConfig:
         if self.vector_batch_rows < 1:
             raise ValueError(f"vector_batch_rows must be >= 1, got "
                              f"{self.vector_batch_rows}")
+        if self.broadcast_threshold_bytes < 0:
+            raise ValueError(f"broadcast_threshold_bytes must be >= 0, "
+                             f"got {self.broadcast_threshold_bytes}")
+        if self.coalesce_min_bytes < 0:
+            raise ValueError(f"coalesce_min_bytes must be >= 0, got "
+                             f"{self.coalesce_min_bytes}")
         if self.drain_timeout_s >= self.invocation_timeout_s * self.lease_safety:
             # a drain allowed to out-wait the invocation lease converts
             # every slow producer into an invocation timeout instead of a
@@ -214,17 +249,23 @@ class FlintConfig:
 
 def serialize_task(task: TaskDef, attempt: int, extra: dict | None = None
                    ) -> dict:
-    # a ("cache", (token, nparts, index)) or ("limit", n) op carries plan
-    # data, not a user function — it ships as-is
-    ops = [(kind, fn if kind in ("cache", "limit") else serde.dumps_fn(fn))
+    # a ("cache", (token, nparts, index)), ("limit", n) or ("bcjoin",
+    # spec) op carries plan data, not a user function — it ships as-is
+    ops = [(kind, fn if kind in ("cache", "limit", "bcjoin")
+            else serde.dumps_fn(fn))
            for kind, fn in task.ops]
     inp = task.input
     if isinstance(inp, ShuffleRead) and inp.combine_fn is not None:
         inp = dataclasses.replace(inp, combine_fn=serde.dumps_fn(inp.combine_fn))
     write = task.write
-    if write is not None and write.combine_fn is not None:
-        write = dataclasses.replace(write,
-                                    combine_fn=serde.dumps_fn(write.combine_fn))
+    if write is not None and (write.combine_fn is not None
+                              or write.partition_fn is not None):
+        write = dataclasses.replace(
+            write,
+            combine_fn=(serde.dumps_fn(write.combine_fn)
+                        if write.combine_fn is not None else None),
+            partition_fn=(serde.dumps_fn(write.partition_fn)
+                          if write.partition_fn is not None else None))
     return {"stage": task.stage_id, "index": task.index, "input": inp,
             "ops": ops, "write": write, "attempt": attempt,
             **(extra or {})}
@@ -333,8 +374,8 @@ class LambdaSim:
             resp = executor_main(payload, self)
         except (InjectedFailure, InvocationTimeout, MemoryCapExceeded,
                 AbortedError, TimeoutError, KeyError, LostShuffleInput,
-                LostCacheInput, RetryExhausted, RetryBudgetExhausted,
-                TransientServiceError) as e:
+                LostCacheInput, LostBroadcastInput, RetryExhausted,
+                RetryBudgetExhausted, TransientServiceError) as e:
             resp = {"status": "error", "error_type": type(e).__name__,
                     "error": str(e)}
             detail = getattr(e, "detail", None)
@@ -499,25 +540,31 @@ def _drain_shuffle(read: ShuffleRead, env: LambdaSim, n_producers: dict, *,
     claim_group: list = []
     handles = []
     groups = read.groups or [0] * len(read.parts)
+    # adaptive coalescing: one task may drain SEVERAL contiguous producer
+    # partitions (read.partitions), folding them in listed order into one
+    # aggregate — repart streams stay globally ordered because the merge
+    # concatenates in partition-index order
+    partitions = read.partitions or [read.partition]
     for (sid, mode), consumer_group in zip(read.parts, groups):
         transport = env.transports.get(_read_transport_name(read, sid,
                                                             env.cfg))
-        handle = transport.open_drain(sid, read.partition,
-                                      int(n_producers.get(str(sid), 0)),
-                                      group=claim_group,
-                                      consumer_group=consumer_group)
         agg: Any = {} if mode in ("agg", "group", "join") else []
-        for _src, _seq, body in handle:
-            records = unpack_batch(body, env.rstore)
-            stats["records"] += len(records)
-            fold(agg, records, mode)
-        stats["messages"] += handle.stats["messages"]
-        stats["duplicates"] += handle.stats["duplicates"]
+        for part in partitions:
+            handle = transport.open_drain(sid, part,
+                                          int(n_producers.get(str(sid), 0)),
+                                          group=claim_group,
+                                          consumer_group=consumer_group)
+            for _src, _seq, body in handle:
+                records = unpack_batch(body, env.rstore)
+                stats["records"] += len(records)
+                fold(agg, records, mode)
+            stats["messages"] += handle.stats["messages"]
+            stats["duplicates"] += handle.stats["duplicates"]
+            handles.append(handle)
         if sort_groups and mode in ("group", "join"):
             for vals in agg.values():
                 vals.sort(key=_stable_order)
         out[(sid, mode)] = agg
-        handles.append(handle)
 
     def ack():
         for handle in handles:
@@ -537,14 +584,24 @@ def _shuffle_input_iter(read: ShuffleRead, env: LambdaSim,
             left = right = data[read.parts[0]]
         else:
             left, right = data[read.parts[0]], data[read.parts[1]]
+        how = read.join_how
         def it():
             for k, lvals in left.items():
                 rvals = right.get(k)
-                if not rvals:
-                    continue
-                for lv in lvals:
-                    for rv in rvals:
-                        yield (k, (lv, rv))
+                if rvals:
+                    for lv in lvals:
+                        for rv in rvals:
+                            yield (k, (lv, rv))
+                elif how in ("left", "outer"):
+                    # left/full outer: unmatched left rows survive,
+                    # paired with None
+                    for lv in lvals:
+                        yield (k, (lv, None))
+            if how in ("right", "outer"):
+                for k, rvals in right.items():
+                    if k not in left:
+                        for rv in rvals:
+                            yield (k, (None, rv))
         return it(), stats, ack
     (sid, mode) = read.parts[0]
     agg = data[(sid, mode)]
@@ -615,6 +672,57 @@ def cache_partition_iter(inp: CacheInput, store):
         yield from unpack_batch(store.get(key), store)
 
 
+def broadcast_read(prefix: str, store) -> dict:
+    """Read a broadcast hash-join build side back from its
+    content-addressed ``_broadcast/`` object(s) (billed LIST + GETs per
+    reading task — the cost the threshold weighs against a shuffle),
+    verifying the batch-count manifest first: an acknowledged-then-lost
+    batch raises LostBroadcastInput so the scheduler re-runs the small
+    side's lineage and re-publishes identical bytes."""
+    expected = None
+    data_keys = []
+    for key in store.list(prefix):
+        if key.endswith("manifest"):
+            expected = store.get_obj(key)
+        else:
+            data_keys.append(key)
+    if expected is None or expected != len(data_keys):
+        raise LostBroadcastInput(
+            f"broadcast {prefix} incomplete: manifest says {expected!r} "
+            f"batches, store holds {len(data_keys)}", prefix=prefix)
+    build: dict = {}
+    for key in data_keys:
+        for k, v in unpack_batch(store.get(key), store):
+            build.setdefault(k, []).append(v)
+    return build
+
+
+def _bcjoin_iter(it, spec: dict, store):
+    """The ("bcjoin", spec) plan op the adaptive scheduler splices into a
+    large-side producer stage: hash-join the streaming records against the
+    broadcast build side. ``spec['side']`` names which JOIN side the
+    broadcast data is; the stream is the other side. Only non-preserved
+    broadcast sides are ever planned (inner either; left join broadcasts
+    right; right join broadcasts left), so unmatched BUILD rows — which a
+    single map task could not decide globally — never need emitting."""
+    build = broadcast_read(spec["prefix"], store)
+    side, how = spec["side"], spec["how"]
+    for k, v in it:
+        hits = build.get(k)
+        if side == "right":  # stream is the left side
+            if hits:
+                for rv in hits:
+                    yield (k, (v, rv))
+            elif how in ("left", "outer"):
+                yield (k, (v, None))
+        else:  # broadcast left, stream is the right side
+            if hits:
+                for lv in hits:
+                    yield (k, (lv, v))
+            elif how in ("right", "outer"):
+                yield (k, (None, v))
+
+
 def _apply_ops(it, ops, store=None, cap=None):
     for kind, blob in ops:
         fn = serde.loads_fn(blob) if isinstance(blob, bytes) else blob
@@ -634,6 +742,8 @@ def _apply_ops(it, ops, store=None, cap=None):
             it = fn(it)
         elif kind == "cache":
             it = _cache_tee(it, fn, store, cap)
+        elif kind == "bcjoin":
+            it = _bcjoin_iter(it, fn, store)
         elif kind == "limit":
             # RDD.take / DataFrame.limit: stop pulling from upstream —
             # and therefore stop READING the source — after fn records
@@ -720,9 +830,16 @@ class _ShuffleWriter:
         self.combine = (serde.loads_fn(write.combine_fn)
                         if isinstance(write.combine_fn, bytes)
                         else write.combine_fn)
+        self.partition_fn = (serde.loads_fn(write.partition_fn)
+                             if isinstance(write.partition_fn, bytes)
+                             else write.partition_fn)
         self.buffers: dict[int, Any] = {}
         self.buffered = 0
         self.seq = {int(k): v for k, v in (seq_start or {}).items()}
+        # per-output-partition [wire bytes, records] — reported back to
+        # the scheduler as stats["shuffle_out"], the measured volume the
+        # adaptive planner replaces its estimates with
+        self.out_stats: dict[int, list] = {}
 
     def _transport(self):
         return self.env.transports.get(self.write.transport
@@ -739,8 +856,13 @@ class _ShuffleWriter:
     def add(self, record):
         w = self.write
         if w.mode == "repart":
-            p = self.seq.get(-1, 0) % w.nparts  # round-robin
-            self.seq[-1] = self.seq.get(-1, 0) + 1
+            if self.partition_fn is not None:
+                # explicit routing (range partitioner): deterministic per
+                # record, so retries re-route identically with no cursor
+                p = int(self.partition_fn(record)) % w.nparts
+            else:
+                p = self.seq.get(-1, 0) % w.nparts  # round-robin
+                self.seq[-1] = self.seq.get(-1, 0) + 1
             self._append(p, record)
         else:
             k, v = record
@@ -805,6 +927,7 @@ class _ShuffleWriter:
             if isinstance(buf, _ColumnBuffer):
                 if not buf.n:
                     continue
+                nrecs = buf.n
                 # schema from the plan when declared, else the batch's own
                 cb = buf.to_batch()
                 if self.write.batch_schema is not None:
@@ -816,6 +939,7 @@ class _ShuffleWriter:
                 records = list(buf.items()) if isinstance(buf, dict) else buf
                 if not records:
                     continue
+                nrecs = len(records)
                 bodies = pack_batch(records, limit=transport.batch_limit,
                                     spill=transport.spill,
                                     columnar=self.env.cfg.columnar_batches,
@@ -823,6 +947,9 @@ class _ShuffleWriter:
             seq = self.seq.get(p, 0)
             transport.send(self.write.shuffle_id, p, self.src, seq, bodies)
             self.seq[p] = seq + len(bodies)
+            st = self.out_stats.setdefault(p, [0, 0])
+            st[0] += sum(len(b) for b in bodies)
+            st[1] += nrecs
         self.buffers = {}
         self.buffered = 0
 
@@ -936,6 +1063,9 @@ def executor_main(payload: dict, env: LambdaSim) -> dict:
             else:
                 writer.add(rec)
         writer.flush()
+        # per-link deltas: the scheduler sums links/attempts per shuffle
+        stats["shuffle_out"] = {p: list(v)
+                                for p, v in writer.out_stats.items()}
         if not exhausted["flag"]:
             # EOS protocol (both scheduler modes): the LAST link of the
             # (possibly chained) task closes the stream for this producer

@@ -29,8 +29,9 @@ Schema (all probabilities per call, in [0, 1]):
                         (0 = uncapped)
   lose_object_prob      an ACKNOWLEDGED durable write silently vanishes
   lose_object_prefixes  ... restricted to these key prefixes (default:
-                        exchange batches and cache materializations — the
-                        lost-durable-object faults lineage recovery heals)
+                        exchange batches, cache materializations and
+                        broadcast objects — the lost-durable-object
+                        faults lineage recovery heals)
   lose_keys             targeted loss: first write whose key contains each
                         fragment vanishes (fires once per fragment)
   lose_keys_every       like lose_keys but EVERY matching write vanishes —
@@ -72,7 +73,8 @@ class FaultPlan:
     invoke_timeout_prob: float = 0.0
     account_concurrency: int = 0
     lose_object_prob: float = 0.0
-    lose_object_prefixes: tuple = ("_exchange/", "_cache/")
+    lose_object_prefixes: tuple = ("_exchange/", "_cache/",
+                                   "_broadcast/")
     lose_keys: tuple = ()
     lose_keys_every: tuple = ()
 

@@ -79,14 +79,23 @@ class RDD:
 
     def join(self, other: "RDD", numPartitions: int | None = None,
              transport: str | None = None,
-             batch_schemas: tuple | None = None) -> "RDD":
+             batch_schemas: tuple | None = None,
+             how: str = "inner") -> "RDD":
+        if how not in ("inner", "left", "right", "outer"):
+            raise ValueError(f"unsupported join how={how!r}")
         return Join(self, other,
                     numPartitions or max(self.nparts, other.nparts),
-                    transport=transport, batch_schemas=batch_schemas)
+                    transport=transport, batch_schemas=batch_schemas,
+                    how=how)
 
     def repartition(self, numPartitions: int,
-                    transport: str | None = None) -> "RDD":
-        return Repartition(self, numPartitions, transport=transport)
+                    transport: str | None = None,
+                    partition_fn: Callable | None = None) -> "RDD":
+        """``partition_fn(record) -> int`` routes each record to a
+        partition index (modulo numPartitions) instead of the default
+        round-robin — the range partitioner behind distributed orderBy."""
+        return Repartition(self, numPartitions, transport=transport,
+                           partition_fn=partition_fn)
 
     def union(self, other: "RDD") -> "RDD":
         return Union(self, other)
@@ -222,24 +231,30 @@ class ShuffleAgg(RDD):
 
 class Repartition(RDD):
     def __init__(self, parent: RDD, nparts: int,
-                 transport: str | None = None):
+                 transport: str | None = None,
+                 partition_fn: Callable | None = None):
         super().__init__(parent.ctx, nparts)
         self.parent = parent
         self.transport = transport
+        self.partition_fn = partition_fn
 
 
 class Join(RDD):
     """``batch_schemas`` declares (key-schema, left-value-schema,
-    right-value-schema) for the two side shuffles' columnar batches."""
+    right-value-schema) for the two side shuffles' columnar batches.
+    ``how`` selects inner/left/right/outer semantics — unmatched rows of
+    a preserved side pair with None."""
 
     def __init__(self, left: RDD, right: RDD, nparts: int,
                  transport: str | None = None,
-                 batch_schemas: tuple | None = None):
+                 batch_schemas: tuple | None = None,
+                 how: str = "inner"):
         super().__init__(left.ctx, nparts)
         self.left = left
         self.right = right
         self.transport = transport
         self.batch_schemas = batch_schemas
+        self.how = how
 
 
 class Union(RDD):

@@ -62,17 +62,21 @@ import threading
 import time
 from typing import Any
 
-from repro.core.costs import CostLedger
+from repro.core.costs import (S3_EXCHANGE_BATCH_LIMIT, CostLedger,
+                              pick_join_strategy, pick_shuffle_transport)
 from repro.core.dag import ShuffleRead, StagePlan, TaskDef
-from repro.core.executors import FlintConfig, LambdaSim, serialize_task
+from repro.core.executors import (FlintConfig, LambdaSim, _stable_order,
+                                  serialize_task)
 from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.queues import ObjectStoreSim, SQSSim
 from repro.core.retry import RetryBudget, TransientServiceError
-from repro.core.shuffle import TransportSet
+from repro.core.shuffle import TransportSet, pack_batch, unpack_batch
 
 #: transient object-store prefixes swept by the job-end GC (the S3
-#: exchange's _exchange/ prefix is swept by its transport's gc())
-GC_PREFIXES = ("_spill/", "_payload/", "_result/")
+#: exchange's _exchange/ prefix is swept by its transport's gc();
+#: _broadcast/ holds adaptive broadcast-join build sides — job-scoped,
+#: never outliving the query)
+GC_PREFIXES = ("_spill/", "_payload/", "_result/", "_broadcast/")
 
 #: attempt number used for lineage-recovery replays: far past any real
 #: retry count, so targeted first-attempt faults (straggle_s,
@@ -221,12 +225,29 @@ class FlintScheduler:
         self._cache_index = cache_index
         self.gc_report: dict[str, int] = {}
         self._gc_done = False
+        # ---- adaptive execution state (docs/adaptive_execution.md) ----
+        # measured shuffle output: shuffle_id -> {partition: [bytes,
+        # records]}, folded from executor shuffle_out deltas on successful
+        # responses. Advisory — a link that failed after a partial flush
+        # counts its retry's re-emission too — so it only steers replan
+        # CHOICES, never correctness-bearing quorums
+        self.shuffle_stats: dict[int, dict[int, list]] = {}
+        self.adaptive_stats = {"broadcast_joins": 0, "coalesced_stages": 0,
+                               "transport_rechoices": 0,
+                               "broadcast_rebuilds": 0}
+        # broadcast prefix -> rebuild recipe (small-side stage index +
+        # consumer group), for lineage recovery of a lost _broadcast/ key
+        self._broadcasts: dict[str, dict] = {}
+        self._absorbed: dict[int, int] = {}  # large-producer si -> join si
 
     # ------------------------------------------------------------------
     def run(self, stages: list[StagePlan]):
         self._stages = stages
         self._stage_done = [False] * len(stages)
         self._stage_retries = {}
+        self.shuffle_stats = {}
+        self._broadcasts = {}
+        self._absorbed = {}
         self._producer_stage_of = {
             s.write.shuffle_id: si for si, s in enumerate(stages)
             if s.write is not None}
@@ -317,15 +338,352 @@ class FlintScheduler:
         until the drain timeout. Sibling consumer groups keep draining."""
         if isinstance(task.input, ShuffleRead):
             groups = task.input.groups or [0] * len(task.input.parts)
+            parts = task.input.partitions or [task.input.partition]
             for (sid, _), g in zip(task.input.parts, groups):
-                self._transport_of(sid).release_partition(
-                    sid, task.input.partition, consumer_group=g)
+                for p in parts:
+                    self._transport_of(sid).release_partition(
+                        sid, p, consumer_group=g)
+
+    # ----------------------------------------- adaptive replanning (AQE)
+    def _adaptive_on(self) -> bool:
+        """Runtime replanning runs SOLO only: in service mode the plan
+        shape was published to the cross-job CSE registry, and rewriting
+        a shuffle another tenant may join would break that contract."""
+        return self.cfg.adaptive and self._binding is None
+
+    def _note_shuffle_stats(self, stage: StagePlan, resp: dict):
+        """Fold one successful response's per-partition shuffle-output
+        deltas (wire bytes, records) into the running measurement for the
+        stage's shuffle — the feedback signal every replan decision reads."""
+        out = (resp.get("stats") or {}).get("shuffle_out")
+        if not out or stage.write is None:
+            return
+        agg = self.shuffle_stats.setdefault(stage.write.shuffle_id, {})
+        for p, (nbytes, nrecs) in out.items():
+            st = agg.setdefault(int(p), [0, 0])
+            st[0] += nbytes
+            st[1] += nrecs
+
+    def _measured_sid_bytes(self, sid: int) -> float | None:
+        stats = self.shuffle_stats.get(sid)
+        if stats is None:
+            return None
+        return float(sum(b for b, _ in stats.values()))
+
+    def _find_join_gates(self, stages) -> list[tuple[int, int, int]]:
+        """Two-sided shuffle joins eligible for runtime broadcast
+        conversion: returns ``(small_si, large_si, join_si)`` triples,
+        where ``small`` is the producer stage whose measured output will
+        decide the conversion once it completes. Eligible means: both
+        sides produced by this job, each consumed ONLY by the join stage
+        (a CSE-shared side must stay a shuffle), the join semantics leave
+        the broadcast side non-preserved (inner: either side; left: only
+        the right side may broadcast; right: only the left; outer:
+        nothing), and the join's ops carry no per-task cache
+        materialization (its spec is keyed to the planned task count)."""
+        gates: list[tuple[int, int, int]] = []
+        used: set[int] = set()
+        for jsi, stage in enumerate(stages):
+            if not stage.tasks:
+                continue
+            inp = stage.tasks[0].input
+            if not (isinstance(inp, ShuffleRead) and len(inp.parts) == 2
+                    and not inp.self_join
+                    and all(m == "join" for _, m in inp.parts)):
+                continue
+            if any(kind == "cache" for kind, _ in stage.tasks[0].ops):
+                continue
+            sid_l, sid_r = inp.parts[0][0], inp.parts[1][0]
+            psl = self._producer_stage_of.get(sid_l)
+            psr = self._producer_stage_of.get(sid_r)
+            if psl is None or psr is None or psl == psr:
+                continue
+            if (self._sid_consumers.get(sid_l) != {jsi}
+                    or self._sid_consumers.get(sid_r) != {jsi}):
+                continue
+            wl, wr = stages[psl].write, stages[psr].write
+            if wl.consumer_groups != 1 or wr.consumer_groups != 1:
+                continue
+            if self._share is not None and (self._share.manages(sid_l)
+                                            or self._share.manages(sid_r)):
+                continue
+            how = inp.join_how
+            if how == "outer":
+                continue  # both sides preserved: no broadcastable side
+            if how == "left":
+                small, large = psr, psl  # only the right side may ship
+            elif how == "right":
+                small, large = psl, psr
+            elif wl.est_bytes <= wr.est_bytes:
+                small, large = psl, psr
+            else:
+                small, large = psr, psl
+            if not stages[small].tasks or not stages[large].tasks:
+                continue
+            if {small, large, jsi} & used:
+                continue  # overlapping gates: keep the first, skip the rest
+            used |= {small, large, jsi}
+            gates.append((small, large, jsi))
+        return gates
+
+    def _publish_broadcast(self, prefix: str, small_si: int,
+                           group: int = 0):
+        """Drain the completed small join side ON THE DRIVER (billed
+        receives/GETs through its transport, exactly what a consumer
+        stage would have paid) and re-publish it as content-addressed
+        ``_broadcast/`` objects plus a batch-count manifest. The records
+        are sorted before packing so the published bytes are a pure
+        function of the record multiset — a rebuild after loss publishes
+        identical objects and mid-flight readers stay consistent."""
+        stage = self._stages[small_si]
+        sid = stage.write.shuffle_id
+        nparts, tname = self._sid_meta[sid]
+        tr = self.transports.get(tname)
+        quorum = len(stage.tasks)
+        records: list = []
+        handles = []
+        claim: list = []
+        for p in range(nparts):
+            handle = tr.open_drain(sid, p, quorum, group=claim,
+                                   consumer_group=group)
+            for _src, _seq, body in handle:
+                records.extend(unpack_batch(body, self.lam.rstore))
+            handles.append(handle)
+        for handle in handles:
+            handle.ack()
+        records.sort(key=_stable_order)
+        bodies = pack_batch(records, limit=S3_EXCHANGE_BATCH_LIMIT)
+        for seq, body in enumerate(bodies):
+            self.lam.rstore.put(f"{prefix}{seq:06d}", body)
+        self.lam.rstore.put_obj(f"{prefix}manifest", len(bodies))
+        tr.destroy(sid, nparts)
+
+    def _try_broadcast_convert(self, small_si: int, large_si: int,
+                               join_si: int) -> bool:
+        """The tentpole rewrite: once the small side's MEASURED output is
+        known (its producer stage completed), decide shuffle-vs-broadcast
+        from actual volume. On broadcast: the driver re-publishes the
+        small side under ``_broadcast/``, the large producer stage keeps
+        its own input and ops but gains a ``bcjoin`` probe op plus the
+        join stage's pipeline, write, and action — and the join stage is
+        absorbed (its large-side shuffle never opens, shipping zero
+        bytes). Downstream EOS quorums follow the large stage's task
+        count via the live ``producer_counts`` reads. Returns True when
+        converted; False leaves the planned shuffle join untouched."""
+        stages = self._stages
+        small, large, join = stages[small_si], stages[large_si], \
+            stages[join_si]
+        sid_s = small.write.shuffle_id
+        measured = self._measured_sid_bytes(sid_s)
+        if measured is None:
+            return False
+        jt = join.tasks[0]
+        choice = pick_join_strategy(
+            measured, max(large.write.est_bytes, measured),
+            len(large.tasks), large.write.nparts, len(large.tasks),
+            self.cfg.broadcast_threshold_bytes)
+        if choice != "broadcast":
+            return False
+        k = jt.input.parts.index((sid_s, "join"))
+        group = jt.input.groups[k] if jt.input.groups else 0
+        prefix = f"_broadcast/{self._scope}sid{sid_s}/"
+        self._publish_broadcast(prefix, small_si, group)
+        self._broadcasts[prefix] = {"stage": small_si, "group": group}
+        spec = {"prefix": prefix, "side": small.write.key_side or "left",
+                "how": jt.input.join_how}
+        extra_ops = [("bcjoin", spec)] + list(jt.ops)
+        for t in large.tasks:
+            t.ops = list(t.ops) + extra_ops
+            t.write = join.write
+        large.write = join.write
+        large.action = join.action
+        large.save_prefix = join.save_prefix
+        large.limit = join.limit
+        if join.write is not None:
+            sid_j = join.write.shuffle_id
+            self._producer_stage_of[sid_j] = large_si
+            for ci in self._sid_consumers.get(sid_j, ()):
+                stages[ci].producer_counts[sid_j] = len(large.tasks)
+        join.tasks = []
+        join.write = None
+        join.action = None
+        join.save_prefix = None
+        self._absorbed[large_si] = join_si
+        self.adaptive_stats["broadcast_joins"] += 1
+        if self.verbose:
+            print(f"[flint] adaptive: join stage {join.id} -> broadcast "
+                  f"({measured:.0f}B build side from shuffle {sid_s})")
+        return True
+
+    def _broadcast_intact(self, prefix: str) -> bool:
+        """The same manifest check ``broadcast_read`` performs: does the
+        store hold exactly the advertised batch count under prefix?"""
+        expected, data = None, 0
+        for key in self.lam.rstore.list(prefix):
+            if key.endswith("manifest"):
+                expected = self.lam.rstore.get_obj(key)
+            else:
+                data += 1
+        return expected is not None and expected == data
+
+    def _rebuild_broadcast(self, prefix: str) -> bool:
+        """Lineage recovery for a lost ``_broadcast/`` object: reopen the
+        small side's channels, replay its producer stage (byte-identical
+        re-emission), re-drain on the driver and re-publish — the sorted
+        content-addressed pack writes the same bytes, so probe tasks that
+        already read the old copy agree with ones reading the new.
+        Charged against the per-stage resubmission budget."""
+        info = self._broadcasts.get(prefix)
+        if info is None:
+            return False
+        if self._broadcast_intact(prefix):
+            # a peer task's failure already triggered the rebuild (many
+            # probe tasks trip over the same lost object concurrently) —
+            # the store is whole again, just rerun without charging
+            return True
+        key = ("broadcast", prefix)
+        n = self._stage_retries.get(key, 0) + 1
+        if n > self.cfg.max_stage_retries:
+            return False
+        self._stage_retries[key] = n
+        small_si, group = info["stage"], info["group"]
+        write = self._stages[small_si].write
+        sid = write.shuffle_id
+        self._transport_of(sid).reopen(sid, write.nparts,
+                                       groups=write.consumer_groups)
+        self._replay_stage(small_si)
+        self._publish_broadcast(prefix, small_si, group)
+        self.adaptive_stats["broadcast_rebuilds"] += 1
+        self.recovery_stats["stage_resubmits"] += 1
+        return True
+
+    def _coalesce_stage(self, stage: StagePlan):
+        """Barrier-mode partition coalescing: with every input shuffle
+        fully produced and measured, fold runs of CONTIGUOUS tiny
+        partitions (under ``cfg.coalesce_min_bytes`` together) into single
+        consumer tasks — each drains its whole partition list in order, so
+        index-ordered merges (collect, range-sorted output) are
+        unchanged. Downstream EOS quorums follow the new task count via
+        the live ``producer_counts`` reads."""
+        floor = float(self.cfg.coalesce_min_bytes)
+        if not floor or len(stage.tasks) <= 1:
+            return
+        if any(not isinstance(t.input, ShuffleRead) or t.input.partitions
+               or t.input.partition != i
+               for i, t in enumerate(stage.tasks)):
+            return
+        sids = [sid for sid, _ in stage.tasks[0].input.parts]
+        per_part: list[float] = []
+        for p in range(len(stage.tasks)):
+            tot = 0.0
+            for sid in sids:
+                st = self.shuffle_stats.get(sid)
+                if st is None:
+                    return  # unmeasured input (e.g. foreign): keep plan
+                tot += st.get(p, (0, 0))[0]
+            per_part.append(tot)
+        groups: list[list[int]] = []
+        cur: list[int] = []
+        cur_bytes = 0.0
+        for p, b in enumerate(per_part):
+            cur.append(p)
+            cur_bytes += b
+            if cur_bytes >= floor:
+                groups.append(cur)
+                cur, cur_bytes = [], 0.0
+        if cur:
+            if groups:
+                groups[-1].extend(cur)
+            else:
+                groups.append(cur)
+        if len(groups) >= len(stage.tasks):
+            return
+        new_tasks = []
+        for i, grp in enumerate(groups):
+            t = stage.tasks[grp[0]]
+            t.index = i
+            t.input.partition = grp[0]
+            t.input.partitions = list(grp) if len(grp) > 1 else None
+            new_tasks.append(t)
+        stage.tasks = new_tasks
+        if stage.write is not None:
+            sid_w = stage.write.shuffle_id
+            for ci in self._sid_consumers.get(sid_w, ()):
+                self._stages[ci].producer_counts[sid_w] = len(new_tasks)
+        self.adaptive_stats["coalesced_stages"] += 1
+        if self.verbose:
+            print(f"[flint] adaptive: stage {stage.id} coalesced to "
+                  f"{len(new_tasks)} task(s)")
+
+    def _rechoose_transport(self, stage: StagePlan):
+        """Re-run the SQS-vs-S3 cost choice for a not-yet-opened shuffle
+        from MEASURED input volume, scaled by the planner's own
+        output/input ratio. Only cost-model ("auto") choices move —
+        explicit per-shuffle hints and engine defaults stay pinned — and
+        a move to SQS is refused when the run-wide visibility guard
+        would reject it."""
+        write = stage.write
+        if write is None or not write.auto_transport:
+            return
+        sids = _consumed_shuffles(stage)
+        if not sids:
+            return
+        measured = 0.0
+        for sid in sids:
+            m = self._measured_sid_bytes(sid)
+            if m is None:
+                return
+            measured += m
+        est_in = sum(
+            self._stages[self._producer_stage_of[sid]].write.est_bytes
+            for sid in sids if sid in self._producer_stage_of)
+        new_est = (write.est_bytes * measured / est_in) if est_in > 0 \
+            else measured
+        choice = pick_shuffle_transport(new_est, len(stage.tasks),
+                                        write.nparts)
+        cur = write.transport or self.cfg.fallback_backend
+        if choice == cur:
+            return
+        if (choice == "sqs" and self.cfg.visibility_timeout_s
+                >= self.cfg.drain_timeout_s):
+            return
+        write.transport = choice
+        sid_w = write.shuffle_id
+        self._sid_meta[sid_w] = (write.nparts, choice)
+        for ci in self._sid_consumers.get(sid_w, ()):
+            for t in self._stages[ci].tasks:
+                tmap = (t.input.transports
+                        if isinstance(t.input, ShuffleRead) else None)
+                if tmap and sid_w in tmap:
+                    tmap[sid_w] = choice
+        self.adaptive_stats["transport_rechoices"] += 1
+        if self.verbose:
+            print(f"[flint] adaptive: shuffle {sid_w} transport "
+                  f"{cur} -> {choice} ({new_est:.0f}B measured est)")
 
     # ----------------------------------------------------- barrier mode
     def _run_barrier(self, stages: list[StagePlan]):
         result = None
+        adaptive = self._adaptive_on()
+        # large-side producer stage -> its join gate (broadcast candidate)
+        gate_by_large = {large: (small, large, jsi) for small, large, jsi
+                         in (self._find_join_gates(stages)
+                             if adaptive else ())}
         try:
             for si, stage in enumerate(stages):
+                if si in self._absorbed.values():
+                    # join stage absorbed into its large-side producer by
+                    # an earlier broadcast conversion: nothing left to run
+                    self._stage_done[si] = True
+                    continue
+                if adaptive:
+                    # the stage boundary: every input of stage ``si`` is
+                    # complete and measured — re-optimize what remains
+                    gate = gate_by_large.get(si)
+                    if gate is not None:
+                        self._try_broadcast_convert(*gate)
+                    self._coalesce_stage(stage)
+                    self._rechoose_transport(stage)
                 if stage.write is not None:
                     self._open_shuffle(stage.write)
                 result = self._run_stage(stage)
@@ -404,6 +762,17 @@ class FlintScheduler:
             # cached lineage and re-materialize (detail carries the token)
             raise self._task_failure(stage, idx, attempts_map[idx] + 1,
                                      resp, retryable=True)
+        if err == "LostBroadcastInput":
+            # an adaptive broadcast build side vanished: replay the small
+            # side's lineage and re-publish identical bytes, then rerun
+            # the probe task without charging it — the loss was the
+            # input's fault, bounded by the stage-resubmission budget
+            self.recovery_stats["lost_inputs"] += 1
+            prefix = (resp.get("detail") or {}).get("broadcast_prefix", "")
+            if self._rebuild_broadcast(prefix):
+                return
+            raise self._task_failure(stage, idx, attempts_map[idx] + 1,
+                                     resp)
         if self._is_lost_input(task, err):
             self.recovery_stats["lost_inputs"] += 1
             if self._recover_lost_input(task, resp.get("detail")):
@@ -782,6 +1151,7 @@ class FlintScheduler:
                     launch(stage.tasks[idx], extra=cursors.get(idx))
                     continue
                 self._dispatch_sleep = 0.0  # concurrency is healthy again
+                self._note_shuffle_stats(stage, resp)
                 if "continuation" in resp:
                     # executor chaining: merge partial output, re-invoke warm
                     chained += 1
@@ -813,8 +1183,35 @@ class FlintScheduler:
     # --------------------------------------------------- pipelined mode
     def _run_pipelined(self, stages: list[StagePlan]):
         cfg = self.cfg
-        for stage in stages:
-            if stage.write is not None:
+        # Adaptive join gating: for each eligible two-sided join, HOLD the
+        # larger-estimated side's producer stage and the join stage (and
+        # the join output's direct consumers, whose EOS quorum payloads
+        # must see the post-decision producer count) until the small side
+        # completes and its measured size decides shuffle vs broadcast.
+        # The large side's shuffle channels are not opened until then —
+        # on conversion they are never opened at all. Everything else
+        # pipelines exactly as before; with adaptive off the gate set is
+        # empty and this is the old code path.
+        gates = (self._find_join_gates(stages)
+                 if self._adaptive_on() else [])
+        gate_by_small: dict[int, list] = {}
+        # stage index -> number of unresolved gates holding it back (a
+        # stage consuming TWO gated joins' outputs waits for both)
+        gate_holds: dict[int, int] = {}
+        deferred_opens: set[int] = set()
+        for small, large, jsi in gates:
+            held = {large, jsi}
+            deferred_opens.add(large)
+            jw = stages[jsi].write
+            if jw is not None:
+                held |= self._sid_consumers.get(jw.shuffle_id, set())
+            gate_by_small.setdefault(small, []).append(
+                (small, large, jsi, held))
+            for h in held:
+                gate_holds[h] = gate_holds.get(h, 0) + 1
+        gated = set(gate_holds)
+        for si, stage in enumerate(stages):
+            if stage.write is not None and si not in deferred_opens:
                 self._open_shuffle(stage.write)
 
         deps = [sorted(self._producer_stage_of[sid]
@@ -851,6 +1248,8 @@ class FlintScheduler:
                            (si, next(ticket), task, extra, speculative))
 
         for si, stage in enumerate(stages):
+            if si in gated:
+                continue  # released (and pushed) at gate resolution
             for task in stage.tasks:
                 push(si, task)
 
@@ -914,6 +1313,27 @@ class FlintScheduler:
                     return True
             return False
 
+        def release_gate(small_si, large_si, jsi, held):
+            """The small join side completed: decide broadcast-vs-shuffle
+            from its measured bytes, open the large side's channels if the
+            shuffle survives, and un-hold every stage this gate held
+            (stages held by several gates wait for all of them)."""
+            converted = self._try_broadcast_convert(small_si, large_si,
+                                                    jsi)
+            if not converted:
+                large = stages[large_si]
+                if deps_done(large_si):
+                    # every input measured: revisit the cost-model
+                    # transport choice before the channels open
+                    self._rechoose_transport(large)
+                self._open_shuffle(large.write)
+            for gsi in sorted(held):
+                gate_holds[gsi] -= 1
+                if gate_holds[gsi] == 0:
+                    gated.discard(gsi)
+                    for task in stages[gsi].tasks:
+                        push(gsi, task)
+
         def finish_stage(si, stage):
             stage_done[si] = True
             stats_rows[si] = {
@@ -930,6 +1350,18 @@ class FlintScheduler:
             self._consumer_stage_done(si, stage)
             if stage.action is not None or stage.write is None:
                 final_result[0] = self._stage_result(stage, partials[si])
+            for gate in gate_by_small.pop(si, ()):
+                release_gate(*gate)
+            jsi = self._absorbed.get(si)
+            if jsi is not None:
+                # the absorbed join stage finished WITH its large-side
+                # producer — its work ran fused into that stage's tasks
+                stage_done[jsi] = True
+                stats_rows[jsi] = {
+                    "stage": stages[jsi].id, "tasks": 0, "wall_s": 0.0,
+                    "attempts": 0, "chained": 0, "speculated": 0,
+                    "spec_dropped": 0, "absorbed": True,
+                }
 
         launch_ready()
         try:
@@ -1018,6 +1450,7 @@ class FlintScheduler:
                              extra=cursors[si].get(idx))
                         continue
                     self._dispatch_sleep = 0.0  # concurrency healthy again
+                    self._note_shuffle_stats(stages[si], resp)
                     if "continuation" in resp:
                         # chaining: the producer has NOT emitted EOS yet —
                         # the re-invoked link (or its last successor) will.

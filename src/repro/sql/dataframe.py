@@ -12,9 +12,13 @@
 
 Rows are plain tuples in schema order. ``collect``/``count``/``explain``
 take ``optimize=False`` to run the naive lowering — the benchmark's A/B
-baseline. ``orderBy``/``limit`` are FINAL operators: after either, only
-more orderBy/limit/actions may follow (the engine is unordered; the
-lowering splits these between per-partition ops and a driver finish).
+baseline. ``limit`` is a FINAL operator: after it, only more
+orderBy/limit/actions may follow (the lowering splits the root chain
+between per-partition ops and a driver finish). ``orderBy`` keeps the
+frame open: under ``FlintConfig.adaptive`` it executes as a distributed
+range-partitioned sort wherever it sits in the plan
+(docs/adaptive_execution.md); without adaptive, a root orderBy falls
+back to the driver-side sort of the collected rows.
 """
 
 from __future__ import annotations
@@ -70,7 +74,7 @@ class DataFrame:
     def __init__(self, ctx, plan: P.Plan, *, final: bool = False):
         self.ctx = ctx
         self.plan = plan
-        self._final = final  # an orderBy/limit is in place
+        self._final = final  # a limit is in place
 
     # ------------------------------------------------------ constructors
     @classmethod
@@ -94,8 +98,8 @@ class DataFrame:
     # ------------------------------------------------- transformations
     def _require_open(self, what: str):
         if self._final:
-            raise ValueError(f"{what} after orderBy/limit is not "
-                             f"supported — they are final operators")
+            raise ValueError(f"{what} after limit is not supported — "
+                             f"limit is a final operator")
 
     def _derive(self, plan: P.Plan, final: bool = False) -> "DataFrame":
         plan.schema()  # eager validation at call site
@@ -135,8 +139,6 @@ class DataFrame:
              ) -> "DataFrame":
         self._require_open("join")
         other._require_open("join")
-        if how != "inner":
-            raise ValueError(f"only inner joins are supported, not {how!r}")
         on = [on] if isinstance(on, str) else list(on)
         return self._derive(P.Join(self.plan, other.plan, on,
                                    nparts=numPartitions, how=how,
@@ -162,7 +164,12 @@ class DataFrame:
 
         named = tuple((sort_key(k), bool(asc))
                       for k, asc in zip(keys, ascending))
-        return self._derive(P.Sort(self.plan, named), final=True)
+        # orderBy is no longer a FINAL operator: a root Sort lowers as a
+        # distributed range-partitioned sort under FlintConfig.adaptive
+        # (driver-side sort of the collected rows otherwise), and a Sort
+        # below the root lowers the same distributed way — so the frame
+        # stays open for further transforms
+        return self._derive(P.Sort(self.plan, named))
 
     def limit(self, n: int) -> "DataFrame":
         if n < 0:

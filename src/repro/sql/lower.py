@@ -18,11 +18,18 @@ Node -> lineage (row path, FlintConfig.vectorize=False):
                full: map(row -> (keys, row)).groupByKey().map(aggregate)
     Join       map both sides to (key-tuple, rest-tuple), rdd.join,
                map to key + left-rest + right-rest
-    Sort/Limit root-only FINAL operators: Limit directly above the engine
-               plan becomes a per-partition "limit" op plus the action-
-               merge short-circuit (RDD.take's machinery); Limit(Sort(X))
-               adds a per-partition top-n; the driver applies the total
-               order / final truncation to the collected rows.
+    Sort       root, >1 partition, FlintConfig.adaptive: DISTRIBUTED
+               range-partitioned sort — a sampling job picks quantile
+               splitters, repartition(partition_fn=...) range-routes each
+               row, partitions sort locally, and the index-ordered merge
+               is the total order (docs/adaptive_execution.md). The same
+               lowering serves Sort below the root (orderBy mid-query);
+               without adaptive a root Sort falls back to the driver-side
+               sort of the collected rows.
+    Limit      root-only FINAL operator: a per-partition "limit" op plus
+               the action-merge short-circuit (RDD.take's machinery);
+               Limit(Sort(X)) becomes a per-partition top-n with the
+               driver applying the total order / final truncation.
 
 With ``FlintConfig.vectorize`` (the default) every maximal
 scan/Project/Filter chain — plus the map side of a partial aggregate,
@@ -37,6 +44,7 @@ steps lower as row operators exactly as above.
 
 from __future__ import annotations
 
+import bisect
 import operator
 
 from repro.core import rdd as R
@@ -69,6 +77,94 @@ def _topn_fn(n: int, bound_keys: list):
     return topn
 
 
+# ------------------------------------------- distributed (range) sort
+
+
+class _Rev:
+    """Order-reversing wrapper: lets a DESCENDING sort key ride inside
+    an ascending composite tuple (bisect and tuple comparison only need
+    ``<``/``==``). None sorts like any other value its ``<`` admits."""
+
+    __slots__ = ("v",)
+
+    def __init__(self, v):
+        self.v = v
+
+    def __lt__(self, other):
+        return other.v < self.v
+
+    def __eq__(self, other):
+        return other.v == self.v
+
+
+def _composite_key_fn(bound_keys: list):
+    def key(row):
+        return tuple(f(row) if asc else _Rev(f(row))
+                     for f, asc in bound_keys)
+    return key
+
+
+_SAMPLES_PER_PARTITION = 64
+
+
+def _sampler_fn(bound_keys: list):
+    """Per-partition sampler for the range partitioner: sort the
+    partition by the composite key and emit ~64 evenly spaced key
+    tuples. Deterministic (no RNG) so retried/speculated attempts of
+    the sampling job return identical rows."""
+    key = _composite_key_fn(bound_keys)
+
+    def sample(it):
+        keys = sorted(key(row) for row in it)
+        if not keys:
+            return iter(())
+        step = max(1, len(keys) // _SAMPLES_PER_PARTITION)
+        return iter(keys[::step])
+    return sample
+
+
+def _range_partition_fn(splitters: list, bound_keys: list):
+    key = _composite_key_fn(bound_keys)
+
+    def pf(row):
+        return bisect.bisect_right(splitters, key(row))
+    return pf
+
+
+def _sorted_parts_fn(bound_keys: list):
+    def sort_part(it):
+        rows = list(it)
+        sort_rows(rows, bound_keys)
+        return iter(rows)
+    return sort_part
+
+
+def _range_sorted(rdd: R.RDD, bound_keys: list, ctx) -> R.RDD:
+    """Distributed range-partitioned sort: a sampling job estimates the
+    key distribution, the driver picks quantile splitters, and a
+    repartition with a range partition_fn sends each row to the
+    partition owning its key range. Partition i then holds only keys <=
+    partition i+1's (equal keys never straddle a boundary —
+    bisect_right sends them all right), so after a per-partition sort
+    the index-ordered concatenation of results IS the total order and
+    no driver-side sort remains. Skewed or duplicate-heavy keys just
+    yield duplicate splitters (several ranges collapse onto one
+    partition); empty partitions contribute no samples and no rows."""
+    nparts = rdd.nparts
+    samples = ctx.run_action(rdd.mapPartitions(_sampler_fn(bound_keys)),
+                             "collect")
+    samples.sort()
+    splitters = []
+    if samples:
+        stride = len(samples) / nparts
+        splitters = [samples[min(len(samples) - 1,
+                                 int(stride * (i + 1)))]
+                     for i in range(nparts - 1)]
+    pf = _range_partition_fn(splitters, bound_keys)
+    return (rdd.repartition(nparts, partition_fn=pf)
+            .mapPartitions(_sorted_parts_fn(bound_keys)))
+
+
 def _tuple_schema(schema: Schema, names) -> str | None:
     return schema.serde_tuple(names)
 
@@ -87,6 +183,14 @@ def lower(plan: P.Plan, ctx):
         node = node.child
     rdd = _lower_engine(node, ctx)
     inner_schema = node.schema()
+    if (len(steps) == 1 and isinstance(steps[0], P.Sort)
+            and rdd.nparts > 1
+            and getattr(getattr(ctx, "config", None), "adaptive", False)):
+        # root orderBy over >1 partition: distributed range-partitioned
+        # sort — the index-ordered merge of partition results IS the
+        # total order, so the driver applies no ops at all
+        bound = [(e.bind(inner_schema), asc) for e, asc in steps[0].keys]
+        return _range_sorted(rdd, bound, ctx), None, []
     merge_limit = None
     if steps and isinstance(steps[-1], P.Limit):
         # the INNERMOST step caps the engine result: per-partition limit
@@ -149,9 +253,24 @@ def _lower_engine(node: P.Plan, ctx) -> R.RDD:
             # it so the mark lives on lineage this lowering owns
             inner = inner.mapPartitions(_identity_partition)
         return inner.cache()
-    if isinstance(node, (P.Sort, P.Limit)):
-        raise ValueError("Sort/Limit are final operators; they can only "
-                         "appear at the plan root (orderBy/limit last)")
+    if isinstance(node, P.Sort):
+        # orderBy is no longer driver-final: below the root it lowers as
+        # a range-partitioned distributed sort (adaptive) or a plain
+        # per-partition sort when there is nothing to distribute
+        child = _lower_engine(node.child, ctx)
+        bound = [(e.bind(node.child.schema()), asc)
+                 for e, asc in node.keys]
+        if child.nparts <= 1:
+            return child.mapPartitions(_sorted_parts_fn(bound))
+        if getattr(getattr(ctx, "config", None), "adaptive", False):
+            return _range_sorted(child, bound, ctx)
+        raise ValueError(
+            "Sort below the plan root requires FlintConfig.adaptive "
+            "(distributed range-partitioned sort) or a single-partition "
+            "input; move orderBy last or enable adaptive execution")
+    if isinstance(node, P.Limit):
+        raise ValueError("Limit is a final operator; it can only "
+                         "appear at the plan root (limit last)")
     raise TypeError(f"unknown plan node {type(node).__name__}")
 
 
@@ -309,8 +428,20 @@ def _lower_join(node: P.Join, ctx) -> R.RDD:
                              kschema, _tuple_schema(rs, rrest))
     schemas = (kschema, _tuple_schema(ls, lrest), _tuple_schema(rs, rrest))
     joined = left.join(right, node.nparts, transport=node.transport,
-                       batch_schemas=schemas)
-    return joined.map(lambda kv: kv[0] + kv[1][0] + kv[1][1])
+                       batch_schemas=schemas, how=node.how)
+    return joined.map(_join_row_fn(len(lrest), len(rrest)))
+
+
+def _join_row_fn(lwidth: int, rwidth: int):
+    """(key, (lrest|None, rrest|None)) -> output row; an absent side
+    (the unmatched half of an outer join) pads with None columns."""
+    lpad, rpad = (None,) * lwidth, (None,) * rwidth
+
+    def to_row(kv):
+        lv, rv = kv[1]
+        return (kv[0] + (lpad if lv is None else lv)
+                + (rpad if rv is None else rv))
+    return to_row
 
 
 def _lower_join_side(side: P.Plan, ctx, schema: Schema, on, rest,

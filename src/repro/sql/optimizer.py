@@ -135,6 +135,11 @@ def _rewrite_filter(node: Filter) -> Plan:
 
 
 def _push_filter_join(node: Filter, join: Join) -> Plan:
+    if join.how != "inner":
+        # an outer side resurrects filtered rows as None-padded output
+        # (and key predicates pushed to the preserved side change which
+        # rows pad vs match) — pushdown is only sound for inner joins
+        return node
     lnames = set(join.left.schema().names)
     rnames = set(join.right.schema().names)
     on = set(join.on)

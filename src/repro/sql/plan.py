@@ -204,12 +204,19 @@ class Aggregate(Plan):
 
 
 class Join(Plan):
-    """Inner equi-join on shared column names. Output: the key columns,
-    then the left side's remaining columns, then the right side's."""
+    """Equi-join on shared column names (how: inner/left/right/outer).
+    Output: the key columns, then the left side's remaining columns,
+    then the right side's; the unmatched half of an outer row carries
+    None in the absent side's columns."""
+
+    JOIN_HOWS = ("inner", "left", "right", "outer")
 
     def __init__(self, left: Plan, right: Plan, on: Iterable[str],
                  nparts: int | None = None, how: str = "inner",
                  transport: str | None = None):
+        if how not in self.JOIN_HOWS:
+            raise ValueError(f"unsupported join how={how!r}; expected "
+                             f"one of {'/'.join(self.JOIN_HOWS)}")
         self.left = left
         self.right = right
         self.on = tuple(on)

@@ -1,0 +1,396 @@
+"""Adaptive query execution (docs/adaptive_execution.md): runtime
+shuffle statistics collected from executor responses feed a replanner at
+stage boundaries — a shuffle join whose measured build side is small
+becomes a broadcast hash join, tiny reduce partitions coalesce (barrier
+mode), and cost-model ("auto") transport choices are re-decided from
+measured volume. Plus the DataFrame features the same machinery unlocks:
+distributed range-partitioned orderBy and left/right/outer joins.
+
+Every strategy change must be invisible in results: each scenario runs
+adaptive ON vs OFF and asserts identical answers with zero leaks."""
+
+import operator
+
+import pytest
+
+from repro.core import FaultPlan, FlintConfig, FlintContext
+from repro.core import dag as core_dag
+from repro.core.dag import estimate_lineage_bytes
+from repro.sql import Schema, col, lit
+from repro.sql.lower import lower
+
+ADD = operator.add
+
+TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/",
+                      "_broadcast/")
+
+
+def assert_no_leaks(ctx):
+    for prefix in TRANSIENT_PREFIXES:
+        assert not ctx.store.list(prefix), f"leaked {prefix} keys"
+    assert ctx.last_scheduler.sqs._queues == {}, "queues leaked"
+
+
+def _cfg(**kw):
+    # pin adaptive ON by default: this suite asserts adaptive BEHAVIOR,
+    # so the CI FLINT_ADAPTIVE=0 leg must not flip it from the env
+    kw.setdefault("adaptive", True)
+    kw.setdefault("concurrency", 8)
+    kw.setdefault("retry_base_s", 0.001)
+    kw.setdefault("retry_cap_s", 0.01)
+    kw.setdefault("visibility_timeout_s", 0.5)
+    kw.setdefault("drain_timeout_s", 1.5)
+    return FlintConfig(**kw)
+
+
+# ------------------------------------------------- broadcast conversion
+
+SMALL = [(k, k * 10) for k in range(50)]
+BIG = [(i % 50, "x" * 200 + str(i)) for i in range(20000)]
+
+
+def _join_rdd(ctx):
+    small = ctx.parallelize(SMALL, 2)
+    big = ctx.parallelize(BIG, 6)
+    return small.join(big, 6)
+
+
+@pytest.mark.parametrize("pipelined", [True, False],
+                         ids=["pipelined", "barrier"])
+def test_broadcast_join_converts_and_matches_static(pipelined):
+    """An MB-scale probe side against a tiny build side: the measured
+    build output beats the shuffle cost, the join converts at runtime,
+    and the answer is identical to the static plan with strictly fewer
+    shuffled bytes."""
+    results, shuffled = {}, {}
+    for adaptive in (True, False):
+        ctx = FlintContext(config=_cfg(pipeline_stages=pipelined,
+                                       adaptive=adaptive))
+        results[adaptive] = sorted(_join_rdd(ctx).collect())
+        shuffled[adaptive] = (ctx.ledger.bytes_to_sqs
+                              + ctx.ledger.bytes_to_s3)
+        sched = ctx.last_scheduler
+        if adaptive:
+            assert sched.adaptive_stats["broadcast_joins"] == 1
+        else:
+            assert sched.adaptive_stats["broadcast_joins"] == 0
+        assert_no_leaks(ctx)
+    assert results[True] == results[False]
+    assert len(results[True]) == len(BIG)
+    assert shuffled[True] < shuffled[False], \
+        "broadcast conversion did not reduce shuffled bytes"
+
+
+def test_broadcast_join_skipped_when_shuffle_cheaper():
+    """Tiny data on BOTH sides: the cost model keeps the shuffle (a
+    broadcast would pay more PUT/GET requests than the shuffle moves),
+    and the answer is still right."""
+    ctx = FlintContext(config=_cfg(pipeline_stages=True))
+    out = sorted(ctx.parallelize([(k, k) for k in range(20)], 2)
+                 .join(ctx.parallelize([(k, -k) for k in range(20)], 2), 2)
+                 .collect())
+    assert out == [(k, (k, -k)) for k in range(20)]
+    assert ctx.last_scheduler.adaptive_stats["broadcast_joins"] == 0
+    assert_no_leaks(ctx)
+
+
+@pytest.mark.parametrize("pipelined", [True, False],
+                         ids=["pipelined", "barrier"])
+def test_lost_broadcast_object_rebuilds_from_lineage(pipelined):
+    """Chaos: an acknowledged ``_broadcast/`` object silently vanishes.
+    The probe task's manifest check raises LostBroadcastInput and the
+    scheduler replays the small side's lineage, re-publishing identical
+    bytes — one charged rebuild, correct results, nothing leaked."""
+    plan = FaultPlan(lose_keys=("_broadcast/",))
+    ctx = FlintContext(config=_cfg(pipeline_stages=pipelined),
+                       fault_plan=plan)
+    n = _join_rdd(ctx).count()
+    sched = ctx.last_scheduler
+    assert n == len(BIG)
+    assert sched.adaptive_stats["broadcast_joins"] == 1
+    assert sched.adaptive_stats["broadcast_rebuilds"] == 1
+    assert sched.recovery_stats["stage_resubmits"] >= 1
+    assert sched.faults.stats["lost_objects"] == 1
+    assert_no_leaks(ctx)
+
+
+# ------------------------------------------------ partition coalescing
+
+
+def test_barrier_coalesces_tiny_reduce_partitions():
+    """Tiny data spread over 8 reduce partitions: with every input
+    measured at the barrier, contiguous under-floor partitions fold into
+    fewer tasks — same answer, fewer invocations."""
+    data = [(i % 5, i) for i in range(60)]
+    expect = {}
+    for k, v in data:
+        expect[k] = expect.get(k, 0) + v
+    for adaptive in (True, False):
+        ctx = FlintContext(config=_cfg(pipeline_stages=False,
+                                       adaptive=adaptive))
+        out = sorted(ctx.parallelize(data, 4)
+                     .reduceByKey(ADD, 8).collect())
+        assert out == sorted(expect.items())
+        sched = ctx.last_scheduler
+        reduce_tasks = sched.stage_stats[-1]["tasks"]
+        if adaptive:
+            assert sched.adaptive_stats["coalesced_stages"] == 1
+            assert reduce_tasks < 8
+        else:
+            assert sched.adaptive_stats["coalesced_stages"] == 0
+            assert reduce_tasks == 8
+        assert_no_leaks(ctx)
+
+
+# --------------------------------------------- transport re-choice
+
+
+def test_transport_rechosen_from_measured_volume():
+    """A selective filter the planner prices at 50% selectivity: the
+    first shuffle's cost-model choice (S3, from the inflated estimate)
+    is sunk, but the SECOND shuffle re-prices from measured volume and
+    moves to SQS. Static keeps both on S3."""
+    rows = [(i, "z" * 10000) for i in range(10000)]
+    for adaptive in (True, False):
+        ctx = FlintContext(config=_cfg(pipeline_stages=False,
+                                       shuffle_backend="auto",
+                                       adaptive=adaptive,
+                                       coalesce_min_bytes=0))
+        n = (ctx.parallelize(rows, 4)
+             .filter(lambda kv: kv[0] % 1999 == 0)
+             .repartition(4)
+             .map(lambda kv: kv)
+             .repartition(4)
+             .count())
+        assert n == 6
+        sched = ctx.last_scheduler
+        if adaptive:
+            assert sched.adaptive_stats["transport_rechoices"] >= 1
+            assert ctx.ledger.bytes_to_sqs > 0
+        else:
+            assert sched.adaptive_stats["transport_rechoices"] == 0
+            assert ctx.ledger.bytes_to_sqs == 0
+        assert_no_leaks(ctx)
+
+
+def test_explicit_transport_hint_stays_pinned():
+    """A per-shuffle hint is a user decision, not a cost-model estimate:
+    adaptive never moves it, however wrong the estimate was."""
+    rows = [(i, "z" * 10000) for i in range(10000)]
+    ctx = FlintContext(config=_cfg(pipeline_stages=False,
+                                   shuffle_backend="auto",
+                                   coalesce_min_bytes=0))
+    n = (ctx.parallelize(rows, 4)
+         .filter(lambda kv: kv[0] % 1999 == 0)
+         .repartition(4, transport="s3")
+         .map(lambda kv: kv)
+         .repartition(4, transport="s3")
+         .count())
+    assert n == 6
+    assert ctx.last_scheduler.adaptive_stats["transport_rechoices"] == 0
+    assert_no_leaks(ctx)
+
+
+# ------------------------------------------- distributed orderBy (sort)
+
+SORT_SCHEMA = Schema([("a", "int"), ("b", "int")])
+
+
+def _skewed_rows():
+    # 70% of keys collapse onto one value (splitter duplication), plus a
+    # spread tail and negative keys
+    rows = [(5, i) for i in range(140)]
+    rows += [(i * 13 % 40 - 10, 1000 + i) for i in range(60)]
+    return rows
+
+
+@pytest.mark.parametrize("ascending", [True, False], ids=["asc", "desc"])
+def test_orderby_runs_as_distributed_range_sort(ascending):
+    rows = _skewed_rows()
+    ctx = FlintContext(config=_cfg())
+    df = ctx.parallelize(rows, 6).toDF(SORT_SCHEMA)
+    q = df.orderBy("a", ascending=ascending)
+    # the lowering leaves NOTHING for the driver: no merge limit, no
+    # driver ops — the index-ordered merge is already the total order
+    rdd, merge_limit, driver_ops = lower(q._planned(True), ctx)
+    assert merge_limit is None and driver_ops == []
+    got = q.collect()
+    assert sorted(got) == sorted(rows)
+    keys = [r[0] for r in got]
+    assert keys == sorted(keys, reverse=not ascending)
+    sched = ctx.last_scheduler
+    assert sched.stage_stats[-1]["tasks"] > 1, \
+        "sort did not run distributed"
+    assert_no_leaks(ctx)
+
+
+def test_orderby_empty_and_single_row_partitions():
+    """Fewer rows than partitions: empty partitions contribute no
+    samples and no rows; the range sort still totals correctly."""
+    rows = [(9, 0), (-3, 1), (9, 2), (0, 3)]
+    ctx = FlintContext(config=_cfg())
+    got = (ctx.parallelize(rows, 8).toDF(SORT_SCHEMA)
+           .orderBy("a").collect())
+    assert [r[0] for r in got] == [-3, 0, 9, 9]
+    assert sorted(got) == sorted(rows)
+    assert_no_leaks(ctx)
+
+
+def test_orderby_multi_key_mixed_directions():
+    rows = [(i % 3, i * 7 % 11) for i in range(66)]
+    ctx = FlintContext(config=_cfg())
+    got = (ctx.parallelize(rows, 5).toDF(SORT_SCHEMA)
+           .orderBy("a", "b", ascending=[True, False]).collect())
+    assert got == sorted(rows, key=lambda r: (r[0], -r[1]))
+    assert_no_leaks(ctx)
+
+
+def test_orderby_matches_driver_sort_fallback():
+    """adaptive=False falls back to the driver-side sort of collected
+    rows; both paths produce the same key order."""
+    rows = _skewed_rows()
+    outs = {}
+    for adaptive in (True, False):
+        ctx = FlintContext(config=_cfg(adaptive=adaptive))
+        outs[adaptive] = (ctx.parallelize(rows, 6).toDF(SORT_SCHEMA)
+                          .orderBy("a").collect())
+        assert_no_leaks(ctx)
+    assert [r[0] for r in outs[True]] == [r[0] for r in outs[False]]
+    assert sorted(outs[True]) == sorted(outs[False])
+
+
+def test_orderby_composes_with_downstream_operators():
+    """orderBy is no longer FINAL: under adaptive a mid-tree Sort lowers
+    as the same distributed range sort, so transforms may follow."""
+    rows = _skewed_rows()
+    ctx = FlintContext(config=_cfg())
+    df = ctx.parallelize(rows, 6).toDF(SORT_SCHEMA)
+    got = (df.orderBy("a").where(col("a") >= lit(0))
+           .select("a").collect())
+    expect = sorted(r[0] for r in rows if r[0] >= 0)
+    assert [r[0] for r in got] == expect
+    # without adaptive there is no distributed sort to lower mid-tree
+    ctx_off = FlintContext(config=_cfg(adaptive=False))
+    df_off = ctx_off.parallelize(rows, 6).toDF(SORT_SCHEMA)
+    with pytest.raises(ValueError, match="adaptive"):
+        df_off.orderBy("a").where(col("a") >= lit(0)).collect()
+
+
+# ------------------------------------------------- outer join execution
+
+L_SCHEMA = Schema([("k", "int"), ("tag", "str")])
+R_SCHEMA = Schema([("k", "int"), ("val", "int")])
+L_ROWS = [(i % 7, f"l{i}") for i in range(40)]
+R_ROWS = [(k, k * 10) for k in range(5, 10)]
+
+
+def _ref_join(how):
+    lkeys = {r[0] for r in L_ROWS}
+    rkeys = {r[0] for r in R_ROWS}
+    out = [(k, tag, val) for k, tag in L_ROWS
+           for k2, val in R_ROWS if k == k2]
+    if how in ("left", "outer"):
+        out += [(k, tag, None) for k, tag in L_ROWS if k not in rkeys]
+    if how in ("right", "outer"):
+        out += [(k, None, val) for k, val in R_ROWS if k not in lkeys]
+    return out
+
+
+def _canon(rows):
+    return sorted(rows, key=lambda r: tuple((v is None, v) for v in r))
+
+
+@pytest.mark.parametrize("how", ["inner", "left", "right", "outer"])
+@pytest.mark.parametrize("adaptive", [True, False],
+                         ids=["adaptive", "static"])
+def test_dataframe_join_how(how, adaptive):
+    ctx = FlintContext(config=_cfg(adaptive=adaptive))
+    dl = ctx.parallelize(L_ROWS, 4).toDF(L_SCHEMA)
+    dr = ctx.parallelize(R_ROWS, 2).toDF(R_SCHEMA)
+    got = dl.join(dr, "k", how=how).collect()
+    assert _canon(got) == _canon(_ref_join(how))
+    assert_no_leaks(ctx)
+
+
+def test_unsupported_join_how_rejected_at_plan_time():
+    ctx = FlintContext(config=_cfg())
+    dl = ctx.parallelize(L_ROWS, 2).toDF(L_SCHEMA)
+    dr = ctx.parallelize(R_ROWS, 2).toDF(R_SCHEMA)
+    with pytest.raises(ValueError, match="inner/left/right/outer"):
+        dl.join(dr, "k", how="semi")
+    with pytest.raises(ValueError, match="unsupported join how"):
+        ctx.parallelize([(1, 2)], 2).join(
+            ctx.parallelize([(1, 3)], 2), 2, how="cross")
+
+
+def test_outer_join_filter_not_pushed_below_join():
+    """Filter pushdown would resurrect filtered rows as None-padded
+    output on the preserved side — the optimizer must keep the filter
+    above any non-inner join."""
+    ctx = FlintContext(config=_cfg())
+    dl = ctx.parallelize(L_ROWS, 4).toDF(L_SCHEMA)
+    dr = ctx.parallelize(R_ROWS, 2).toDF(R_SCHEMA)
+    # key-only predicate: for an INNER join it would push to both sides;
+    # under how=left pushing it to the right side changes which rows pad
+    q = dl.join(dr, "k", how="left").where(col("k") >= lit(3))
+    plan = q.explain()
+    assert plan.index("Filter") < plan.index("Join"), \
+        "filter was pushed below an outer join"
+    got = q.collect()
+    expect = [r for r in _ref_join("left") if r[0] >= 3]
+    assert _canon(got) == _canon(expect)
+
+
+def test_broadcast_converted_left_join_matches_static():
+    """how=left forces the preserved side to stay the probe: adaptive
+    may only broadcast the RIGHT side, and the padded output matches the
+    static shuffle join exactly."""
+    big = [(i % 80, "x" * 200 + str(i)) for i in range(20000)]
+    small = [(k, k) for k in range(50)]  # keys 50..79 go unmatched
+    results = {}
+    for adaptive in (True, False):
+        ctx = FlintContext(config=_cfg(adaptive=adaptive))
+        left = ctx.parallelize(big, 6)
+        right = ctx.parallelize(small, 2)
+        out = left.join(right, 6, how="left").collect()
+        results[adaptive] = sorted(
+            out, key=lambda kv: (kv[0], kv[1][0],
+                                 kv[1][1] is None, kv[1][1]))
+        if adaptive:
+            assert (ctx.last_scheduler
+                    .adaptive_stats["broadcast_joins"] == 1)
+        assert_no_leaks(ctx)
+    assert results[True] == results[False]
+    assert any(rv is None for _, (_, rv) in results[True])
+
+
+# ------------------------------------- estimator staleness regressions
+
+
+def test_est_memo_ignores_reused_node_ids():
+    """The estimate memo keys by id() but stores (node, value) pairs: an
+    entry whose node is not the SAME object (id reuse after GC) must be
+    recomputed, not served stale."""
+    ctx = FlintContext(config=_cfg())
+    a = ctx.parallelize([(1, "x" * 100)] * 50, 2)
+    b = ctx.parallelize([(2, "y")] * 5, 2)
+    planner = core_dag._Planner(1, True, None)
+    real = planner._est_bytes(b)
+    # poison: another node's entry lands under b's id (simulated reuse)
+    planner._est_memo[id(b)] = (a, 10 ** 9)
+    assert planner._est_bytes(b) == real
+
+
+def test_uncached_token_estimate_falls_through_to_lineage():
+    """A cache entry can linger in the index after its ``_cache/``
+    prefix was swept; the estimator must fall through to the lineage
+    walk instead of pricing the dataset at zero bytes."""
+    ctx = FlintContext(config=_cfg())
+    r = ctx.parallelize([(i % 3, "x" * 200) for i in range(300)], 2)
+    cached = r.map(lambda kv: kv).cache()
+    cached.collect()  # materialize
+    est_ready = estimate_lineage_bytes(cached, ctx._cache_index)
+    assert est_ready > 0
+    ctx.store.delete_prefix("_cache/")  # sweep behind the index's back
+    est_stale = estimate_lineage_bytes(cached, ctx._cache_index)
+    assert est_stale > 0, "swept cache prefix estimated as zero bytes"

@@ -19,7 +19,8 @@ CHAOS_SEED = int(os.environ.get("FLINT_CHAOS_SEED", "0"))
 
 #: transient prefixes that must be empty once a job (even a failed one)
 #: has shut down — _cache/ is excluded: registered caches outlive jobs
-TRANSIENT_PREFIXES = ("_exchange/", "_spill/", "_payload/", "_result/")
+TRANSIENT_PREFIXES = ("_exchange/", "_spill/", "_payload/", "_result/",
+                      "_broadcast/")
 
 DATA = [(i % 7, i) for i in range(300)]
 EXPECTED = {}

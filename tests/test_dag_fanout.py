@@ -35,7 +35,8 @@ from repro.core.dag import CacheInput, ShuffleRead
 
 ADD = operator.add
 
-TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/")
+TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/",
+                      "_broadcast/")
 
 
 def assert_no_leaks(ctx):
@@ -306,6 +307,46 @@ def _make_cell_test(pipelined, backend, columnar):
 
 for _cell in MATRIX:
     _cell_test = _make_cell_test(*_cell)
+    globals()[_cell_test.__name__] = _cell_test
+del _cell, _cell_test
+
+
+def run_adaptive_ab_case(seed, backend, columnar):
+    """The same generated DAG with adaptive replanning ON and OFF, in
+    both scheduler modes, must match the reference (and therefore each
+    other) and leak nothing — broadcast conversion, coalescing and
+    transport re-choice are pure execution-strategy changes."""
+    datasets, root = gen_case(seed)
+    expect = canon(ref_eval(root, datasets, {}))
+    for adaptive in (True, False):
+        for pipelined in (True, False):
+            ctx = FlintContext(
+                "flint",
+                FlintConfig(concurrency=6, shuffle_backend=backend,
+                            pipeline_stages=pipelined,
+                            columnar_batches=columnar,
+                            adaptive=adaptive))
+            rdd = build_rdd(root, ctx, datasets, {})
+            got = canon(rdd.collect())
+            assert got == expect, (f"seed {seed} adaptive={adaptive} "
+                                   f"pipelined={pipelined}: "
+                                   f"engine != reference")
+            assert_no_leaks(ctx)
+
+
+def _make_adaptive_ab_test(backend, columnar):
+    @given(seed=st.integers(min_value=0, max_value=10**9))
+    @settings(max_examples=25, deadline=None)
+    def test(seed):
+        run_adaptive_ab_case(seed, backend, columnar)
+    test.__name__ = (f"test_random_dag_adaptive_ab_{backend}_"
+                     f"{'columnar' if columnar else 'pickle'}")
+    test.__qualname__ = test.__name__
+    return test
+
+
+for _cell in [(b, c) for b in ("sqs", "s3") for c in (True, False)]:
+    _cell_test = _make_adaptive_ab_test(*_cell)
     globals()[_cell_test.__name__] = _cell_test
 del _cell, _cell_test
 

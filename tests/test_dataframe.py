@@ -26,7 +26,8 @@ from repro.sql import (Schema, avg_, col, collect_list, count_, lit, max_,
 
 ADD = operator.add
 
-TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/")
+TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/",
+                      "_broadcast/")
 
 
 def assert_no_leaks(ctx):
@@ -205,6 +206,42 @@ def _make_cell_test(backend, columnar):
 
 for _cell in [(b, c) for b in ("sqs", "s3") for c in (True, False)]:
     _cell_test = _make_cell_test(*_cell)
+    globals()[_cell_test.__name__] = _cell_test
+del _cell, _cell_test
+
+
+def run_adaptive_ab_query(seed, backend, columnar):
+    """The same generated query with adaptive execution ON and OFF must
+    match the reference evaluator (and each other) with zero leaks."""
+    rows, ops = gen_query(seed)
+    for adaptive in (True, False):
+        ctx = FlintContext("flint",
+                           FlintConfig(concurrency=6,
+                                       shuffle_backend=backend,
+                                       columnar_batches=columnar,
+                                       adaptive=adaptive))
+        df = ctx.parallelize(rows, 2).toDF(BASE_SCHEMA)
+        df, expect = _apply_ops(df, rows, list(BASE_SCHEMA.fields), ops,
+                                random.Random(seed ^ 0xBEEF))
+        got = df.collect()
+        assert canon(got) == canon(expect), \
+            f"seed {seed} adaptive={adaptive}: engine != reference"
+        assert_no_leaks(ctx)
+
+
+def _make_adaptive_ab_test(backend, columnar):
+    @given(seed=st.integers(min_value=0, max_value=10**9))
+    @settings(max_examples=25, deadline=None)
+    def test(seed):
+        run_adaptive_ab_query(seed, backend, columnar)
+    test.__name__ = (f"test_random_df_adaptive_ab_{backend}_"
+                     f"{'columnar' if columnar else 'pickle'}")
+    test.__qualname__ = test.__name__
+    return test
+
+
+for _cell in [(b, c) for b in ("sqs", "s3") for c in (True, False)]:
+    _cell_test = _make_adaptive_ab_test(*_cell)
     globals()[_cell_test.__name__] = _cell_test
 del _cell, _cell_test
 

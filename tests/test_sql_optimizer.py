@@ -29,8 +29,9 @@ CSV_ROW = "2015-01-02 03:04:00,2015-01-02 04:04:00,-74.0,40.7,1.5,credit,1.25,7.
 
 def _ctx(**kw):
     # goldens pin the "auto" transport choice; keep them independent of
-    # the CI matrix's FLINT_SHUFFLE_BACKEND env default
+    # the CI matrix's FLINT_SHUFFLE_BACKEND / FLINT_ADAPTIVE env defaults
     kw.setdefault("shuffle_backend", "auto")
+    kw.setdefault("adaptive", True)
     ctx = FlintContext("flint", FlintConfig(concurrency=4, **kw))
     ctx.upload("taxi.csv", (CSV_ROW * 50).encode())
     return ctx
@@ -198,8 +199,9 @@ def test_transformations_after_final_operators_raise():
           .toDF([("k", "int"), ("v", "int")]))
     with pytest.raises(ValueError, match="final"):
         df.limit(1).select("k")
-    with pytest.raises(ValueError, match="final"):
-        df.orderBy("k").where(col("k") > lit(0))
+    # orderBy is NOT final anymore: it composes, and under adaptive the
+    # mid-tree Sort lowers as a distributed range-partitioned sort
+    assert df.orderBy("k").where(col("k") > lit(0)).collect() == [(1, 2)]
 
 
 # --------------------------------------------------- transport choice
@@ -238,8 +240,8 @@ def test_api_validation_errors():
         df.select(col("k") + lit(1))
     with pytest.raises(ValueError, match="duplicate"):
         df.groupBy("k").agg(sum_(col("v")), sum_(col("v")))
-    with pytest.raises(ValueError, match="inner"):
-        df.join(df, on="k", how="left")
+    with pytest.raises(ValueError, match="inner/left/right/outer"):
+        df.join(df, on="k", how="cross")
     other = (ctx.parallelize([(1, 2)], 2)
              .toDF([("k", "int"), ("v", "int")]))
     with pytest.raises(ValueError, match="share non-key"):

@@ -158,7 +158,12 @@ def test_consumer_speculation_no_longer_splits_queue(pipelined):
                        FlintConfig(concurrency=8, pipeline_stages=pipelined,
                                    speculation_factor=2.0,
                                    speculation_min_done=2,
-                                   visibility_timeout_s=0.5),
+                                   visibility_timeout_s=0.5,
+                                   # adaptive coalescing would fold these
+                                   # deliberately tiny reduce partitions
+                                   # into one task — this test needs the
+                                   # full 6 to race a speculative twin
+                                   coalesce_min_bytes=0),
                        fault_plan={(1, 0): {"straggle_s": 0.8}})
     assert wordcount(ctx, nparts=4, red_parts=6) == EXPECTED
     reduce_stats = ctx.last_scheduler.stage_stats[-1]
