@@ -70,9 +70,19 @@
     executes as a distributed range-partitioned sort (no driver ops,
     >1 sort task), and zero leaks. Emits ``BENCH_9.json``.
 
+11. STREAMING A/B (docs/streaming.md): a windowed per-payment-type tip
+    aggregation streamed micro-batch-by-micro-batch from a tailed
+    object prefix — with a driver kill/resume from checkpoint in the
+    middle and one deliberately bursty window — vs the equivalent batch
+    query over the full data. Hard gates: the finalized streamed
+    windows EXACTLY match the batch query, the per-window cost model
+    picks BOTH transports (SQS on quiet windows, S3 on the burst), and
+    zero leaked keys/queues/checkpoints/staged batches. Emits
+    ``BENCH_10.json``.
+
 ``--quick`` runs a reduced-size pass of (1), (2), (5), (6), (7), (8),
-(9) and (10) with hard assertions — the CI smoke gate for transport
-regressions.
+(9), (10) and (11) with hard assertions — the CI smoke gate for
+transport regressions.
 """
 
 from __future__ import annotations
@@ -85,6 +95,7 @@ import time
 from repro.core import FaultPlan, FlintConfig, FlintContext
 from repro.data.synthetic import taxi_csv
 from repro.sql import Schema, col, count_, lit, sum_
+from repro.streaming import S3PrefixTailer, read_stream
 
 SQS_OP_LATENCY = 0.010
 S3_PUT_LATENCY = 0.030
@@ -94,7 +105,7 @@ S3_LIST_LATENCY = 0.050
 N_ROWS = int(os.environ.get("TAXI_ROWS", "40000"))
 
 TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/",
-                      "_broadcast/")
+                      "_broadcast/", "_stream/")
 
 
 def groupby_query(ctx):
@@ -882,6 +893,94 @@ def run_adaptive_ab(rows=None):
     return out, True
 
 
+#: the burst window's row count — sized so its observed volume crosses
+#: the SQS->S3 crossover of core.costs.pick_shuffle_transport at the
+#: streaming query's 2 shuffle partitions (~4 MB effective)
+STREAM_BURST_ROWS = 150_000
+
+
+def _stream_query(ctx, src, name):
+    return (read_stream(ctx, src)
+            .withColumn("ts", col("pickup").substr(12, 2).cast("int"))
+            .withColumn("tip_cents",
+                        (col("tip") * lit(100.0)).cast("int"))
+            .window("ts", 4)
+            .groupBy("payment_type")
+            .agg(sum_(col("tip_cents")).alias("tips"),
+                 count_().alias("n"), numPartitions=2)
+            # hours arrive in random order within every tailed object, so
+            # windows may only finalize at drain: lateness spans the day
+            .start(name, batch_size=1, allowed_lateness=24))
+
+
+def run_streaming_ab(rows=None):
+    """Streaming vs batch A/B (docs/streaming.md). The streamed taxi
+    windowed groupBy — killed after two micro-batches and resumed from
+    its ``_stream/`` checkpoint — must produce finalized windows
+    IDENTICAL to the equivalent batch query over the full prefix, the
+    per-window cost model must pick SQS on the quiet windows and S3 on
+    the burst, and nothing may leak. Returns (rows, all-gates-ok)."""
+    n = rows or N_ROWS
+    ctx = FlintContext("flint",
+                       FlintConfig(concurrency=8, flush_records=2000))
+    # 5 quiet objects + one burst object, tailed in upload order
+    chunks = [taxi_csv(max(200, n // 8), seed=100 + i) for i in range(3)]
+    chunks.append(taxi_csv(STREAM_BURST_ROWS, seed=777))
+    chunks += [taxi_csv(max(200, n // 8), seed=200 + i) for i in range(2)]
+    for i, data in enumerate(chunks):
+        ctx.store.put(f"taxi_stream/{i:04d}.csv", data)
+    ctx.upload("taxi.csv", b"".join(chunks))
+
+    src = S3PrefixTailer(ctx.store, "taxi_stream/", TAXI_SCHEMA)
+    src.seal()
+    t0 = time.monotonic()
+    q1 = _stream_query(ctx, src, "bench-stream")
+    q1.step()
+    q1.step()
+    q1.stop()  # driver killed mid-stream ...
+    q2 = _stream_query(ctx, src, "bench-stream")  # ... and resumed
+    resumed_at = q2.batch
+    streamed = q2.run()
+    stream_wall = time.monotonic() - t0
+    stats = q2.stats()
+    q1.cleanup()
+    q2.cleanup()
+
+    t0 = time.monotonic()
+    batch = (ctx.read_csv("taxi.csv", TAXI_SCHEMA, 8)
+             .withColumn("ts", col("pickup").substr(12, 2).cast("int"))
+             .withColumn("tip_cents",
+                         (col("tip") * lit(100.0)).cast("int"))
+             .withWindow("ts", 4)
+             .groupBy("window_start", "payment_type")
+             .agg(sum_(col("tip_cents")).alias("tips"),
+                  count_().alias("n"))
+             .collect())
+    batch_wall = time.monotonic() - t0
+    batch_rows = sorted((ws, ws + 4, k, t, cnt)
+                        for ws, k, t, cnt in batch)
+
+    assert streamed == batch_rows, \
+        "streamed finalized windows != batch query result"
+    assert resumed_at == 2, \
+        f"driver did not resume from the checkpoint (batch {resumed_at})"
+    picked = set(stats["transports"])
+    assert picked == {"sqs", "s3"}, \
+        f"cost model did not exercise both transports: {stats['transports']}"
+    staged = ctx.store.list("_collections/")
+    assert not staged, f"staged micro-batch data leaked: {staged[:5]}"
+    ctx.store.delete_prefix("taxi_stream/")
+    assert_no_leaks(ctx)
+    out = [{"leg": "stream", "wall_s": round(stream_wall, 4),
+            "batches": stats["batches"],
+            "transports": stats["transports"],
+            "late_dropped": stats["late_dropped"],
+            "windows": len(streamed), "resumed_at_batch": resumed_at},
+           {"leg": "batch", "wall_s": round(batch_wall, 4),
+            "windows": len(batch_rows)}]
+    return out, True
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
     quick = "--quick" in argv
@@ -953,6 +1052,19 @@ def main(argv=None):
         json.dump({"adaptive_ab": adaptive_rows}, f, indent=2)
         f.write("\n")
 
+    stream_rows, stream_ok = run_streaming_ab(rows)
+    print("leg,wall_s,windows,batches,transports")
+    for r in stream_rows:
+        print(f"{r['leg']},{r['wall_s']},{r['windows']},"
+              f"{r.get('batches', '')},"
+              f"{'|'.join(r.get('transports', []))}")
+    print(f"# streaming gates passed: {stream_ok}")
+    bench_path = os.path.join(os.path.dirname(__file__), os.pardir,
+                              "BENCH_10.json")
+    with open(os.path.abspath(bench_path), "w") as f:
+        json.dump({"streaming_ab": stream_rows}, f, indent=2)
+        f.write("\n")
+
     # hard gates — make transport regressions fail loudly (CI --quick)
     assert agreement, "transports disagree on query results"
     assert col_identical, "columnar framing changed query results"
@@ -968,6 +1080,7 @@ def main(argv=None):
         "chaos runs differ from the fault-free reference"
     assert service_ok, "multi-tenant service gates failed"
     assert adaptive_ok, "adaptive execution gates failed"
+    assert stream_ok, "streaming gates failed"
     if quick:
         print("# quick smoke passed")
         return ab, agreement

@@ -16,10 +16,15 @@ SQSSim reproduces what matters for Flint's correctness story:
     reappear for its retry (paper §III/§VI: "retry with the same
     identity"), and two competing drains merely race on acks instead of
     destructively splitting a queue;
-  * two message kinds: "data" (packed record batches) and "eos" — the
+  * three message kinds: "data" (packed record batches), "eos" — the
     per-producer end-of-stream control message that lets consumers start
-    draining BEFORE their producers finish (pipelined stage execution).
-    An EOS message carries the producer's total sequence count in ``seq``;
+    draining BEFORE their producers finish (pipelined stage execution);
+    an EOS message carries the producer's total sequence count in ``seq``
+    — and "wmark", the streaming generalization of EOS: where EOS closes
+    a finite stream at a plan-time quorum, a watermark message closes an
+    event-time WINDOW of an unbounded stream, carrying the max event
+    time a producer (micro-batch) has observed (repro.streaming,
+    docs/streaming.md);
   * a condition variable on arrival, so consumers block instead of
     sleep-spinning while their producers are still computing.
 
@@ -71,6 +76,25 @@ def eos_message(src: str, total: int) -> Message:
     """End-of-stream control message: ``total`` is the number of data
     messages (sequence ids 0..total-1) this producer sent to the queue."""
     return Message(b"", total, src, kind="eos")
+
+
+def watermark_message(src: str, ts: float, batch: int = 0) -> Message:
+    """Event-time watermark control message — the streaming sibling of
+    ``eos_message``. ``src`` identifies the emitting micro-batch/source,
+    ``ts`` is the maximum event time it has observed (packed in ``body``,
+    read back with ``watermark_ts``), ``batch`` rides in ``seq``. The
+    micro-batch driver folds these monotonically and closes every window
+    whose end the folded watermark has passed (docs/streaming.md); a
+    drained finite stream is signalled with ``ts=float("inf")``, which
+    degenerates to EOS — every window closes."""
+    return Message(struct.pack("<d", float(ts)), batch, src, kind="wmark")
+
+
+def watermark_ts(msg: Message) -> float:
+    """The event-time carried by a ``watermark_message``."""
+    if msg.kind != "wmark":
+        raise ValueError(f"not a watermark message (kind={msg.kind!r})")
+    return struct.unpack("<d", msg.body)[0]
 
 
 class _QueueState:

@@ -78,6 +78,13 @@ from repro.core.shuffle import TransportSet, pack_batch, unpack_batch
 #: never outliving the query)
 GC_PREFIXES = ("_spill/", "_payload/", "_result/", "_broadcast/")
 
+#: streaming checkpoints (offsets + window state, repro.streaming) live
+#: under this prefix. Deliberately NOT in GC_PREFIXES: a streaming query
+#: runs MANY jobs (one per micro-batch) and its checkpoints must outlive
+#: each of them — the query's own cleanup()/retention sweeps the prefix,
+#: and the service close()/leak_report() treat anything left as a leak
+STREAM_PREFIX = "_stream/"
+
 #: attempt number used for lineage-recovery replays: far past any real
 #: retry count, so targeted first-attempt faults (straggle_s,
 #: fail_after_records, probabilistic invocation timeouts) don't re-fire —

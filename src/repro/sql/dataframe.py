@@ -127,6 +127,18 @@ class DataFrame:
 
     filter = where
 
+    def withWindow(self, ts_col: str, size: int, slide: int | None = None,
+                   name: str = "window_start") -> "DataFrame":
+        """Assign each row an event-time window PANE start column
+        (``ts - ts % slide``; tumbling when slide is omitted). The same
+        node drives the streaming engine's windowed aggregation
+        (repro.streaming, docs/streaming.md) — a batch
+        ``withWindow(...).groupBy(name, ...)`` over the full data is the
+        reference query a streamed run must reproduce."""
+        self._require_open("withWindow")
+        return self._derive(P.Window(self.plan, ts_col, size, slide,
+                                     name))
+
     def groupBy(self, *keys) -> GroupedData:
         self._require_open("groupBy")
         if not keys:

@@ -20,6 +20,17 @@ boolean operators, ``substr``, ``cast``, ``udf``) that know three things:
 the lowering maps those over RDD partitions, and core.serde ships them to
 executors like any other task function (closures over lists of compiled
 sub-expressions are why serde walks containers).
+
+NULL semantics (SQL three-valued logic): outer joins pad unmatched rows
+with None, so every operator here treats None as SQL NULL — arithmetic,
+comparisons, substr and cast return None when an operand is None, and
+``and``/``or`` follow the three-valued truth tables (False AND x is
+False, True OR x is True, anything else involving NULL is NULL). A
+Filter drops rows whose predicate evaluates to NULL, same as False. The
+vectorized kernels keep row/vector parity by falling back to these row
+closures whenever a batch carries None (repro.sql.vectorized). Udf is
+the exception: user functions see the raw None and apply their own
+semantics.
 """
 
 from __future__ import annotations
@@ -322,12 +333,37 @@ class BinOp(Expr):
             # SHORT-CIRCUIT, not operator.and_: the optimizer merges
             # sequential filters into one conjunction, and the later
             # guard must never evaluate on rows the earlier one excludes
-            # (e.g. `n != 0` guarding `100 / n`)
-            return lambda row: lf(row) and rf(row)
+            # (e.g. `n != 0` guarding `100 / n`). Three-valued: a False
+            # side wins without looking at the other; NULL otherwise
+            # taints the result unless the other side is False.
+            def and_(row):
+                a = lf(row)
+                if a is not None and not a:
+                    return False
+                b = rf(row)
+                if b is not None and not b:
+                    return False
+                return None if a is None or b is None else True
+            return and_
         if self.op == "or":
-            return lambda row: lf(row) or rf(row)
+            def or_(row):
+                a = lf(row)
+                if a is not None and a:
+                    return True
+                b = rf(row)
+                if b is not None and b:
+                    return True
+                return None if a is None or b is None else False
+            return or_
         fn = _OPS[self.op]
-        return lambda row: fn(lf(row), rf(row))
+
+        def apply(row):
+            a = lf(row)
+            if a is None:
+                return None
+            b = rf(row)
+            return None if b is None else fn(a, b)
+        return apply
 
     def substitute(self, mapping):
         return BinOp(self.op, self.left.substitute(mapping),
@@ -351,7 +387,11 @@ class Not(Expr):
 
     def bind(self, schema):
         f = self.child.bind(schema)
-        return lambda row: not f(row)
+
+        def not_(row):
+            v = f(row)
+            return None if v is None else not v
+        return not_
 
     def substitute(self, mapping):
         return Not(self.child.substitute(mapping))
@@ -384,7 +424,11 @@ class Substr(Expr):
         f = self.child.bind(schema)
         lo = self.start - 1
         hi = lo + self.length
-        return lambda row: f(row)[lo:hi]
+
+        def substr(row):
+            s = f(row)
+            return None if s is None else s[lo:hi]
+        return substr
 
     def substitute(self, mapping):
         return Substr(self.child.substitute(mapping), self.start,
@@ -411,7 +455,11 @@ class Cast(Expr):
     def bind(self, schema):
         f = self.child.bind(schema)
         caster = _RUNTIME_CASTS[self.to]
-        return lambda row: caster(f(row))
+
+        def cast(row):
+            v = f(row)
+            return None if v is None else caster(v)
+        return cast
 
     def substitute(self, mapping):
         return Cast(self.child.substitute(mapping), self.to)

@@ -36,7 +36,8 @@ from repro.core import costs
 from repro.core.dag import estimate_lineage_bytes
 from repro.sql.expr import (Col, Lit, join_conjuncts, split_conjuncts)
 from repro.sql.plan import (Aggregate, Cached, Filter, Join, Limit, Plan,
-                            Project, RddScan, Scan, Sort, explain_str)
+                            Project, RddScan, Scan, Sort, Window,
+                            explain_str)
 
 #: map-side combine ships partially-merged values; assume it halves bytes
 PARTIAL_COMBINE_FACTOR = 0.5
@@ -100,7 +101,11 @@ def _rewrite(node: Plan) -> Plan:
     node = node.with_children([_rewrite(c) for c in node.children()])
     if isinstance(node, Filter):
         return _rewrite_filter(node)
-    if isinstance(node, Project) and isinstance(node.child, Project):
+    if (isinstance(node, Project) and isinstance(node.child, Project)
+            and not isinstance(node, Window)
+            and not isinstance(node.child, Window)):
+        # Window is a Project structurally but keeps its identity —
+        # merging would dissolve the window spec out of the plan
         inner = node.child
         if (all(e.deterministic for _, e in inner.cols)
                 and _inline_safe([e for _, e in node.cols], inner.cols)):
@@ -125,6 +130,10 @@ def _rewrite_filter(node: Filter) -> Plan:
         mapping = {n: e for n, e in child.cols}
         sub = node.pred.substitute(mapping)
         if sub.deterministic:
+            if isinstance(child, Window):
+                # push below the window, keep the Window node on top
+                # (the pane column substitutes to its defining arithmetic)
+                return child.with_children([Filter(child.child, sub)])
             return Project(Filter(child.child, sub), child.cols)
         return node
     if isinstance(child, Join):
@@ -223,6 +232,16 @@ def _prune(node: Plan, required: list) -> Plan:
     if isinstance(node, RddScan):
         # the source RDD's rows are fixed; narrow immediately above it
         return _narrow(node, req)
+    if isinstance(node, Window):
+        # a Window passes every child column through; pruning the CHILD
+        # to what is needed above (plus the event-time column the pane
+        # derives from) narrows it, and rebuilding re-derives the
+        # passthrough list from the narrowed child schema
+        child_req = (req - {node.name}) | {node.ts_col}
+        child = _prune(node.child, _ordered(child_req,
+                                            node.child.schema()))
+        return Window(child, node.ts_col, node.size, node.slide,
+                      node.name)
     if isinstance(node, Project):
         cols = [(n, e) for n, e in node.cols if n in req]
         if not cols:

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 from typing import Iterable
 
-from repro.sql.expr import Col, Expr, Schema
+from repro.sql.expr import BinOp, Col, Expr, Lit, Schema
 
 
 class Plan:
@@ -143,6 +143,51 @@ class Project(Plan):
 
     def describe(self):
         return f"Project[{_fmt_named(self.cols)}]"
+
+
+class Window(Project):
+    """Event-time window (pane) assignment for tumbling/sliding windows
+    (docs/streaming.md). Structurally a Project — every input column
+    passes through plus one computed column ``name`` holding the PANE
+    start ``ts - ts % slide`` (plain expression arithmetic, so it
+    vectorizes and lowers like any Project). A tumbling window
+    (slide == size) is its own pane; a sliding window decomposes into
+    ``size/slide`` panes that the consumer (the streaming driver, or a
+    batch reference reduction) recombines per window — which is why
+    ``size % slide == 0`` is required. The optimizer treats it as a
+    Project for pushdown/pruning but preserves the node identity so
+    explain() shows the window spec."""
+
+    def __init__(self, child: Plan, ts_col: str, size: int,
+                 slide: int | None = None, name: str = "window_start"):
+        size = int(size)
+        slide = size if slide is None else int(slide)
+        if size <= 0 or slide <= 0:
+            raise ValueError(f"window size/slide must be positive "
+                             f"(got {size}/{slide})")
+        if size % slide != 0:
+            raise ValueError(f"window size {size} must be a multiple of "
+                             f"slide {slide} (panes recombine exactly)")
+        base = child.schema()
+        if base.dtype_of(ts_col) != "int":
+            raise TypeError(f"window over {ts_col!r} needs an int "
+                            f"event-time column, got "
+                            f"{base.dtype_of(ts_col)!r}")
+        pane = BinOp("-", Col(ts_col), BinOp("%", Col(ts_col), Lit(slide)))
+        cols = [(n, Col(n)) for n in base.names] + [(name, pane)]
+        super().__init__(child, cols)
+        self.ts_col = ts_col
+        self.size = size
+        self.slide = slide
+        self.name = name
+
+    def with_children(self, kids):
+        return Window(kids[0], self.ts_col, self.size, self.slide,
+                      self.name)
+
+    def describe(self):
+        return (f"Window[{self.name}:=pane({self.ts_col}), "
+                f"size={self.size}, slide={self.slide}]")
 
 
 class Filter(Plan):

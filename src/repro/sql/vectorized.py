@@ -236,11 +236,18 @@ def _compile_binop(expr, schema):
     if lt == rt == "str":
         cmp_py = pyop[expr.op]
 
+        def cmp_nn(x, y):
+            # None (NULL from outer-join padding) must yield NULL, but
+            # Python's ==/!= on None return a bool — punt to row closures
+            if x is None or y is None:
+                raise VectorFallback("NULL in str comparison")
+            return cmp_py(x, y)
+
         def f_strcmp(cols, n):
             a, b = lf(cols, n), rf(cols, n)
             if _is_scalar(a) and _is_scalar(b):
                 return cmp_py(a, b)
-            return np.fromiter((cmp_py(x, y) for x, y in
+            return np.fromiter((cmp_nn(x, y) for x, y in
                                 zip(_elems(a, n), _elems(b, n))),
                                dtype=np.bool_, count=n)
         return f_strcmp
@@ -259,7 +266,11 @@ def _compile_cast(expr, schema):
         if _is_scalar(v):
             return {"int": int, "float": float, "str": str, "bool": bool}[to](v)
         if to == src:
-            return v
+            return v  # passthrough keeps None as NULL, same as the row path
+        if src == "str" and any(x is None for x in v):
+            # str(None)/bool(None) would produce a value where the row
+            # path now yields NULL — only arrays-free columns carry None
+            raise VectorFallback("NULL in str column cast")
         if to == "int":
             if src == "float":
                 arr = np.asarray(v)

@@ -1,0 +1,18 @@
+"""Micro-batch streaming on the Flint shuffle substrate.
+
+``read_stream(ctx, source)`` opens a streaming DataFrame over an
+unbounded source; ``window().groupBy().agg().start()`` runs it as a
+``StreamingQuery`` — each micro-batch an ordinary optimized job, with
+driver-side watermarks, exactly-once ``_stream/`` checkpoints, and a
+per-window SQS-vs-S3 transport choice. See docs/streaming.md.
+"""
+
+from repro.streaming.query import (PANE_COL, StreamFrame, StreamingQuery,
+                                   read_stream)
+from repro.streaming.sources import (EventGenerator, S3PrefixTailer,
+                                     ride_faults)
+from repro.streaming.windows import WindowSpec, WindowState
+
+__all__ = ["read_stream", "StreamFrame", "StreamingQuery", "PANE_COL",
+           "EventGenerator", "S3PrefixTailer", "ride_faults",
+           "WindowSpec", "WindowState"]

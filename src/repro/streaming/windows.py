@@ -1,0 +1,141 @@
+"""Event-time windows, panes, and the driver-side watermark state.
+
+The engine assigns every row a PANE — the ``slide``-wide bucket
+``ts - ts % slide`` computed by the ``Window`` plan node inside each
+micro-batch's distributed aggregation. A tumbling window (slide == size)
+IS its pane; a sliding window of ``size = k * slide`` is the
+recombination of ``k`` consecutive panes, so per-batch shuffles only
+ever aggregate by pane and the cheap cross-pane merge happens here, on
+the driver, over already-reduced slot partials.
+
+``WindowState`` is that merge plus the watermark protocol
+(docs/streaming.md):
+
+  * ``merge`` folds one batch's (pane, key) slot partials into the
+    running pane state — slot-wise, with the same associative combiners
+    the map-side combine uses (sum/min/max; count and avg decompose
+    into sums, see repro.streaming.query);
+  * ``advance`` folds a watermark (the max event time any batch has
+    observed, carried by ``core.queues.watermark_message``) and closes
+    every window whose ``end + allowed_lateness`` the watermark has
+    passed, emitting finalized rows in (window, key) order. Closing is
+    strictly left-to-right (``frontier``), so allowed-lateness UPDATES
+    land in still-open panes while contributions arriving after their
+    last covering window closed are DROPPED AND COUNTED
+    (``late_dropped``);
+  * a drained finite stream advances with ``float("inf")`` — the
+    degenerate watermark that, like the batch engine's plan-time EOS
+    quorum, closes everything that remains.
+
+The whole object snapshots/restores through the ``_stream/`` checkpoint
+(plain picklable dicts), which is what makes kill-and-resume
+exactly-once: state and source offsets commit atomically.
+"""
+
+from __future__ import annotations
+
+
+class WindowSpec:
+    """Validated tumbling/sliding window definition over an int
+    event-time column. Mirrors the checks of the ``Window`` plan node
+    (repro.sql.plan) — the two always travel together."""
+
+    __slots__ = ("ts_col", "size", "slide")
+
+    def __init__(self, ts_col: str, size: int, slide: int | None = None):
+        size = int(size)
+        slide = size if slide is None else int(slide)
+        if size <= 0 or slide <= 0:
+            raise ValueError(f"window size/slide must be positive "
+                             f"(got {size}/{slide})")
+        if size % slide != 0:
+            raise ValueError(f"window size {size} must be a multiple of "
+                             f"slide {slide}")
+        self.ts_col = ts_col
+        self.size = size
+        self.slide = slide
+
+    def windows_of(self, pane: int) -> range:
+        """Window starts covering a pane, earliest first."""
+        return range(pane - self.size + self.slide, pane + 1, self.slide)
+
+
+class WindowState:
+    """Cross-batch pane partials + watermark frontier (driver-side)."""
+
+    def __init__(self, spec: WindowSpec, merges: list,
+                 finalize, allowed_lateness: int = 0):
+        if allowed_lateness < 0:
+            raise ValueError("allowed_lateness must be >= 0")
+        self.spec = spec
+        self.merges = merges        # one binary combiner per slot
+        self.finalize = finalize    # slot values -> output agg tuple
+        self.lateness = allowed_lateness
+        self.panes: dict = {}       # pane start -> {key tuple -> [slots]}
+        self.watermark = float("-inf")
+        self.frontier: int | None = None  # earliest still-open window
+        self.late_dropped = 0       # events past their last open window
+
+    # ------------------------------------------------------------- updates
+    def merge(self, pane: int, key: tuple, slots: list, nrows: int) -> bool:
+        """Fold one batch's partial for (pane, key); returns False when
+        the contribution arrived after every window covering the pane was
+        finalized (drop-and-count late data)."""
+        if self.frontier is not None and pane < self.frontier:
+            self.late_dropped += nrows
+            return False
+        groups = self.panes.setdefault(pane, {})
+        cur = groups.get(key)
+        if cur is None:
+            groups[key] = list(slots)
+        else:
+            groups[key] = [m(a, b) for m, a, b in
+                           zip(self.merges, cur, slots)]
+        return True
+
+    def advance(self, watermark: float | None = None) -> list:
+        """Fold a watermark and emit every window it closes."""
+        if watermark is not None:
+            self.watermark = max(self.watermark, watermark)
+        cutoff = self.watermark - self.lateness
+        out: list = []
+        while self.panes:
+            lo = min(self.panes)
+            start = lo - self.spec.size + self.spec.slide
+            if self.frontier is not None:
+                start = max(start, self.frontier)
+            if start + self.spec.size > cutoff:
+                break
+            out.extend(self._close(start))
+            self.frontier = start + self.spec.slide
+            # a pane's LAST covering window starts at the pane itself —
+            # panes behind the frontier can never be read again
+            for p in [p for p in self.panes if p < self.frontier]:
+                del self.panes[p]
+        return out
+
+    def _close(self, start: int) -> list:
+        groups: dict = {}
+        for p in range(start, start + self.spec.size, self.spec.slide):
+            for key, slots in self.panes.get(p, {}).items():
+                cur = groups.get(key)
+                if cur is None:
+                    groups[key] = list(slots)
+                else:
+                    groups[key] = [m(a, b) for m, a, b in
+                                   zip(self.merges, cur, slots)]
+        end = start + self.spec.size
+        return [(start, end) + key + tuple(self.finalize(slots))
+                for key, slots in sorted(groups.items())]
+
+    # --------------------------------------------------------- checkpoints
+    def snapshot(self) -> dict:
+        return {"panes": {p: dict(g) for p, g in self.panes.items()},
+                "watermark": self.watermark, "frontier": self.frontier,
+                "late_dropped": self.late_dropped}
+
+    def restore(self, snap: dict) -> None:
+        self.panes = {p: dict(g) for p, g in snap["panes"].items()}
+        self.watermark = snap["watermark"]
+        self.frontier = snap["frontier"]
+        self.late_dropped = snap["late_dropped"]

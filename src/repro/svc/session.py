@@ -48,7 +48,8 @@ from repro.core.executors import FlintConfig
 from repro.core.faults import ConcurrencyGauge, FaultInjector, FaultPlan
 from repro.core.queues import ObjectStoreSim
 from repro.core.retry import RetryBudget, TransientServiceError
-from repro.core.scheduler import GC_PREFIXES, FlintScheduler, StageFailure
+from repro.core.scheduler import (GC_PREFIXES, STREAM_PREFIX,
+                                  FlintScheduler, StageFailure)
 from repro.svc.admission import AdmissionController
 from repro.svc.fairshare import FairSharePool
 from repro.svc.share import ShareRegistry, SharedCache
@@ -156,6 +157,11 @@ class _ServiceContext(FlintContext):
         # sessions, and an unsynchronized second action would race the
         # per-job state below
         self._action_lock = threading.Lock()
+        # a streaming query holds ONE admission slot for its whole
+        # lifetime (stream_begin/stream_end); per-batch actions then skip
+        # re-admission so an admitted stream cannot deadlock the gate or
+        # be re-queued against itself between micro-batches
+        self._stream_admitted = False
 
     # ------------------------------------------------------ service hooks
     def _make_scheduler(self):
@@ -202,12 +208,38 @@ class _ServiceContext(FlintContext):
                     tokens.add(task.input.token)
         return tokens
 
+    # ------------------------------------------------- streaming admission
+    def stream_begin(self):
+        """Admit a long-running streaming query ONCE: the admission slot
+        is held until ``stream_end`` so the query counts against
+        max_running for its whole life, while each micro-batch still
+        leases fair-share invocation slots and re-checks the tenant
+        quota (``stream_quota_check``) between batches."""
+        if self._stream_admitted:
+            raise RuntimeError("session already runs a streaming query")
+        self.service.admission.admit(self.tenant.name,
+                                     quota_check=self.tenant.quota_error)
+        self._stream_admitted = True
+
+    def stream_end(self):
+        if self._stream_admitted:
+            self._stream_admitted = False
+            self.service.admission.release()
+
+    def stream_quota_check(self):
+        """Between-batch tenant quota enforcement: raises the same
+        structured TenantQuotaExceeded StageFailure as the mid-job
+        guard."""
+        self.tenant.cost_guard()
+
     def run_action(self, rdd, action, save_prefix=None, limit=None):
         svc = self.service
         tenant = self.tenant
         with self._action_lock:
-            svc.admission.admit(tenant.name,
-                                quota_check=tenant.quota_error)
+            admitted = not self._stream_admitted
+            if admitted:
+                svc.admission.admit(tenant.name,
+                                    quota_check=tenant.quota_error)
             try:
                 job = svc._new_job(tenant)
                 self._job = job
@@ -235,7 +267,8 @@ class _ServiceContext(FlintContext):
                     job.pinned.clear()
                     self._job = None
             finally:
-                svc.admission.release()
+                if admitted:
+                    svc.admission.release()
 
 
 class Session:
@@ -262,6 +295,14 @@ class Session:
 
     def upload(self, key, data: bytes):
         self.service.upload(key, data)
+
+    def read_stream(self, source):
+        """Open a streaming frame over an unbounded source; the query it
+        starts admits as ONE long-running job (stream_begin) with
+        per-tenant quota re-checked between micro-batches
+        (docs/streaming.md)."""
+        from repro.streaming import read_stream
+        return read_stream(self.ctx, source)
 
     def cost_report(self) -> dict:
         """THIS tenant's bill (the child ledger): shared with the
@@ -398,7 +439,7 @@ class FlintService:
         """Keys still present under every transient prefix — all zero
         after ``close()``. Reads the sim's key set directly: leak
         accounting must not itself bill requests or draw chaos faults."""
-        prefixes = GC_PREFIXES + ("_exchange/",)
+        prefixes = GC_PREFIXES + ("_exchange/", STREAM_PREFIX)
         keys = list(self.store._objects)
         return {p: sum(k.startswith(p) for k in keys) for p in prefixes}
 
@@ -413,7 +454,7 @@ class FlintService:
         self.closed = True
         self.store.faults = None
         report = {"_exchange/": self.share.sweep()}
-        for prefix in GC_PREFIXES + ("_exchange/",):
+        for prefix in GC_PREFIXES + ("_exchange/", STREAM_PREFIX):
             n = self.store.delete_prefix(prefix)
             if n:
                 report[prefix] = report.get(prefix, 0) + n

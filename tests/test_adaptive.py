@@ -22,7 +22,7 @@ from repro.sql.lower import lower
 ADD = operator.add
 
 TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/",
-                      "_broadcast/")
+                      "_broadcast/", "_stream/")
 
 
 def assert_no_leaks(ctx):

@@ -20,7 +20,7 @@ CHAOS_SEED = int(os.environ.get("FLINT_CHAOS_SEED", "0"))
 #: transient prefixes that must be empty once a job (even a failed one)
 #: has shut down — _cache/ is excluded: registered caches outlive jobs
 TRANSIENT_PREFIXES = ("_exchange/", "_spill/", "_payload/", "_result/",
-                      "_broadcast/")
+                      "_broadcast/", "_stream/")
 
 DATA = [(i % 7, i) for i in range(300)]
 EXPECTED = {}

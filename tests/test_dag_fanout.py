@@ -36,7 +36,7 @@ from repro.core.dag import CacheInput, ShuffleRead
 ADD = operator.add
 
 TRANSIENT_PREFIXES = ("_spill/", "_payload/", "_exchange/", "_result/",
-                      "_broadcast/")
+                      "_broadcast/", "_stream/")
 
 
 def assert_no_leaks(ctx):

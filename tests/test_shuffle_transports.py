@@ -349,7 +349,8 @@ def test_no_transient_keys_survive_query(backend):
                                             shuffle_backend=backend,
                                             flush_records=20))
     assert wordcount(ctx) == EXPECTED
-    for prefix in ("_spill/", "_payload/", "_exchange/", "_result/"):
+    for prefix in ("_spill/", "_payload/", "_exchange/", "_result/",
+                   "_stream/"):
         assert not ctx.store.list(prefix), f"leaked {prefix} keys"
     assert ctx.last_scheduler.sqs._queues == {}
 

@@ -421,10 +421,8 @@ def _chaos_job(ctx):
     pre-combined partials), one join whose map sides ship KVBatch
     columnar carriers, and one CHAINED multi-shuffle pipeline (two
     aggregations feeding a join — consumers that are themselves
-    producers). The chained shape used to be excluded for an s3 recovery
-    flake (timed-out consumer reopening only the shallowest lost input);
-    with lost-input recovery now expanding reopens deepest-first it is
-    part of the guaranteed chaos surface."""
+    producers — lost-input recovery expands reopens deepest-first, see
+    test_chained_multi_shuffle_recovers_deepest_lost_exchange)."""
     data = [(i % 7, i, float(i % 5)) for i in range(300)]
     df = (ctx.parallelize(data, 4)
           .toDF([("k", "int"), ("v", "int"), ("w", "float")]))
@@ -443,7 +441,8 @@ def _chaos_job(ctx):
     return agg, joined, chained
 
 
-TRANSIENT_PREFIXES = ("_exchange/", "_spill/", "_payload/", "_result/")
+TRANSIENT_PREFIXES = ("_exchange/", "_spill/", "_payload/", "_result/",
+                      "_stream/")
 
 
 @pytest.mark.parametrize("backend", ["sqs", "s3"])
@@ -464,3 +463,28 @@ def test_chaos_vectorized_sql_is_invisible(backend):
         leaked = [k for p in TRANSIENT_PREFIXES for k in ctx.store.list(p)]
         assert not leaked, leaked[:5]
         assert ctx.last_scheduler.sqs._queues == {}
+
+
+def test_chained_multi_shuffle_recovers_deepest_lost_exchange():
+    """Regression for the old s3 chained-shuffle flake: the FIRST
+    ``_exchange/`` object written — a pre-join aggregation's partials,
+    the deepest shuffle input of the pipeline — is acknowledged and then
+    lost. The middle stage is a consumer that is itself a producer;
+    recovery must reopen the DEEPEST lost input (not just the
+    shallowest) to reproduce the fault-free answer with no leaks."""
+    def chained(ctx):
+        df = (ctx.parallelize([(i % 7, i) for i in range(200)], 4)
+              .toDF([("k", "int"), ("v", "int")]))
+        right = (ctx.parallelize([(i % 7, float(i)) for i in range(50)], 4)
+                 .toDF([("k", "int"), ("b", "float")]))
+        return sorted(df.groupBy("k").agg(sum_(col("v")).alias("t"))
+                      .join(right.groupBy("k")
+                            .agg(count_().alias("m")),
+                            on="k", numPartitions=3).collect())
+    expected = chained(_chaos_ctx("s3", None))
+    plan = FaultPlan(seed=CHAOS_SEED + 4242, lose_keys=("_exchange/",))
+    ctx = _chaos_ctx("s3", plan)
+    assert chained(ctx) == expected
+    leaked = [k for p in TRANSIENT_PREFIXES for k in ctx.store.list(p)]
+    assert not leaked, leaked[:5]
+    assert ctx.last_scheduler.sqs._queues == {}
